@@ -1,0 +1,88 @@
+//! Streaming-serving demo: start the TCP server on a background-ish
+//! setup (executor on the main thread, connections in threads), drive
+//! it with a few concurrent clients, and print latency/throughput —
+//! the L3 serving loop end to end.
+//!
+//! Run: `cargo run --release --example serve_stream -- [--tokens 64]
+//!       [--clients 3] [--model psm_s5]`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use psm::coordinator::server;
+use psm::runtime::{ParamStore, Runtime};
+use psm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let tokens = args.usize_or("tokens", 64)?;
+    let clients = args.usize_or("clients", 3)?;
+    let model = args.str_or("model", "psm_s5");
+    let addr = "127.0.0.1:7433";
+
+    let rt = Runtime::new(&psm::runtime::default_artifacts_dir())?;
+    let params = ParamStore::init(&rt, &model, 42)?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Client threads: connect, request generations, measure.
+    let stop_clients = stop.clone();
+    let model_name = model.clone();
+    let driver = std::thread::spawn(move || {
+        // Wait for the listener.
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for cid in 0..clients {
+            let per_client = tokens / clients.max(1);
+            handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+                let stream = TcpStream::connect(addr)?;
+                let mut w = stream.try_clone()?;
+                let mut r = BufReader::new(stream);
+                let t = Instant::now();
+                writeln!(w, "GEN {per_client} 1 2 3 4")?;
+                let mut line = String::new();
+                r.read_line(&mut line)?;
+                anyhow::ensure!(line.starts_with("OK"),
+                                "client {cid}: bad reply {line:?}");
+                writeln!(w, "QUIT")?;
+                Ok(t.elapsed().as_secs_f64())
+            }));
+        }
+        let mut total = 0.0;
+        for h in handles {
+            match h.join().expect("client thread") {
+                Ok(s) => total += s,
+                Err(e) => eprintln!("client error: {e}"),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{clients} clients x {} tokens: wall {wall:.2}s, mean \
+             client latency {:.2}s, throughput {:.1} tok/s",
+            tokens / clients.max(1),
+            total / clients as f64,
+            tokens as f64 / wall
+        );
+        // Ask for stats then shut down.
+        if let Ok(stream) = TcpStream::connect(addr) {
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            let _ = writeln!(w, "STATS");
+            let mut line = String::new();
+            let _ = r.read_line(&mut line);
+            println!("server stats: {}", line.trim());
+            let _ = writeln!(w, "QUIT");
+        }
+        stop_clients.store(true, Ordering::Relaxed);
+        let _ = model_name;
+    });
+
+    // Executor owns the runtime on this thread; returns once stopped.
+    server::serve(&rt, &model, &params, addr, stop)?;
+    driver.join().expect("driver");
+    println!("serve_stream OK");
+    Ok(())
+}

@@ -1,0 +1,507 @@
+"""AOT compile path: lower every model entry point to HLO *text* plus a
+manifest.json the rust runtime consumes.
+
+Run once via `make artifacts` (no python on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Every lowered function takes a FLAT argument list (params flattened in
+tree_leaves order); manifest.json records, per artifact, the ordered
+input/output specs (name, dtype, shape) and per model the parameter
+layout, so the rust ParamStore can address parameters by name.
+
+Entry points per model kind:
+  psm   : init, fwd, train_step, train_block, enc, agg, inf  (serve B=1)
+  gpt   : init, fwd, fwd_long, train_step, train_block, decode_<bucket>
+  swt   : init, fwd, train_step, train_block
+  mamba : init, fwd, fwd_long, train_step, train_block, step
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import baselines as B
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """Single-output entries are emitted with a NON-tuple root
+    (return_tuple=False): PJRT then returns the bare array buffer, which
+    the rust coordinator can re-feed device-side with zero host copies —
+    the serving hot path depends on this."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32"}
+
+
+def _spec(name: str, aval) -> Dict[str, Any]:
+    return {
+        "name": name,
+        "dtype": _DTYPES[aval.dtype],
+        "shape": [int(s) for s in aval.shape],
+    }
+
+
+class Emitter:
+    """Lowers functions to HLO-text artifacts and accumulates the manifest."""
+
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.manifest: Dict[str, Any] = {"models": {}}
+        os.makedirs(outdir, exist_ok=True)
+
+    def model(self, name: str, kind: str, config: Dict[str, Any],
+              params: List[Tuple[str, Sequence[int]]]):
+        self.manifest["models"][name] = {
+            "kind": kind,
+            "config": config,
+            "params": [[n, list(s)] for n, s in params],
+            "artifacts": {},
+        }
+
+    def emit(self, model_name: str, entry: str, fn: Callable,
+             in_specs: List[Tuple[str, Any]]):
+        """Lower fn(*avals) and write <model>_<entry>.hlo.txt."""
+        avals = [a for _, a in in_specs]
+        # keep_unused: jit would otherwise prune parameters an entry does
+        # not read (e.g. `enc` uses 3 of 31), breaking the uniform
+        # params-first calling convention the rust runtime relies on.
+        lowered = jax.jit(fn, keep_unused=True).lower(*avals)
+        out_avals = jax.eval_shape(fn, *avals)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        flat_out = jax.tree_util.tree_leaves(out_avals)
+        tuple_output = len(flat_out) > 1
+        fname = f"{model_name}_{entry}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(to_hlo_text(lowered, return_tuple=tuple_output))
+        self.manifest["models"][model_name]["artifacts"][entry] = {
+            "file": fname,
+            "inputs": [_spec(n, a) for n, a in in_specs],
+            "outputs": [_spec(f"out{i}", a) for i, a in enumerate(flat_out)],
+            "tuple_output": tuple_output,
+        }
+        print(f"  wrote {fname}  ({len(in_specs)} in / {len(flat_out)} out)")
+
+    def finish(self):
+        path = os.path.join(self.outdir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+
+
+def _flat_io(params_tree):
+    """(treedef, flat avals, named specs) for a parameter pytree."""
+    flat, treedef = jax.tree_util.tree_flatten(params_tree)
+    named = jax.tree_util.tree_flatten_with_path(params_tree)[0]
+    names = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in named
+    ]
+    return treedef, flat, names
+
+
+def _aval(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind emission
+# ---------------------------------------------------------------------------
+
+
+def emit_psm(em: Emitter, name: str, cfg: M.PsmConfig, block_k: int = 8,
+             serve_batches: Sequence[int] = (1,)):
+    print(f"[psm] {name}: {cfg}")
+    params0 = jax.eval_shape(lambda: M.init_params(cfg, 0))
+    treedef, flat, names = _flat_io(params0)
+    em.model(name, "psm", dataclasses.asdict(cfg),
+             [(n, tuple(a.shape)) for n, a in zip(names, flat)])
+
+    bsz, n = cfg.batch, cfg.seq_len
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((bsz, n), i32)
+    lab = jax.ShapeDtypeStruct((bsz, n), i32)
+    msk = jax.ShapeDtypeStruct((bsz, n), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), i32)
+    step = jax.ShapeDtypeStruct((), i32)
+
+    p_specs = list(zip(names, flat))
+    m_specs = [("m/" + n, a) for n, a in p_specs]
+    v_specs = [("v/" + n, a) for n, a in p_specs]
+
+    def unflat(args, k):
+        return jax.tree_util.tree_unflatten(treedef, args[k : k + len(flat)])
+
+    # --- init: seed -> flat params
+    em.emit(name, "init",
+            lambda s: tuple(jax.tree_util.tree_leaves(M.init_params(cfg, s))),
+            [("seed", seed)])
+
+    # --- fwd: params + tokens -> logits
+    def fwd(*args):
+        p = unflat(args, 0)
+        return (M.forward(p, cfg, args[-1]),)
+
+    em.emit(name, "fwd", fwd, p_specs + [("tokens", tok)])
+
+    # --- train_step
+    def tstep(*args):
+        np_ = len(flat)
+        p = unflat(args, 0)
+        m = unflat(args, np_)
+        v = unflat(args, 2 * np_)
+        st, tokens, labels, mask = args[3 * np_:]
+        loss, p2, m2, v2, st2 = M.train_step(p, m, v, st, cfg, tokens,
+                                             labels, mask)
+        return (loss, *jax.tree_util.tree_leaves(p2),
+                *jax.tree_util.tree_leaves(m2),
+                *jax.tree_util.tree_leaves(v2), st2)
+
+    state_specs = p_specs + m_specs + v_specs + [("step", step)]
+    em.emit(name, "train_step", tstep,
+            state_specs + [("tokens", tok), ("labels", lab), ("mask", msk)])
+
+    # --- train_block: K steps under lax.scan (amortizes host round trips)
+    tokK = jax.ShapeDtypeStruct((block_k, bsz, n), i32)
+    labK = jax.ShapeDtypeStruct((block_k, bsz, n), i32)
+    mskK = jax.ShapeDtypeStruct((block_k, bsz, n), jnp.float32)
+
+    def tblock(*args):
+        np_ = len(flat)
+        p = unflat(args, 0)
+        m = unflat(args, np_)
+        v = unflat(args, 2 * np_)
+        st = args[3 * np_]
+        toks, labs, msks = args[3 * np_ + 1 :]
+
+        def body(carry, batch):
+            p, m, v, st = carry
+            t, l, mk = batch
+            loss, p, m, v, st = M.train_step(p, m, v, st, cfg, t, l, mk)
+            return (p, m, v, st), loss
+
+        (p, m, v, st), losses = jax.lax.scan(body, (p, m, v, st),
+                                             (toks, labs, msks))
+        return (losses, *jax.tree_util.tree_leaves(p),
+                *jax.tree_util.tree_leaves(m),
+                *jax.tree_util.tree_leaves(v), st)
+
+    em.emit(name, "train_block", tblock,
+            state_specs + [("tokens", tokK), ("labels", labK), ("mask", mskK)])
+
+    # --- serving entry points (params as leading args -> device buffers)
+    for sb in serve_batches:
+        sfx = "" if sb == 1 else f"_b{sb}"
+        ctok = jax.ShapeDtypeStruct((sb, cfg.chunk), i32)
+        state = jax.ShapeDtypeStruct((sb, cfg.chunk, cfg.d), jnp.float32)
+
+        def enc(*args):
+            p = unflat(args, 0)
+            return (M.enc_apply(p, cfg, args[-1]),)
+
+        def agg(*args):
+            p = unflat(args, 0)
+            return (M.agg_apply(p, cfg, args[-2], args[-1]),)
+
+        def inf(*args):
+            p = unflat(args, 0)
+            return (M.inf_apply(p, cfg, args[-2], args[-1]),)
+
+        em.emit(name, f"enc{sfx}", enc, p_specs + [("chunk_tokens", ctok)])
+        em.emit(name, f"agg{sfx}", agg,
+                p_specs + [("x_i", state), ("x_j", state)])
+        em.emit(name, f"inf{sfx}", inf,
+                p_specs + [("state", state), ("x_chunk", state)])
+
+
+def emit_gpt(em: Emitter, name: str, cfg: B.GptConfig, block_k: int = 8,
+             train_len: int | None = None,
+             decode_buckets: Sequence[int] = ()):
+    kind = "swt" if cfg.window > 0 else "gpt"
+    print(f"[{kind}] {name}: {cfg}")
+    params0 = jax.eval_shape(lambda: B.gpt_init(cfg, 0))
+    treedef, flat, names = _flat_io(params0)
+    em.model(name, kind, dataclasses.asdict(cfg),
+             [(n, tuple(a.shape)) for n, a in zip(names, flat)])
+
+    n_train = train_len or cfg.seq_len
+    bsz = cfg.batch
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((bsz, n_train), i32)
+    lab = jax.ShapeDtypeStruct((bsz, n_train), i32)
+    msk = jax.ShapeDtypeStruct((bsz, n_train), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), i32)
+    step = jax.ShapeDtypeStruct((), i32)
+    p_specs = list(zip(names, flat))
+    m_specs = [("m/" + n, a) for n, a in p_specs]
+    v_specs = [("v/" + n, a) for n, a in p_specs]
+
+    def unflat(args, k):
+        return jax.tree_util.tree_unflatten(treedef, args[k : k + len(flat)])
+
+    em.emit(name, "init",
+            lambda s: tuple(jax.tree_util.tree_leaves(B.gpt_init(cfg, s))),
+            [("seed", seed)])
+
+    def fwd(*args):
+        return (B.gpt_forward(unflat(args, 0), cfg, args[-1]),)
+
+    em.emit(name, "fwd", fwd, p_specs + [("tokens", tok)])
+    if n_train != cfg.seq_len:
+        tok_long = jax.ShapeDtypeStruct((bsz, cfg.seq_len), i32)
+        em.emit(name, "fwd_long", fwd, p_specs + [("tokens", tok_long)])
+
+    def tstep(*args):
+        np_ = len(flat)
+        p, m, v = unflat(args, 0), unflat(args, np_), unflat(args, 2 * np_)
+        st, tokens, labels, mask = args[3 * np_:]
+        loss, p2, m2, v2, st2 = B.gpt_train_step(p, m, v, st, cfg, tokens,
+                                                 labels, mask)
+        return (loss, *jax.tree_util.tree_leaves(p2),
+                *jax.tree_util.tree_leaves(m2),
+                *jax.tree_util.tree_leaves(v2), st2)
+
+    state_specs = p_specs + m_specs + v_specs + [("step", step)]
+    em.emit(name, "train_step", tstep,
+            state_specs + [("tokens", tok), ("labels", lab), ("mask", msk)])
+
+    tokK = jax.ShapeDtypeStruct((block_k, bsz, n_train), i32)
+    labK = jax.ShapeDtypeStruct((block_k, bsz, n_train), i32)
+    mskK = jax.ShapeDtypeStruct((block_k, bsz, n_train), jnp.float32)
+
+    def tblock(*args):
+        np_ = len(flat)
+        p, m, v = unflat(args, 0), unflat(args, np_), unflat(args, 2 * np_)
+        st = args[3 * np_]
+        toks, labs, msks = args[3 * np_ + 1 :]
+
+        def body(carry, batch):
+            p, m, v, st = carry
+            t, l, mk = batch
+            loss, p, m, v, st = B.gpt_train_step(p, m, v, st, cfg, t, l, mk)
+            return (p, m, v, st), loss
+
+        (p, m, v, st), losses = jax.lax.scan(body, (p, m, v, st),
+                                             (toks, labs, msks))
+        return (losses, *jax.tree_util.tree_leaves(p),
+                *jax.tree_util.tree_leaves(m),
+                *jax.tree_util.tree_leaves(v), st)
+
+    em.emit(name, "train_block", tblock,
+            state_specs + [("tokens", tokK), ("labels", labK), ("mask", mskK)])
+
+    # KV-cache decode steps at bucketed context sizes (Fig. 6).
+    for bucket in decode_buckets:
+        bc = dataclasses.replace(cfg, seq_len=bucket)
+        dh = cfg.d // cfg.heads
+        kv = jax.ShapeDtypeStruct(
+            (cfg.layers, 2, 1, cfg.heads, bucket, dh), jnp.float32)
+        tk = jax.ShapeDtypeStruct((1,), i32)
+        pos = jax.ShapeDtypeStruct((), i32)
+
+        def dstep(*args, _bc=bc):
+            p = unflat(args, 0)
+            kvc, token, position = args[-3:]
+            logits, nkv = B.gpt_decode_step(p, _bc, kvc, token, position)
+            return (logits, nkv)
+
+        em.emit(name, f"decode_{bucket}", dstep,
+                p_specs + [("kv_cache", kv), ("token", tk), ("pos", pos)])
+
+
+def emit_mamba(em: Emitter, name: str, cfg: B.MambaConfig, block_k: int = 8,
+               train_len: int | None = None, with_step: bool = True):
+    print(f"[mamba] {name}: {cfg}")
+    params0 = jax.eval_shape(lambda: B.mamba_init(cfg, 0))
+    treedef, flat, names = _flat_io(params0)
+    em.model(name, "mamba", dataclasses.asdict(cfg),
+             [(n, tuple(a.shape)) for n, a in zip(names, flat)])
+
+    n_train = train_len or cfg.seq_len
+    bsz = cfg.batch
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((bsz, n_train), i32)
+    lab = jax.ShapeDtypeStruct((bsz, n_train), i32)
+    msk = jax.ShapeDtypeStruct((bsz, n_train), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), i32)
+    step = jax.ShapeDtypeStruct((), i32)
+    p_specs = list(zip(names, flat))
+    m_specs = [("m/" + n, a) for n, a in p_specs]
+    v_specs = [("v/" + n, a) for n, a in p_specs]
+
+    def unflat(args, k):
+        return jax.tree_util.tree_unflatten(treedef, args[k : k + len(flat)])
+
+    em.emit(name, "init",
+            lambda s: tuple(jax.tree_util.tree_leaves(B.mamba_init(cfg, s))),
+            [("seed", seed)])
+
+    def fwd(*args):
+        return (B.mamba_forward(unflat(args, 0), cfg, args[-1]),)
+
+    em.emit(name, "fwd", fwd, p_specs + [("tokens", tok)])
+    if n_train != cfg.seq_len:
+        tok_long = jax.ShapeDtypeStruct((bsz, cfg.seq_len), i32)
+        em.emit(name, "fwd_long", fwd, p_specs + [("tokens", tok_long)])
+
+    def tstep(*args):
+        np_ = len(flat)
+        p, m, v = unflat(args, 0), unflat(args, np_), unflat(args, 2 * np_)
+        st, tokens, labels, mask = args[3 * np_:]
+        loss, p2, m2, v2, st2 = B.mamba_train_step(p, m, v, st, cfg, tokens,
+                                                   labels, mask)
+        return (loss, *jax.tree_util.tree_leaves(p2),
+                *jax.tree_util.tree_leaves(m2),
+                *jax.tree_util.tree_leaves(v2), st2)
+
+    state_specs = p_specs + m_specs + v_specs + [("step", step)]
+    em.emit(name, "train_step", tstep,
+            state_specs + [("tokens", tok), ("labels", lab), ("mask", msk)])
+
+    tokK = jax.ShapeDtypeStruct((block_k, bsz, n_train), i32)
+    labK = jax.ShapeDtypeStruct((block_k, bsz, n_train), i32)
+    mskK = jax.ShapeDtypeStruct((block_k, bsz, n_train), jnp.float32)
+
+    def tblock(*args):
+        np_ = len(flat)
+        p, m, v = unflat(args, 0), unflat(args, np_), unflat(args, 2 * np_)
+        st = args[3 * np_]
+        toks, labs, msks = args[3 * np_ + 1 :]
+
+        def body(carry, batch):
+            p, m, v, st = carry
+            t, l, mk = batch
+            loss, p, m, v, st = B.mamba_train_step(p, m, v, st, cfg, t, l, mk)
+            return (p, m, v, st), loss
+
+        (p, m, v, st), losses = jax.lax.scan(body, (p, m, v, st),
+                                             (toks, labs, msks))
+        return (losses, *jax.tree_util.tree_leaves(p),
+                *jax.tree_util.tree_leaves(m),
+                *jax.tree_util.tree_leaves(v), st)
+
+    em.emit(name, "train_block", tblock,
+            state_specs + [("tokens", tokK), ("labels", labK), ("mask", mskK)])
+
+    if with_step:
+        st_aval = jax.ShapeDtypeStruct((cfg.layers, 1, cfg.d), jnp.float32)
+        tk = jax.ShapeDtypeStruct((1,), i32)
+
+        def mstep(*args):
+            p = unflat(args, 0)
+            state, token = args[-2:]
+            return B.mamba_step(p, cfg, state, token)
+
+        em.emit(name, "step", mstep,
+                p_specs + [("state", st_aval), ("token", tk)])
+
+
+# ---------------------------------------------------------------------------
+# The artifact catalogue (one entry per experiment config; see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+S5_VOCAB = 122  # 120 S5 permutations + BOS + PAD
+MQAR_VOCAB = 512
+LM_VOCAB = 256
+
+
+def catalogue(em: Emitter, subset: str | None = None):
+    def want(n):
+        return subset is None or subset in n
+
+    # ---- Fig. 3: S5 state tracking (chunk c=1, paper Sec. 4.1) ----
+    if want("s5"):
+        emit_psm(em, "psm_s5",
+                 M.PsmConfig(vocab=S5_VOCAB, d=64, h_agg=1, l_agg=1, h_inf=1,
+                             l_inf=1, chunk=1, n_chunks=32, batch=16,
+                             lr=1e-3))
+        emit_gpt(em, "gpt_s5",
+                 B.GptConfig(vocab=S5_VOCAB, d=64, heads=2, layers=2,
+                             seq_len=256, batch=16, lr=1e-3),
+                 train_len=32)
+        emit_mamba(em, "mamba_s5",
+                   B.MambaConfig(vocab=S5_VOCAB, d=64, layers=2, seq_len=256,
+                                 batch=16, scan_chunk=16, lr=1e-3),
+                   train_len=32, with_step=False)
+
+    # ---- Fig. 4: MQAR, uniform queries ----
+    if want("mqar"):
+        for c, r in ((16, 16), (32, 8)):
+            emit_psm(em, f"psm_mqar_c{c}",
+                     M.PsmConfig(vocab=MQAR_VOCAB, d=64, h_agg=1, l_agg=2,
+                                 h_inf=1, l_inf=2, chunk=c, n_chunks=r,
+                                 batch=16, agg_proj=True, lr=1e-3))
+        for w in (16, 32):
+            emit_gpt(em, f"swt_mqar_w{w}",
+                     B.GptConfig(vocab=MQAR_VOCAB, d=64, heads=1, layers=4,
+                                 seq_len=256, batch=16, window=w, lr=1e-3))
+        emit_gpt(em, "gpt_mqar",
+                 B.GptConfig(vocab=MQAR_VOCAB, d=64, heads=1, layers=2,
+                             seq_len=256, batch=16, lr=1e-3))
+        emit_mamba(em, "mamba_mqar",
+                   B.MambaConfig(vocab=MQAR_VOCAB, d=64, layers=2,
+                                 seq_len=256, batch=16, scan_chunk=16,
+                                 lr=1e-3), with_step=False)
+
+    # ---- Fig. 5: LM perplexity vs chunk size ----
+    if want("lm"):
+        for c in (8, 16, 32, 64):
+            emit_psm(em, f"psm_lm_c{c}",
+                     M.PsmConfig(vocab=LM_VOCAB, d=128, h_agg=4, l_agg=1,
+                                 h_inf=4, l_inf=2, chunk=c,
+                                 n_chunks=256 // c, batch=8))
+        emit_gpt(em, "gpt_lm",
+                 B.GptConfig(vocab=LM_VOCAB, d=128, heads=4, layers=2,
+                             seq_len=256, batch=8))
+        emit_mamba(em, "mamba_lm",
+                   B.MambaConfig(vocab=LM_VOCAB, d=128, layers=2, seq_len=256,
+                                 batch=8, scan_chunk=16), with_step=False)
+
+    # ---- Fig. 6: per-token inference latency (serve-shape artifacts) ----
+    if want("lat"):
+        emit_gpt(em, "gpt_lat",
+                 B.GptConfig(vocab=LM_VOCAB, d=128, heads=4, layers=2,
+                             seq_len=64, batch=1),
+                 decode_buckets=(64, 128, 256, 512, 1024))
+        emit_mamba(em, "mamba_lat",
+                   B.MambaConfig(vocab=LM_VOCAB, d=128, layers=2, seq_len=64,
+                                 batch=1, scan_chunk=16))
+        # Latency PSM reuses psm_lm_c16's serve artifacts (same family).
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--subset", default=None,
+                    help="only emit models whose name contains this string")
+    args = ap.parse_args()
+    em = Emitter(args.out)
+    catalogue(em, args.subset)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""L2 baselines the paper compares against (Sec. 4 / Figs 3-6).
+
+  * GPT-2 mini        — standard causal transformer LM; full-sequence
+                        forward for training/eval, plus a KV-cache
+                        `decode_step` (bucketed context lengths) for the
+                        Fig. 6 per-token latency experiment.
+  * Sliding-Window    — same tower with a banded causal mask (Fig. 4 SWT
+    Transformer         baseline, window 32/64).
+  * Mamba-style SSM   — element-wise gated linear RNN (the diagonal-gate
+                        row of Table 1): s_t = a(x_t) ⊙ s_{t-1} + b(x_t),
+                        trained through the L1 chunked affine-scan kernel,
+                        decoded with an O(1) recurrent step.
+
+All share model.py's transformer primitives and the L1 Pallas attention
+kernel, and all expose (init, forward, train_step) with the same
+(tokens, labels, mask) interface so the rust L3 driver treats every
+architecture uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels.attention import fused_attention
+from .kernels.scan_affine import affine_scan
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# GPT-2 mini (full attention; also the SWT when window > 0)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    vocab: int = 256
+    d: int = 128
+    heads: int = 2
+    layers: int = 2
+    seq_len: int = 128
+    batch: int = 8
+    window: int = 0  # 0 = full causal; > 0 = sliding-window transformer
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+def gpt_init(cfg: GptConfig, seed) -> Params:
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    return {
+        "tok_emb": jax.random.normal(ks[0], (cfg.vocab, cfg.d), jnp.float32)
+        * 0.02,
+        "tower": M._tower_params(ks[1], cfg.d, cfg.layers, cfg.seq_len),
+        "head": M._dense_init(ks[2], (cfg.d, cfg.vocab), scale=0.02),
+    }
+
+
+def gpt_forward(params: Params, cfg: GptConfig, tokens):
+    """[B, n] i32 -> [B, n, V] logits (causal or sliding-window)."""
+    x = params["tok_emb"][tokens]
+    mode = "sliding" if cfg.window > 0 else "causal"
+    tower = params["tower"]
+    x = x + tower["pos"][None, : x.shape[1]]
+    for blk in tower["blocks"]:
+        x = _block_apply_mode(blk, x, cfg.heads, mode, cfg.window)
+    x = M._layer_norm(x, tower["lnf_g"], tower["lnf_b"])
+    return x @ params["head"]
+
+
+def _block_apply_mode(p, x, heads, mode, window):
+    bsz, t, d = x.shape
+    h = M._layer_norm(x, p["ln1_g"], p["ln1_b"])
+    qkv = h @ p["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def sh(y):
+        return jnp.transpose(y.reshape(bsz, t, heads, d // heads), (0, 2, 1, 3))
+
+    o = fused_attention(sh(q), sh(k), sh(v), mode, window)
+    o = jnp.transpose(o, (0, 2, 1, 3)).reshape(bsz, t, d)
+    x = x + o @ p["wo"]
+    h = M._layer_norm(x, p["ln2_g"], p["ln2_b"])
+    h = jax.nn.gelu(h @ p["w1"] + p["b1"])
+    return x + h @ p["w2"] + p["b2"]
+
+
+def gpt_train_step(params, m, v, step, cfg: GptConfig, tokens, labels, mask):
+    loss, grads = jax.value_and_grad(
+        lambda p: M.masked_ce(gpt_forward(p, cfg, tokens), labels, mask)
+    )(params)
+    new_p, new_m, new_v = M.adam_update(cfg, params, grads, m, v, step)
+    return loss, new_p, new_m, new_v, step + 1
+
+
+def gpt_decode_step(params: Params, cfg: GptConfig, kv_cache, token, pos):
+    """One KV-cache decode step at context bucket size cfg.seq_len.
+
+    kv_cache: [layers, 2, B, H, seq_len, Dh]; token: [B] i32; pos: i32.
+    Returns (logits [B, V], new kv_cache). Attention cost is O(seq_len)
+    per call — the rust coordinator switches buckets as the context grows,
+    reproducing the linearly-growing per-token latency of Fig. 6.
+    """
+    bsz = token.shape[0]
+    d, heads = cfg.d, cfg.heads
+    dh = d // heads
+    x = params["tok_emb"][token][:, None, :]  # [B, 1, d]
+    tower = params["tower"]
+    x = x + jax.lax.dynamic_slice_in_dim(tower["pos"], pos, 1, axis=0)[None]
+    new_cache = []
+    neg = -1e30
+    for li, blk in enumerate(tower["blocks"]):
+        h = M._layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = h @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)  # each [B, 1, d]
+
+        def sh(y):
+            return jnp.transpose(y.reshape(bsz, 1, heads, dh), (0, 2, 1, 3))
+
+        q, k, v = sh(q), sh(k), sh(v)  # [B, H, 1, dh]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache[li, 0], k, pos, axis=2
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache[li, 1], v, pos, axis=2
+        )
+        new_cache.append(jnp.stack([ck, cv]))
+        scale = 1.0 / float(dh) ** 0.5
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, ck) * scale
+        idx = jnp.arange(cfg.seq_len)[None, None, None, :]
+        scores = jnp.where(idx <= pos, scores, neg)
+        scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+        probs = jnp.exp(scores)
+        probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bhkd->bhqd", probs, cv)
+        o = jnp.transpose(o, (0, 2, 1, 3)).reshape(bsz, 1, d)
+        x = x + o @ blk["wo"]
+        h = M._layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+        h = jax.nn.gelu(h @ blk["w1"] + blk["b1"])
+        x = x + h @ blk["w2"] + blk["b2"]
+    x = M._layer_norm(x, tower["lnf_g"], tower["lnf_b"])
+    logits = (x @ params["head"])[:, 0]
+    return logits, jnp.stack(new_cache)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style element-wise gated linear RNN
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    vocab: int = 256
+    d: int = 128
+    layers: int = 2
+    seq_len: int = 128
+    batch: int = 8
+    scan_chunk: int = 16  # L1 kernel chunk size
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+def mamba_init(cfg: MambaConfig, seed) -> Params:
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 + cfg.layers)
+    layers = []
+    for i in range(cfg.layers):
+        lk = jax.random.split(ks[2 + i], 5)
+        d = cfg.d
+        layers.append(
+            {
+                "ln_g": jnp.ones((d,), jnp.float32),
+                "ln_b": jnp.zeros((d,), jnp.float32),
+                "w_gate": M._dense_init(lk[0], (d, d)),  # -> log a (via -softplus)
+                "b_gate": jnp.full((d,), 1.0, jnp.float32),
+                "w_in": M._dense_init(lk[1], (d, d)),  # -> b_t
+                "w_silu": M._dense_init(lk[2], (d, d)),  # output gate
+                "w_out": M._dense_init(lk[3], (d, d)),
+            }
+        )
+    return {
+        "tok_emb": jax.random.normal(ks[0], (cfg.vocab, cfg.d), jnp.float32)
+        * 0.02,
+        "layers": layers,
+        "lnf_g": jnp.ones((cfg.d,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.d,), jnp.float32),
+        "head": M._dense_init(ks[1], (cfg.d, cfg.vocab), scale=0.02),
+    }
+
+
+def _mamba_layer_gates(p, h):
+    """Shared by scan-train and step-decode: (log_a, b, out-gate) from h."""
+    log_a = -jax.nn.softplus(h @ p["w_gate"] + p["b_gate"])
+    b = h @ p["w_in"]
+    g = jax.nn.silu(h @ p["w_silu"])
+    return log_a, b, g
+
+
+def mamba_forward(params: Params, cfg: MambaConfig, tokens):
+    """[B, n] -> [B, n, V] via the L1 chunked affine-scan kernel."""
+    x = params["tok_emb"][tokens]  # [B, n, d]
+    for p in params["layers"]:
+        h = M._layer_norm(x, p["ln_g"], p["ln_b"])
+        log_a, b, g = _mamba_layer_gates(p, h)
+        s = affine_scan(log_a, b, cfg.scan_chunk)  # [B, n, d]
+        x = x + (s * g) @ p["w_out"]
+    x = M._layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"]
+
+
+def mamba_train_step(params, m, v, step, cfg: MambaConfig, tokens, labels, mask):
+    loss, grads = jax.value_and_grad(
+        lambda p: M.masked_ce(mamba_forward(p, cfg, tokens), labels, mask)
+    )(params)
+    new_p, new_m, new_v = M.adam_update(cfg, params, grads, m, v, step)
+    return loss, new_p, new_m, new_v, step + 1
+
+
+def mamba_step(params: Params, cfg: MambaConfig, state, token):
+    """O(1) recurrent decode step. state: [layers, B, d]; token: [B] i32.
+
+    Returns (logits [B, V], new state) — constant work and memory per
+    token, the Fig. 6 flat-latency baseline.
+    """
+    x = params["tok_emb"][token]  # [B, d]
+    new_states = []
+    for li, p in enumerate(params["layers"]):
+        h = M._layer_norm(x, p["ln_g"], p["ln_b"])
+        log_a, b, g = _mamba_layer_gates(p, h)
+        s = jnp.exp(log_a) * state[li] + b
+        new_states.append(s)
+        x = x + (s * g) @ p["w_out"]
+    x = M._layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"], jnp.stack(new_states)
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)

@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: fused multi-head attention.
+
+One kernel serves every attention site in the stack — the bidirectional
+Agg block, the causal Inf block, the GPT-2 baseline, and the
+sliding-window baseline — the mask is an operand, so a single compiled
+body handles all modes.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch, head); each grid step stages a whole [T, Dh] Q/K/V tile plus the
+[T, T] score matrix in VMEM (T = 2c <= 512, Dh <= 64 keeps the footprint
+well under 16 MB), and both matmuls (QK^T, PV) target the MXU via
+jnp.dot with f32 accumulation. This is the VMEM/BlockSpec analogue of the
+threadblock tiling a CUDA flash-attention kernel would use.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs on the rust CPU client. Real-TPU perf is estimated
+analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale):
+    """Kernel body for one (batch, head) grid cell.
+
+    q_ref, k_ref, v_ref: [T, Dh] VMEM tiles; mask_ref: [T, T] additive mask;
+    o_ref: [T, Dh] output tile.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    # MXU matmul 1: scores = Q K^T (f32 accumulate).
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask_ref[...]
+    # Numerically-stable softmax, entirely in VMEM.
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    # MXU matmul 2: O = P V.
+    o_ref[...] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, mask_ref, do_ref,
+                     dq_ref, dk_ref, dv_ref, *, scale):
+    """Backward kernel for one (batch, head) grid cell.
+
+    Recomputes the probability matrix (flash-attention style: no [T, T]
+    residual is stored in HBM between fwd and bwd) and produces dQ, dK, dV.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask_ref[...]
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    # dV = P^T dO
+    dv_ref[...] = jnp.dot(probs.T, do, preferred_element_type=jnp.float32)
+    # dP = dO V^T ; dS = P * (dP - rowsum(dP * P))
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    row = jnp.sum(dp * probs, axis=-1, keepdims=True)
+    ds = probs * (dp - row)
+    dq_ref[...] = jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+    dk_ref[...] = jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+
+
+def _qkv_specs(t, dh):
+    return pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0))
+
+
+def _attn_fwd_impl(q, k, v, mask):
+    b, h, t, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    kernel = functools.partial(_attn_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[_qkv_specs(t, dh)] * 3 + [
+            pl.BlockSpec((t, t), lambda i, j: (0, 0))
+        ],
+        out_specs=_qkv_specs(t, dh),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+@jax.custom_vjp
+def _attn(q, k, v, mask):
+    return _attn_fwd_impl(q, k, v, mask)
+
+
+def _attn_fwd(q, k, v, mask):
+    return _attn_fwd_impl(q, k, v, mask), (q, k, v, mask)
+
+
+def _attn_bwd(res, do):
+    q, k, v, mask = res
+    b, h, t, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    kernel = functools.partial(_attn_bwd_kernel, scale=scale)
+    spec = _qkv_specs(t, dh)
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[spec] * 3 + [pl.BlockSpec((t, t), lambda i, j: (0, 0)), spec],
+        out_specs=[spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((b, h, t, dh), jnp.float32)] * 3,
+        interpret=True,
+    )(q, k, v, mask, do)
+    return dq, dk, dv, None
+
+
+_attn.defvjp(_attn_fwd, _attn_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "window"))
+def fused_attention(q, k, v, mode: str = "causal", window: int = 0):
+    """Fused attention via Pallas (custom fwd+bwd kernels).
+
+    q, k, v: [B, H, T, Dh] -> [B, H, T, Dh]. Differentiable: the backward
+    pass is its own Pallas kernel that recomputes probabilities in VMEM
+    (flash-attention style) rather than storing the [T, T] matrix.
+    """
+    t = q.shape[2]
+    mask = ref.attention_mask(t, t, mode, window)
+    return _attn(q, k, v, mask)
+
+
+def vmem_bytes(t: int, dh: int) -> int:
+    """Estimated VMEM footprint per grid step (f32): Q,K,V,O tiles + scores.
+
+    Used by DESIGN.md's roofline analysis and asserted in tests to stay
+    under the 16 MB TPU VMEM budget for every config we ship.
+    """
+    tiles = 4 * t * dh  # q, k, v, o
+    scores = 2 * t * t  # scores + probs
+    return 4 * (tiles + scores)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (python/tests/) asserts
+allclose between kernel and oracle across shape/dtype sweeps — this is the
+core correctness signal for Layer 1.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def attention_mask(t_q: int, t_k: int, mode: str, window: int = 0):
+    """Additive attention mask of shape [t_q, t_k].
+
+    mode:
+      - "bidirectional": all-zero mask (full attention).
+      - "causal": position i attends to j <= i.
+      - "sliding": causal AND j > i - window (sliding-window attention).
+    """
+    if mode == "bidirectional":
+        return jnp.zeros((t_q, t_k), dtype=jnp.float32)
+    i = jnp.arange(t_q)[:, None]
+    j = jnp.arange(t_k)[None, :]
+    causal = j <= i
+    if mode == "causal":
+        keep = causal
+    elif mode == "sliding":
+        keep = causal & (j > i - window)
+    else:
+        raise ValueError(f"unknown mask mode {mode!r}")
+    return jnp.where(keep, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_ref(q, k, v, mode: str = "causal", window: int = 0):
+    """Reference multi-head attention.
+
+    q, k, v: [B, H, T, Dh]. Returns [B, H, T, Dh].
+    Numerically-stable softmax (max-subtracted), f32 accumulation.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    t_q, t_k = q.shape[-2], k.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    scores = scores + attention_mask(t_q, t_k, mode, window)[None, None]
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def affine_scan_ref(log_a, b):
+    """Reference diagonal affine scan: s_t = a_t * s_{t-1} + b_t, s_{-1} = 0.
+
+    log_a, b: [B, T, D]; gate passed in log-space (a = exp(log_a), a in (0,1])
+    for numerical parity with the kernel. Returns all states s: [B, T, D].
+    """
+
+    def step(s, ab):
+        la, bb = ab
+        s = jnp.exp(la) * s + bb
+        return s, s
+
+    init = jnp.zeros((log_a.shape[0], log_a.shape[2]), log_a.dtype)
+    _, states = jax.lax.scan(
+        step, init, (jnp.swapaxes(log_a, 0, 1), jnp.swapaxes(b, 0, 1))
+    )
+    return jnp.swapaxes(states, 0, 1)

@@ -1,0 +1,372 @@
+"""L2: Transformer-PSM in JAX (Sec. 3.4 of the paper).
+
+The model is specified by three learnable modules plus an identity state:
+
+  Enc : token chunk  [B, c]        -> chunk encoding [B, c, d]
+        (embedding + chunk-local positional embedding)
+  Agg : two states   [B, c, d] x 2 -> state          [B, c, d]
+        bidirectional GPT-2 block over the token-concat [x_i | x_j],
+        right-half slice (or a learnable linear projection over the 2c
+        positions — the paper's MQAR variant).
+  Inf : state + chunk encoding     -> logits         [B, c, V]
+        causal GPT-2 block over [s_{i-1} | Enc(C_i)], right-half slice,
+        followed by the unembedding head.
+
+Training evaluates the *static Blelloch scan* (Alg. 1) over the r = n/c
+chunk encodings — unrolled at trace time into the HLO graph, giving the
+paper's O(log r)-depth training circuit — and the fused Adam `train_step`
+is AOT-lowered so the rust L3 driver can train without any python.
+
+All attention runs through the L1 Pallas kernel
+(kernels.attention.fused_attention).
+
+Labels are per-position with an ignore mask, which covers all three paper
+tasks: LM (shifted next-token targets), S5 state tracking (a label at
+every position), and MQAR (labels only at query positions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import fused_attention
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class PsmConfig:
+    """Hyper-parameters of one Transformer-PSM instance."""
+
+    vocab: int = 256
+    d: int = 128
+    h_agg: int = 2
+    l_agg: int = 1
+    h_inf: int = 2
+    l_inf: int = 2
+    chunk: int = 16  # c
+    n_chunks: int = 8  # r — must be a power of two for the static scan
+    batch: int = 8
+    agg_proj: bool = False  # True: learned [c, 2c] projection instead of RH
+    # Adam
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    dropout: float = 0.0  # dropout is disabled in the AOT graph (eval-style)
+
+    @property
+    def seq_len(self) -> int:
+        return self.chunk * self.n_chunks
+
+    def head_dim(self, h: int) -> int:
+        assert self.d % h == 0
+        return self.d // h
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _block_params(key, d: int) -> Params:
+    """One pre-LN transformer block: attention + MLP."""
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wqkv": _dense_init(ks[0], (d, 3 * d)),
+        "wo": _dense_init(ks[1], (d, d)),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": _dense_init(ks[2], (d, 4 * d)),
+        "b1": jnp.zeros((4 * d,), jnp.float32),
+        "w2": _dense_init(ks[3], (4 * d, d)),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _tower_params(key, d: int, n_layers: int, t: int) -> Params:
+    """A GPT-2 style tower: positional embedding over t slots + blocks."""
+    ks = jax.random.split(key, n_layers + 2)
+    return {
+        "pos": jax.random.normal(ks[0], (t, d), jnp.float32) * 0.02,
+        "blocks": [_block_params(ks[i + 1], d) for i in range(n_layers)],
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_params(cfg: PsmConfig, seed) -> Params:
+    """Build the full parameter pytree from an i32 seed (AOT-lowered)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    c, d = cfg.chunk, cfg.d
+    params: Params = {
+        "tok_emb": jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(ks[1], (c, d), jnp.float32) * 0.02,
+        "e_state": jnp.zeros((c, d), jnp.float32),  # learnable identity e
+        "agg": _tower_params(ks[2], d, cfg.l_agg, 2 * c),
+        "inf": _tower_params(ks[3], d, cfg.l_inf, 2 * c),
+        "head": _dense_init(ks[4], (d, cfg.vocab), scale=0.02),
+    }
+    if cfg.agg_proj:
+        # Learnable compression over the 2c token slots (MQAR variant).
+        params["agg_w"] = _dense_init(ks[5], (c, 2 * c), scale=1.0 / (2 * c))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward modules
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _block_apply(p: Params, x, heads: int, mode: str):
+    """Pre-LN transformer block over [B, T, d]."""
+    bsz, t, d = x.shape
+    h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+    qkv = h @ p["wqkv"]  # [B, T, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(y):
+        return jnp.transpose(
+            y.reshape(bsz, t, heads, d // heads), (0, 2, 1, 3)
+        )
+
+    o = fused_attention(split_heads(q), split_heads(k), split_heads(v), mode)
+    o = jnp.transpose(o, (0, 2, 1, 3)).reshape(bsz, t, d)
+    x = x + o @ p["wo"]
+    h = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+    h = jax.nn.gelu(h @ p["w1"] + p["b1"])
+    return x + h @ p["w2"] + p["b2"]
+
+
+def _tower_apply(p: Params, x, heads: int, mode: str):
+    x = x + p["pos"][None, : x.shape[1]]
+    for blk in p["blocks"]:
+        x = _block_apply(blk, x, heads, mode)
+    return _layer_norm(x, p["lnf_g"], p["lnf_b"])
+
+
+def enc_apply(params: Params, cfg: PsmConfig, tokens):
+    """Enc: [B, c] i32 tokens -> [B, c, d] chunk encoding."""
+    return params["tok_emb"][tokens] + params["pos_emb"][None]
+
+
+def agg_apply(params: Params, cfg: PsmConfig, x_i, x_j):
+    """Agg: ([B, c, d], [B, c, d]) -> [B, c, d] via bidirectional tower."""
+    y = jnp.concatenate([x_i, x_j], axis=1)  # [B, 2c, d]
+    y = _tower_apply(params["agg"], y, cfg.h_agg, "bidirectional")
+    if cfg.agg_proj:
+        # [c, 2c] @ [B, 2c, d] -> [B, c, d]
+        return jnp.einsum("ct,btd->bcd", params["agg_w"], y)
+    return y[:, cfg.chunk :]  # right-half slice
+
+
+def inf_apply(params: Params, cfg: PsmConfig, s, x_chunk):
+    """Inf: (state [B, c, d], chunk encoding [B, c, d]) -> logits [B, c, V]."""
+    y = jnp.concatenate([s, x_chunk], axis=1)  # [B, 2c, d]
+    y = _tower_apply(params["inf"], y, cfg.h_inf, "causal")
+    y = y[:, cfg.chunk :]  # right half = chunk positions
+    return y @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Static Blelloch scan (Alg. 1) — trace-time unrolled tree
+# ---------------------------------------------------------------------------
+
+
+def blelloch_prefixes(agg_fn, leaves: List[Any], identity) -> List[Any]:
+    """Exclusive Blelloch prefixes of `leaves` under a (possibly
+    non-associative) binary `agg_fn`, with the exact upsweep/downsweep
+    parenthesisation of Alg. 1. Returns [P_0 .. P_{r-1}], P_0 = identity.
+
+    r must be a power of two. The tree is unrolled at trace time, so the
+    lowered HLO has the paper's O(log r) aggregation depth.
+    """
+    r = len(leaves)
+    assert r & (r - 1) == 0, "n_chunks must be a power of two"
+    if r == 1:
+        return [identity]
+    # Heap layout: tree[1] is the root; leaves at tree[r .. 2r-1].
+    tree: List[Any] = [None] * (2 * r)
+    for i, leaf in enumerate(leaves):
+        tree[r + i] = leaf
+    for v in range(r - 1, 0, -1):  # upsweep
+        tree[v] = agg_fn(tree[2 * v], tree[2 * v + 1])
+    pref: List[Any] = [None] * (2 * r)
+    pref[1] = identity
+    for v in range(1, r):  # downsweep
+        pref[2 * v] = pref[v]
+        pref[2 * v + 1] = agg_fn(pref[v], tree[2 * v])
+    return pref[r : 2 * r]
+
+
+def blelloch_prefixes_batched(agg_fn, encs, e):
+    """Batched static Blelloch scan: all Agg calls of one tree *level*
+    fold into a single batched tower application, so the lowered HLO has
+    2·log2(r) + 1 tower instances instead of 2r — an order of magnitude
+    smaller graph and larger (MXU-friendlier) matmuls. Numerically
+    identical to the unrolled tree (verified in python/tests).
+
+    encs: [B, r, c, d]; agg_fn maps ([N, c, d], [N, c, d]) -> [N, c, d];
+    e: [B, c, d]. Returns exclusive prefixes [B, r, c, d].
+    """
+    bsz, r, c, d = encs.shape
+    assert r & (r - 1) == 0, "n_chunks must be a power of two"
+    # Upsweep: levels[k] has r / 2^k nodes.
+    levels = [encs]
+    level = encs
+    while level.shape[1] > 1:
+        m = level.shape[1]
+        left = level[:, 0::2].reshape(bsz * m // 2, c, d)
+        right = level[:, 1::2].reshape(bsz * m // 2, c, d)
+        level = agg_fn(left, right).reshape(bsz, m // 2, c, d)
+        levels.append(level)
+    # Downsweep: parent prefix propagates to children.
+    pref = e[:, None]  # [B, 1, c, d] — the root receives the identity.
+    for lev in reversed(levels[:-1]):
+        m = pref.shape[1]
+        left_children = lev[:, 0::2]  # T[2v]
+        right_pref = agg_fn(
+            pref.reshape(bsz * m, c, d),
+            left_children.reshape(bsz * m, c, d),
+        ).reshape(bsz, m, c, d)
+        pref = jnp.stack([pref, right_pref], axis=2).reshape(
+            bsz, 2 * m, c, d
+        )
+    return pref
+
+
+def forward(params: Params, cfg: PsmConfig, tokens):
+    """Full Transformer-PSM forward: [B, n] i32 tokens -> [B, n, V] logits."""
+    bsz = tokens.shape[0]
+    c, r, d = cfg.chunk, cfg.n_chunks, cfg.d
+    chunks = tokens.reshape(bsz, r, c)
+    encs = enc_apply(
+        params, cfg, chunks.reshape(bsz * r, c)
+    ).reshape(bsz, r, c, d)
+    e = jnp.broadcast_to(params["e_state"][None], (bsz, c, d))
+    prefixes = blelloch_prefixes_batched(
+        lambda a, b: agg_apply(params, cfg, a, b), encs, e
+    )
+    # One batched Inf call over all chunks.
+    logits = inf_apply(
+        params,
+        cfg,
+        prefixes.reshape(bsz * r, c, d),
+        encs.reshape(bsz * r, c, d),
+    )
+    return logits.reshape(bsz, r * c, cfg.vocab)
+
+
+def forward_unrolled(params: Params, cfg: PsmConfig, tokens):
+    """Reference forward using the literal per-chunk tree of Alg. 1/3 —
+    kept as the oracle for the batched scan (python/tests asserts
+    allclose) and never AOT-lowered."""
+    bsz = tokens.shape[0]
+    c, r = cfg.chunk, cfg.n_chunks
+    chunks = tokens.reshape(bsz, r, c)
+    encs = [enc_apply(params, cfg, chunks[:, i]) for i in range(r)]
+    e = jnp.broadcast_to(params["e_state"][None], (bsz, c, cfg.d))
+    prefixes = blelloch_prefixes(
+        lambda a, b: agg_apply(params, cfg, a, b), encs, e
+    )
+    logits = [
+        inf_apply(params, cfg, prefixes[i], encs[i]) for i in range(r)
+    ]
+    return jnp.concatenate(logits, axis=1)  # [B, n, V]
+
+
+# ---------------------------------------------------------------------------
+# Loss + Adam train step (fused, AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def masked_ce(logits, labels, mask):
+    """Mean cross-entropy over positions where mask == 1.
+
+    logits [B, n, V]; labels [B, n] i32; mask [B, n] f32 in {0, 1}.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    total = jnp.sum(mask)
+    return -jnp.sum(ll * mask) / jnp.maximum(total, 1.0)
+
+
+def loss_fn(params, cfg: PsmConfig, tokens, labels, mask):
+    return masked_ce(forward(params, cfg, tokens), labels, mask)
+
+
+def adam_update(cfg, params, grads, m, v, step):
+    """One fused AdamW update. step is the *previous* step count (i32)."""
+    t = step.astype(jnp.float32) + 1.0
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, mm, vv):
+        mm = b1 * mm + (1.0 - b1) * g
+        vv = b2 * vv + (1.0 - b2) * g * g
+        mhat = mm / bc1
+        vhat = vv / bc2
+        p = p - cfg.lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * p)
+        return p, mm, vv
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, mm, vv) for p, g, mm, vv in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def train_step(params, m, v, step, cfg: PsmConfig, tokens, labels, mask):
+    """(params, adam-m, adam-v, step, batch) -> (loss, new params/m/v/step)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, tokens, labels, mask)
+    )(params)
+    new_p, new_m, new_v = adam_update(cfg, params, grads, m, v, step)
+    return loss, new_p, new_m, new_v, step + 1
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def param_names_and_shapes(cfg: PsmConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list matching tree_leaves order —
+    recorded in the AOT manifest so the rust ParamStore can address
+    parameters by name."""
+    params = jax.eval_shape(lambda: init_params(cfg, 0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, tuple(leaf.shape)))
+    return out

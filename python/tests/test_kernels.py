@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept over shapes,
+modes and magnitudes with hypothesis. This is the core correctness
+signal for Layer 1 (the kernels run inside every AOT artifact)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import fused_attention, vmem_bytes
+from compile.kernels.scan_affine import affine_scan
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# Attention kernel
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.sampled_from([2, 4, 8, 16, 32]),
+    dh=st.sampled_from([4, 8, 16]),
+    mode=st.sampled_from(["causal", "bidirectional", "sliding"]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_attention_matches_ref(b, h, t, dh, mode, scale):
+    window = max(2, t // 4)
+    q = rand(1, (b, h, t, dh), scale)
+    k = rand(2, (b, h, t, dh), scale)
+    v = rand(3, (b, h, t, dh), scale)
+    got = fused_attention(q, k, v, mode, window)
+    want = ref.attention_ref(q, k, v, mode, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(
+    t=st.sampled_from([4, 8, 16]),
+    dh=st.sampled_from([4, 8]),
+    mode=st.sampled_from(["causal", "bidirectional"]),
+)
+def test_attention_grads_match_ref(t, dh, mode):
+    q = rand(4, (1, 2, t, dh))
+    k = rand(5, (1, 2, t, dh))
+    v = rand(6, (1, 2, t, dh))
+
+    def loss_kernel(q, k, v):
+        return (fused_attention(q, k, v, mode) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, mode) ** 2).sum()
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_attention_causality():
+    """Changing future tokens must not change past outputs (causal)."""
+    t, dh = 8, 4
+    q = rand(7, (1, 1, t, dh))
+    k = rand(8, (1, 1, t, dh))
+    v = rand(9, (1, 1, t, dh))
+    base = fused_attention(q, k, v, "causal")
+    k2 = k.at[:, :, t - 1].set(99.0)
+    v2 = v.at[:, :, t - 1].set(-99.0)
+    pert = fused_attention(q, k2, v2, "causal")
+    np.testing.assert_allclose(np.asarray(base[:, :, : t - 1]),
+                               np.asarray(pert[:, :, : t - 1]), rtol=1e-6)
+    assert not np.allclose(np.asarray(base[:, :, t - 1]),
+                           np.asarray(pert[:, :, t - 1]))
+
+
+def test_sliding_window_restricts_reach():
+    """With window w, output at t must ignore tokens < t - w + 1."""
+    t, dh, w = 16, 4, 4
+    q = rand(10, (1, 1, t, dh))
+    k = rand(11, (1, 1, t, dh))
+    v = rand(12, (1, 1, t, dh))
+    base = fused_attention(q, k, v, "sliding", w)
+    # Perturb token 0: outputs at positions >= w must be unchanged.
+    k2 = k.at[:, :, 0].set(50.0)
+    v2 = v.at[:, :, 0].set(-50.0)
+    pert = fused_attention(q, k2, v2, "sliding", w)
+    np.testing.assert_allclose(np.asarray(base[:, :, w:]),
+                               np.asarray(pert[:, :, w:]), rtol=1e-6)
+
+
+def test_attention_extreme_logits_stable():
+    """Large score magnitudes must not produce NaN (stable softmax)."""
+    q = rand(13, (1, 1, 8, 4), 30.0)
+    k = rand(14, (1, 1, 8, 4), 30.0)
+    v = rand(15, (1, 1, 8, 4))
+    out = fused_attention(q, k, v, "causal")
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_vmem_budget_for_shipped_configs():
+    """Every config we AOT must fit the 16MB TPU VMEM budget."""
+    for t, dh in [(2, 64), (32, 64), (64, 32), (128, 32), (512, 64)]:
+        assert vmem_bytes(t, dh) < 16 * 1024 * 1024, (t, dh)
+
+
+# ---------------------------------------------------------------------------
+# Affine scan kernel
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    b=st.integers(1, 3),
+    t=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([4, 16]),
+    chunk=st.sampled_from([4, 8, 16]),
+    gate_scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_affine_scan_matches_ref(b, t, d, chunk, gate_scale):
+    if t % chunk != 0:
+        chunk = t
+    log_a = -jax.nn.softplus(rand(20, (b, t, d), gate_scale))
+    bb = rand(21, (b, t, d))
+    got = affine_scan(log_a, bb, chunk)
+    want = ref.affine_scan_ref(log_a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(chunk=st.sampled_from([4, 8]))
+def test_affine_scan_grads_match_ref(chunk):
+    log_a = -jax.nn.softplus(rand(22, (2, 16, 4)))
+    bb = rand(23, (2, 16, 4))
+
+    def f1(la, b):
+        return (affine_scan(la, b, chunk) ** 2).sum()
+
+    def f2(la, b):
+        return (ref.affine_scan_ref(la, b) ** 2).sum()
+
+    g1 = jax.grad(f1, (0, 1))(log_a, bb)
+    g2 = jax.grad(f2, (0, 1))(log_a, bb)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_affine_scan_tiny_gates_stable():
+    """Near-zero gates (log_a very negative) stay finite — the masked
+    decay-matrix formulation never exponentiates a positive number."""
+    log_a = jnp.full((1, 16, 4), -80.0)
+    bb = rand(24, (1, 16, 4))
+    out = affine_scan(log_a, bb, 4)
+    assert np.isfinite(np.asarray(out)).all()
+    # With a ~= 0 the state is just b_t.
+    np.testing.assert_allclose(np.asarray(out), np.asarray(bb), rtol=1e-5)
+
+
+def test_affine_scan_gate_one_is_cumsum():
+    """a = 1 (log_a = 0) reduces the scan to a cumulative sum."""
+    bb = rand(25, (1, 32, 4))
+    out = affine_scan(jnp.zeros((1, 32, 4)), bb, 8)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.cumsum(bb, axis=1)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_affine_scan_rejects_bad_chunk():
+    with pytest.raises(ValueError):
+        affine_scan(jnp.zeros((1, 10, 2)), jnp.zeros((1, 10, 2)), 4)

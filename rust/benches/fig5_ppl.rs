@@ -1,0 +1,76 @@
+//! Fig. 5 reproduction: LM perplexity vs PSM chunk size (8→64) against
+//! GPT-2 and Mamba baselines, on the synthetic Zipf-HMM corpus (the
+//! WikiText-103 stand-in — DESIGN.md §Substitutions).
+//!
+//! Set PSM_BENCH_STEPS to scale training for the recorded run.
+
+use psm::bench::Table;
+use psm::data::corpus::{Corpus, CorpusConfig};
+use psm::runtime::{default_artifacts_dir, Runtime};
+use psm::train::eval::{mean_perplexity, Evaluator};
+use psm::train::Trainer;
+
+fn steps() -> usize {
+    std::env::var("PSM_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8)
+}
+
+fn train_and_ppl(rt: &Runtime, model: &str, steps: usize, seed: u64)
+    -> f64 {
+    let mut trainer = Trainer::new(rt, model, seed as i32).unwrap();
+    let (bsz, seq) = trainer.batch_shape();
+    let mut corpus = Corpus::new(CorpusConfig::default(), seed);
+    let t0 = std::time::Instant::now();
+    trainer.run(steps, || corpus.lm_batch(bsz, seq)).unwrap();
+    let params = trainer.params().unwrap();
+    let ev = Evaluator::new(rt, model, "fwd").unwrap();
+    let mut held = Corpus::new(CorpusConfig::default(), seed + 1000);
+    let batches: Vec<_> = (0..3).map(|_| held.lm_batch(bsz, seq)).collect();
+    let ppl = mean_perplexity(&ev, &params, &batches).unwrap();
+    println!(
+        "{model:<12} loss {:.3}->{:.3}  ppl {ppl:.2}  ({:.0}s)",
+        trainer.losses[0],
+        trainer.losses.last().unwrap(),
+        t0.elapsed().as_secs_f64()
+    );
+    ppl
+}
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("fig5_ppl: no artifacts; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let steps = steps();
+    println!(
+        "# Fig. 5 — eval perplexity vs chunk size, synthetic corpus \
+         ({steps} steps/model, vocab 256, seq 256)\n"
+    );
+
+    let mut table = Table::new(&["model", "chunk", "perplexity"]);
+    for (model, chunk) in [
+        ("psm_lm_c8", "8"),
+        ("psm_lm_c16", "16"),
+        ("psm_lm_c32", "32"),
+        ("psm_lm_c64", "64"),
+    ] {
+        let ppl = train_and_ppl(&rt, model, steps, 42);
+        table.row(&["T-PSM".into(), chunk.into(), format!("{ppl:.2}")]);
+    }
+    let gpt = train_and_ppl(&rt, "gpt_lm", steps, 42);
+    table.row(&["GPT-2 (full ctx)".into(), "-".into(),
+                format!("{gpt:.2}")]);
+    let mamba = train_and_ppl(&rt, "mamba_lm", steps, 42);
+    table.row(&["Mamba".into(), "-".into(), format!("{mamba:.2}")]);
+
+    println!();
+    table.print();
+    println!(
+        "\n(paper's qualitative claim: ppl falls as chunk grows, \
+         approaching the full-context transformer)"
+    );
+}

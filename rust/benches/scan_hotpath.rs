@@ -1,0 +1,84 @@
+//! L3 hot-path microbenchmarks (the §Perf working set): pure-rust scan
+//! throughput — sequential vs Blelloch vs parallel Blelloch vs online —
+//! over the affine monoid at realistic state sizes, plus the symbolic
+//! overhead of the counter itself.
+//!
+//! Run: `cargo bench --bench scan_hotpath`
+
+use psm::affine::families::gla::Gla;
+use psm::affine::{AffineOp, Family};
+use psm::bench::{black_box, Bencher, Table};
+use psm::scan::{
+    blelloch_scan, blelloch_scan_parallel, sequential_scan, OnlineScan,
+};
+use psm::scan::traits::ops::AddOp;
+use psm::util::prng::Rng;
+
+fn main() {
+    let bench = Bencher::quick();
+    println!("# scan hot-path microbenchmarks\n");
+
+    // --- raw counter overhead (i64 add: measures the data structure,
+    // not the operator)
+    let mut table = Table::new(&[
+        "n", "online push+fold (ns/elem)", "blelloch (ns/elem)",
+    ]);
+    for n in [1 << 10, 1 << 13, 1 << 16] {
+        let xs: Vec<i64> = (0..n as i64).collect();
+        let r1 = bench.run("online", || {
+            let op = AddOp;
+            let mut s = OnlineScan::new(&op);
+            for &x in &xs {
+                s.push(x);
+                black_box(s.prefix());
+            }
+        });
+        let r2 = bench.run("blelloch", || {
+            black_box(blelloch_scan(&AddOp, &xs));
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", r1.mean_ns / n as f64),
+            format!("{:.1}", r2.mean_ns / n as f64),
+        ]);
+    }
+    table.print();
+
+    // --- affine monoid (GLA family, matrix states): the Table-1 shape
+    println!("\n## GLA affine pairs (state [d, d])");
+    let mut table = Table::new(&[
+        "d", "n", "seq ms", "blelloch ms", "par(8) ms", "online ms",
+    ]);
+    for (d, n) in [(8usize, 256usize), (16, 256), (32, 128)] {
+        let fam = Gla { p: d, d };
+        let mut rng = Rng::new(1);
+        let (pairs, _) = fam.generate(&mut rng, n);
+        let op = AffineOp { state_shape: [d, d] };
+        let r_seq = bench.run("seq", || {
+            black_box(sequential_scan(&op, &pairs));
+        });
+        let r_bl = bench.run("blelloch", || {
+            black_box(blelloch_scan(&op, &pairs));
+        });
+        let r_par = bench.run("par", || {
+            black_box(blelloch_scan_parallel(&op, &pairs, 8));
+        });
+        let r_onl = bench.run("online", || {
+            let mut s = OnlineScan::new(&op);
+            for p in &pairs {
+                s.push(p.clone());
+            }
+            black_box(s.prefix());
+        });
+        table.row(&[
+            d.to_string(),
+            n.to_string(),
+            format!("{:.2}", r_seq.mean_ms()),
+            format!("{:.2}", r_bl.mean_ms()),
+            format!("{:.2}", r_par.mean_ms()),
+            format!("{:.2}", r_onl.mean_ms()),
+        ]);
+    }
+    table.print();
+    println!("\nscan_hotpath OK");
+}

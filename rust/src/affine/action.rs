@@ -1,0 +1,190 @@
+//! The bilinear action `▷ : R x M -> M` and the affine pair monoid of
+//! Lemma 3.4: `(E2, f2) ⊕ (E1, f1) = (E2 ∘ E1, f2 + E2 ▷ f1)`.
+//!
+//! `Action` is the monoid `R` acting on matrix states `M = R^{p x d}`.
+//! Each Table-1 family uses one variant; compositions promote where the
+//! algebra allows it (scalars embed in everything, column-diagonals
+//! embed in right-multiplications) and panic on genuinely inexpressible
+//! mixes — which no single family produces.
+
+use crate::scan::traits::Aggregator;
+use crate::tensor::Tensor;
+
+/// An element of the acting monoid `R`.
+#[derive(Clone, Debug)]
+pub enum Action {
+    /// The identity `I` (composes with anything).
+    Identity,
+    /// Scalar gate `γ · s` (RetNet, mLSTM, Gated RFA).
+    Scalar(f32),
+    /// Column-diagonal gate `s · diag(α)` = `1 αᵀ ⊙ s` (GLA).
+    ColDiag(Vec<f32>),
+    /// Elementwise gate `A ⊙ s` (S4/S6, Mamba diagonal SSMs).
+    Elem(Tensor),
+    /// Right multiplication `s · M` (DeltaNet projectors).
+    RightMul(Tensor),
+}
+
+impl Action {
+    /// `self ∘ earlier`: the action equal to applying `earlier` first,
+    /// then `self`.
+    pub fn compose(&self, earlier: &Action) -> Action {
+        use Action::*;
+        match (self, earlier) {
+            (Identity, x) | (x, Identity) => x.clone(),
+            (Scalar(a), Scalar(b)) => Scalar(a * b),
+            (Scalar(a), ColDiag(d)) | (ColDiag(d), Scalar(a)) => {
+                ColDiag(d.iter().map(|x| x * a).collect())
+            }
+            (Scalar(a), Elem(t)) | (Elem(t), Scalar(a)) => Elem(t.scale(*a)),
+            (Scalar(a), RightMul(m)) | (RightMul(m), Scalar(a)) => {
+                RightMul(m.scale(*a))
+            }
+            (ColDiag(a), ColDiag(b)) => {
+                ColDiag(a.iter().zip(b).map(|(x, y)| x * y).collect())
+            }
+            (Elem(a), Elem(b)) => Elem(a.hadamard(b)),
+            // (s · M_e) · M_s = s · (M_e · M_s)
+            (RightMul(ms), RightMul(me)) => RightMul(me.matmul(ms)),
+            (RightMul(m), ColDiag(d)) => {
+                // earlier scales columns, then right-multiply:
+                // s · diag(d) · M = s · (diag(d) M) — scale M's *rows*.
+                RightMul(m.scale_rows(d))
+            }
+            (ColDiag(d), RightMul(m)) => {
+                // s · M · diag(d) — scale M's columns.
+                RightMul(m.scale_cols(d))
+            }
+            (a, b) => panic!("inexpressible action composition {a:?} ∘ {b:?}"),
+        }
+    }
+
+    /// `E ▷ s`.
+    pub fn apply(&self, s: &Tensor) -> Tensor {
+        match self {
+            Action::Identity => s.clone(),
+            Action::Scalar(a) => s.scale(*a),
+            Action::ColDiag(d) => s.scale_cols(d),
+            Action::Elem(t) => s.hadamard(t),
+            Action::RightMul(m) => s.matmul(m),
+        }
+    }
+}
+
+/// A point of `R x M`: the scan element `(E_t, f_t)`.
+#[derive(Clone, Debug)]
+pub struct AffinePair {
+    pub e: Action,
+    pub f: Tensor,
+}
+
+impl AffinePair {
+    pub fn new(e: Action, f: Tensor) -> Self {
+        AffinePair { e, f }
+    }
+}
+
+/// The associative aggregator of Lemma 3.4 over affine pairs.
+///
+/// Scan convention: `agg(left, right)` with `left` the *earlier* block,
+/// so the result applies `left` first: `(E_r ∘ E_l, f_r + E_r ▷ f_l)`.
+/// Folding all pairs yields `(Ē_t, s_t)` with `s_t` the recurrent state
+/// of Eq. (3.1).
+pub struct AffineOp {
+    /// Shape `[p, d]` of the state `M` (for the identity's zero `f`).
+    pub state_shape: [usize; 2],
+}
+
+impl Aggregator for AffineOp {
+    type State = AffinePair;
+
+    fn identity(&self) -> AffinePair {
+        AffinePair::new(
+            Action::Identity,
+            Tensor::zeros(&[self.state_shape[0], self.state_shape[1]]),
+        )
+    }
+
+    fn agg(&self, left: &AffinePair, right: &AffinePair) -> AffinePair {
+        AffinePair::new(
+            right.e.compose(&left.e),
+            right.f.add(&right.e.apply(&left.f)),
+        )
+    }
+
+    fn claims_associative(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.normal() as f32)
+    }
+
+    #[test]
+    fn scalar_composition_commutes_with_apply() {
+        let mut rng = Rng::new(1);
+        let s = rand_tensor(&mut rng, &[3, 4]);
+        let a = Action::Scalar(0.5);
+        let b = Action::Scalar(-2.0);
+        let composed = a.compose(&b).apply(&s);
+        let stepwise = a.apply(&b.apply(&s));
+        assert!(composed.max_abs_diff(&stepwise) < 1e-6);
+    }
+
+    #[test]
+    fn rightmul_composition_order() {
+        let mut rng = Rng::new(2);
+        let s = rand_tensor(&mut rng, &[3, 3]);
+        let m1 = rand_tensor(&mut rng, &[3, 3]);
+        let m2 = rand_tensor(&mut rng, &[3, 3]);
+        let a = Action::RightMul(m2.clone()); // later
+        let b = Action::RightMul(m1.clone()); // earlier
+        // apply earlier then later: (s·m1)·m2
+        let stepwise = s.matmul(&m1).matmul(&m2);
+        let composed = a.compose(&b).apply(&s);
+        assert!(composed.max_abs_diff(&stepwise) < 1e-4);
+    }
+
+    #[test]
+    fn coldiag_rightmul_mixes() {
+        let mut rng = Rng::new(3);
+        let s = rand_tensor(&mut rng, &[2, 3]);
+        let d = rand_vec(&mut rng, 3);
+        let m = rand_tensor(&mut rng, &[3, 3]);
+        // earlier ColDiag then later RightMul
+        let later = Action::RightMul(m.clone());
+        let earlier = Action::ColDiag(d.clone());
+        let stepwise = later.apply(&earlier.apply(&s));
+        let composed = later.compose(&earlier).apply(&s);
+        assert!(composed.max_abs_diff(&stepwise) < 1e-5);
+        // and the flipped mix
+        let stepwise2 = earlier.apply(&later.apply(&s));
+        let composed2 = earlier.compose(&later).apply(&s);
+        assert!(composed2.max_abs_diff(&stepwise2) < 1e-5);
+    }
+
+    #[test]
+    fn aggregator_identity_laws() {
+        let mut rng = Rng::new(4);
+        let op = AffineOp { state_shape: [2, 3] };
+        let x = AffinePair::new(
+            Action::Scalar(0.7),
+            rand_tensor(&mut rng, &[2, 3]),
+        );
+        let e = op.identity();
+        let l = op.agg(&e, &x);
+        let r = op.agg(&x, &e);
+        assert!(l.f.max_abs_diff(&x.f) < 1e-6);
+        assert!(r.f.max_abs_diff(&x.f) < 1e-6);
+    }
+}

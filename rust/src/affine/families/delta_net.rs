@@ -1,0 +1,83 @@
+//! DeltaNet (Schlag et al., 2021): `s_t = s_{t-1}(I - β_t k_t k_tᵀ) +
+//! β_t v_t k_tᵀ` — the delta-rule projector row of Table 1.
+
+use super::{rand_gate, rand_vec, rank1};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct DeltaNet {
+    pub d: usize,
+}
+
+impl DeltaNet {
+    /// `I - β k kᵀ` as a dense [d, d] matrix.
+    fn projector(&self, beta: f32, k: &[f32]) -> Tensor {
+        Tensor::eye(self.d).sub(&rank1(k, k).scale(beta))
+    }
+}
+
+impl Family for DeltaNet {
+    fn name(&self) -> &'static str {
+        "DeltaNet"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.d, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "projector"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.d, self.d]);
+        for _ in 0..n {
+            let k = rand_vec(rng, self.d);
+            let v = rand_vec(rng, self.d);
+            let beta = rand_gate(rng, 0.1, 1.0);
+            // Published rule, raw ops.
+            s = s
+                .matmul(&self.projector(beta, &k))
+                .add(&rank1(&v, &k).scale(beta));
+            states.push(s.clone());
+            // Encoding: E = RightMul(I - βkkᵀ), f = β v kᵀ.
+            pairs.push(AffinePair::new(
+                Action::RightMul(self.projector(beta, &k)),
+                rank1(&v, &k).scale(beta),
+            ));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&DeltaNet { d: 6 }, 40, 3);
+        assert!(rep.passes(1e-3), "{rep:?}");
+    }
+
+    #[test]
+    fn projector_with_unit_key_and_beta1_erases() {
+        // With β = 1 and a unit key, the projector removes the key
+        // direction: s · (I - kkᵀ) has zero component along k.
+        let d = 4;
+        let fam = DeltaNet { d };
+        let mut k = vec![0.0f32; d];
+        k[1] = 1.0;
+        let p = fam.projector(1.0, &k);
+        let s = Tensor::from_fn(&[d, d], |i| i as f32);
+        let out = s.matmul(&p);
+        for i in 0..d {
+            assert!(out.at2(i, 1).abs() < 1e-6);
+        }
+    }
+}

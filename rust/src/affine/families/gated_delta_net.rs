@@ -1,0 +1,75 @@
+//! Gated DeltaNet (Yang et al., 2025): `s_t = α_t s_{t-1}(I - β_t k_t
+//! k_tᵀ) + β_t v_t k_tᵀ` — delta rule with a scalar forget gate.
+
+use super::{rand_gate, rand_vec, rank1};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct GatedDeltaNet {
+    pub d: usize,
+}
+
+impl Family for GatedDeltaNet {
+    fn name(&self) -> &'static str {
+        "Gated DeltaNet"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.d, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "projector"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.d, self.d]);
+        let eye = Tensor::eye(self.d);
+        for _ in 0..n {
+            let k = rand_vec(rng, self.d);
+            let v = rand_vec(rng, self.d);
+            let beta = rand_gate(rng, 0.1, 1.0);
+            let alpha = rand_gate(rng, 0.5, 1.0);
+            let proj = eye.sub(&rank1(&k, &k).scale(beta));
+            // Published rule, raw ops.
+            s = s.matmul(&proj).scale(alpha).add(&rank1(&v, &k).scale(beta));
+            states.push(s.clone());
+            // Encoding: E = RightMul(α(I - βkkᵀ)), f = β v kᵀ.
+            pairs.push(AffinePair::new(
+                Action::RightMul(proj.scale(alpha)),
+                rank1(&v, &k).scale(beta),
+            ));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&GatedDeltaNet { d: 6 }, 40, 4);
+        assert!(rep.passes(1e-3), "{rep:?}");
+    }
+
+    #[test]
+    fn alpha_zero_forgets_history() {
+        // α = 0 ⇒ the new state is exactly β v kᵀ regardless of history.
+        let d = 3;
+        let mut s = Tensor::full(&[d, d], 5.0);
+        let k = vec![1.0, 0.0, 0.0];
+        let v = vec![0.0, 1.0, 0.0];
+        let beta = 0.7;
+        let eye = Tensor::eye(d);
+        let proj = eye.sub(&rank1(&k, &k).scale(beta));
+        s = s.matmul(&proj).scale(0.0).add(&rank1(&v, &k).scale(beta));
+        assert!(s.max_abs_diff(&rank1(&v, &k).scale(beta)) < 1e-6);
+    }
+}

@@ -1,0 +1,67 @@
+//! Gated Random Feature Attention (Peng et al., 2021): `s_t = g_t
+//! s_{t-1} + (1 - g_t) v_t k_tᵀ` — convex scalar gating.
+
+use super::{rand_gate, rand_vec, rank1};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct GatedRfa {
+    pub d: usize,
+}
+
+impl Family for GatedRfa {
+    fn name(&self) -> &'static str {
+        "Gated RFA"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.d, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "scalar gate g_t"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.d, self.d]);
+        for _ in 0..n {
+            let k = rand_vec(rng, self.d);
+            let v = rand_vec(rng, self.d);
+            let g = rand_gate(rng, 0.05, 0.95);
+            s = s.scale(g).add(&rank1(&v, &k).scale(1.0 - g));
+            states.push(s.clone());
+            pairs.push(AffinePair::new(
+                Action::Scalar(g),
+                rank1(&v, &k).scale(1.0 - g),
+            ));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&GatedRfa { d: 8 }, 48, 7);
+        assert!(rep.passes(1e-4), "{rep:?}");
+    }
+
+    #[test]
+    fn convex_combination_stays_bounded() {
+        // With ||v kᵀ|| <= 1 the state norm stays O(1) under convex gates.
+        let fam = GatedRfa { d: 4 };
+        let mut rng = Rng::new(8);
+        let (_, states) = fam.generate(&mut rng, 200);
+        for s in states {
+            assert!(s.frob_norm() < 10.0);
+        }
+    }
+}

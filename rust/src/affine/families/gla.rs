@@ -1,0 +1,72 @@
+//! Gated Linear Attention (Yang et al., 2024a): `s_t = 1 α_tᵀ ⊙ s_{t-1}
+//! + φ(k_t) v_tᵀ` — per-*column* diagonal gates over a [p, d] state.
+
+use super::{rand_gates, rand_vec, rank1};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct Gla {
+    /// Kernel feature dimension (state rows).
+    pub p: usize,
+    /// Value dimension (state cols).
+    pub d: usize,
+}
+
+impl Family for Gla {
+    fn name(&self) -> &'static str {
+        "GLA"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.p, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "diagonal gate"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.p, self.d]);
+        for _ in 0..n {
+            // φ(k) >= 0: softplus-ish random features.
+            let phi_k: Vec<f32> = rand_vec(rng, self.p)
+                .iter()
+                .map(|x| x.abs() + 0.01)
+                .collect();
+            let v = rand_vec(rng, self.d);
+            let alpha = rand_gates(rng, self.d, 0.1, 0.999);
+            // Published rule: 1 αᵀ ⊙ s scales column j by α_j.
+            s = s.scale_cols(&alpha).add(&rank1(&phi_k, &v));
+            states.push(s.clone());
+            pairs.push(AffinePair::new(
+                Action::ColDiag(alpha),
+                rank1(&phi_k, &v),
+            ));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&Gla { p: 6, d: 5 }, 48, 13);
+        assert!(rep.passes(1e-4), "{rep:?}");
+    }
+
+    #[test]
+    fn column_gating_is_columnwise() {
+        let s = Tensor::full(&[2, 3], 1.0);
+        let gated = s.scale_cols(&[0.5, 1.0, 2.0]);
+        assert_eq!(gated.at2(0, 0), 0.5);
+        assert_eq!(gated.at2(1, 2), 2.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Linear Attention (Katharopoulos et al., 2020): `s_t = s_{t-1} + v_t
+//! k_tᵀ` — the identity-gate row of Table 1.
+
+use super::{rand_vec, rank1};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct LinearAttention {
+    pub d: usize,
+}
+
+impl Family for LinearAttention {
+    fn name(&self) -> &'static str {
+        "Linear Attention"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.d, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "identity I"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.d, self.d]);
+        for _ in 0..n {
+            let k = rand_vec(rng, self.d);
+            let v = rand_vec(rng, self.d);
+            // Published rule: s_t = s_{t-1} + v_t k_tᵀ.
+            s = s.add(&rank1(&v, &k));
+            states.push(s.clone());
+            // Encoding: E = I, f = v kᵀ.
+            pairs.push(AffinePair::new(Action::Identity, rank1(&v, &k)));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&LinearAttention { d: 8 }, 48, 1);
+        assert!(rep.passes(1e-4), "{rep:?}");
+    }
+
+    #[test]
+    fn state_is_sum_of_outer_products() {
+        let fam = LinearAttention { d: 4 };
+        let mut rng = Rng::new(2);
+        let (pairs, states) = fam.generate(&mut rng, 5);
+        // s_4 should equal the sum of all five f_t.
+        let mut acc = Tensor::zeros(&[4, 4]);
+        for p in &pairs {
+            acc = acc.add(&p.f);
+        }
+        assert!(acc.max_abs_diff(&states[4]) < 1e-6);
+    }
+}

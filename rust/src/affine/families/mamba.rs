@@ -1,0 +1,77 @@
+//! Mamba (Gu & Dao, 2024): `s_t = Ā(x_t) ⊙ s_{t-1} + B̄(x_t) x_t` —
+//! *selective* (input-dependent) diagonal SSM. Identical algebra to
+//! S4/S6 but with per-step gates, which is what makes the scan
+//! worthwhile.
+
+use super::{rand_gates, rand_vec};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct Mamba {
+    pub p: usize,
+    pub d: usize,
+}
+
+impl Family for Mamba {
+    fn name(&self) -> &'static str {
+        "Mamba"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.p, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "diagonal gate"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.p, self.d]);
+        for _ in 0..n {
+            // Input-dependent discretised gates Ā(x_t) ∈ (0,1)^{p×d} and
+            // input projection B̄(x_t) x_t.
+            let a_bar = Tensor::new(
+                &[self.p, self.d],
+                rand_gates(rng, self.p * self.d, 0.05, 0.999),
+            );
+            let x = rand_vec(rng, self.p);
+            let b_bar = Tensor::from_fn(&[self.p, self.d], |_| {
+                rng.normal() as f32 * 0.3
+            });
+            let f = b_bar.hadamard(&Tensor::outer(&x, &vec![1.0; self.d]));
+            s = a_bar.hadamard(&s).add(&f);
+            states.push(s.clone());
+            pairs.push(AffinePair::new(Action::Elem(a_bar), f));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&Mamba { p: 5, d: 6 }, 48, 11);
+        assert!(rep.passes(1e-4), "{rep:?}");
+    }
+
+    #[test]
+    fn selective_gates_vary() {
+        let fam = Mamba { p: 3, d: 3 };
+        let mut rng = Rng::new(12);
+        let (pairs, _) = fam.generate(&mut rng, 2);
+        match (&pairs[0].e, &pairs[1].e) {
+            (Action::Elem(a), Action::Elem(b)) => {
+                assert!(a.max_abs_diff(b) > 0.0)
+            }
+            _ => panic!("expected Elem actions"),
+        }
+    }
+}

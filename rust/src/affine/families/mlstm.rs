@@ -1,0 +1,57 @@
+//! mLSTM (Beck et al., 2024, xLSTM): `s_t = f_t s_{t-1} + i_t v_t k_tᵀ`
+//! — input-dependent scalar forget and input gates.
+
+use super::{rand_gate, rand_vec, rank1};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct MLstm {
+    pub d: usize,
+}
+
+impl Family for MLstm {
+    fn name(&self) -> &'static str {
+        "mLSTM"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.d, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "scalar gate f_t"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.d, self.d]);
+        for _ in 0..n {
+            let k = rand_vec(rng, self.d);
+            let v = rand_vec(rng, self.d);
+            let f_t = rand_gate(rng, 0.3, 1.0); // forget gate
+            let i_t = rand_gate(rng, 0.0, 1.0); // input gate
+            s = s.scale(f_t).add(&rank1(&v, &k).scale(i_t));
+            states.push(s.clone());
+            pairs.push(AffinePair::new(
+                Action::Scalar(f_t),
+                rank1(&v, &k).scale(i_t),
+            ));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&MLstm { d: 8 }, 48, 6);
+        assert!(rep.passes(1e-4), "{rep:?}");
+    }
+}

@@ -1,0 +1,39 @@
+//! One module per Table-1 row. Each implements [`super::Family`] with
+//! (a) the family's published recurrence computed with raw tensor ops
+//! and (b) the `(E_t, f_t)` affine encoding — kept deliberately separate
+//! so the equivalence test cannot be circular.
+
+pub mod delta_net;
+pub mod gated_delta_net;
+pub mod gated_rfa;
+pub mod gla;
+pub mod linear_attention;
+pub mod mamba;
+pub mod mlstm;
+pub mod ret_net;
+pub mod s4s6;
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Random unit-ish vector (normal / sqrt(d)) — keeps states O(1).
+pub(crate) fn rand_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    (0..d).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// Random gate in (lo, hi).
+pub(crate) fn rand_gate(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+    lo + (hi - lo) * rng.f32()
+}
+
+/// Random per-channel gates in (lo, hi).
+pub(crate) fn rand_gates(rng: &mut Rng, d: usize, lo: f32, hi: f32)
+    -> Vec<f32> {
+    (0..d).map(|_| rand_gate(rng, lo, hi)).collect()
+}
+
+/// v kᵀ outer product as a [p, d] tensor.
+pub(crate) fn rank1(v: &[f32], k: &[f32]) -> Tensor {
+    Tensor::outer(v, k)
+}

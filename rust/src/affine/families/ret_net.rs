@@ -1,0 +1,68 @@
+//! RetNet (Sun et al., 2023): `s_t = γ s_{t-1} + v_t k_tᵀ` — fixed
+//! scalar decay.
+
+use super::{rand_vec, rank1};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct RetNet {
+    pub d: usize,
+    /// The fixed decay γ ∈ (0, 1).
+    pub gamma: f32,
+}
+
+impl Family for RetNet {
+    fn name(&self) -> &'static str {
+        "RetNet"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.d, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "scalar gate γ"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.d, self.d]);
+        for _ in 0..n {
+            let k = rand_vec(rng, self.d);
+            let v = rand_vec(rng, self.d);
+            s = s.scale(self.gamma).add(&rank1(&v, &k));
+            states.push(s.clone());
+            pairs.push(AffinePair::new(
+                Action::Scalar(self.gamma),
+                rank1(&v, &k),
+            ));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&RetNet { d: 8, gamma: 0.9 }, 48, 5);
+        assert!(rep.passes(1e-4), "{rep:?}");
+    }
+
+    #[test]
+    fn decay_shrinks_history() {
+        // After many steps with zero inputs the state decays to ~0.
+        let fam = RetNet { d: 2, gamma: 0.5 };
+        let mut s = Tensor::full(&[2, 2], 8.0);
+        for _ in 0..20 {
+            s = s.scale(fam.gamma);
+        }
+        assert!(s.frob_norm() < 1e-4);
+    }
+}

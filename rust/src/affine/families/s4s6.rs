@@ -1,0 +1,84 @@
+//! S4 / S6 (Gu et al., 2022): `s_t = e^{-α} ⊙ s_{t-1} + B ⊙ (v_t 1ᵀ)` —
+//! time-invariant diagonal SSM (the gate tensor is *fixed* across t,
+//! which is what distinguishes S4 from the selective Mamba row).
+
+use super::{rand_gates, rand_vec};
+use crate::affine::{Action, AffinePair, Family};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct S4S6 {
+    /// State rows (channels).
+    pub p: usize,
+    /// State cols.
+    pub d: usize,
+}
+
+impl Family for S4S6 {
+    fn name(&self) -> &'static str {
+        "S4 / S6"
+    }
+
+    fn state_shape(&self) -> [usize; 2] {
+        [self.p, self.d]
+    }
+
+    fn gate_kind(&self) -> &'static str {
+        "diagonal gate"
+    }
+
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>) {
+        // Fixed (time-invariant) decay e^{-α} and input matrix B.
+        let alpha = rand_gates(rng, self.p * self.d, 0.02, 1.5);
+        let decay = Tensor::new(
+            &[self.p, self.d],
+            alpha.iter().map(|a| (-a).exp()).collect(),
+        );
+        let b_mat = Tensor::from_fn(&[self.p, self.d], |_| {
+            rng.normal() as f32 * 0.3
+        });
+
+        let mut pairs = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        let mut s = Tensor::zeros(&[self.p, self.d]);
+        for _ in 0..n {
+            let v = rand_vec(rng, self.p);
+            // v_t 1ᵀ: broadcast v down the columns.
+            let v1t = Tensor::outer(&v, &vec![1.0; self.d]);
+            let f = b_mat.hadamard(&v1t);
+            s = decay.hadamard(&s).add(&f);
+            states.push(s.clone());
+            pairs.push(AffinePair::new(Action::Elem(decay.clone()), f));
+        }
+        (pairs, states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affine::check_family;
+
+    #[test]
+    fn equivalence() {
+        let rep = check_family(&S4S6 { p: 5, d: 7 }, 48, 9);
+        assert!(rep.passes(1e-4), "{rep:?}");
+    }
+
+    #[test]
+    fn lti_gates_are_constant() {
+        let fam = S4S6 { p: 3, d: 3 };
+        let mut rng = Rng::new(10);
+        let (pairs, _) = fam.generate(&mut rng, 4);
+        // All E_t must be the same tensor (time-invariance).
+        for w in pairs.windows(2) {
+            match (&w[0].e, &w[1].e) {
+                (Action::Elem(a), Action::Elem(b)) => {
+                    assert!(a.max_abs_diff(b) == 0.0)
+                }
+                _ => panic!("expected Elem actions"),
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! The paper's Table 1: modern fast-inference layers as specialisations
+//! of one associative affine state update (Sec. 3.2 / Sec. B).
+//!
+//! Each family module implements its *published* recurrence directly
+//! (raw matrix ops — the ground truth) and its `(E_t, f_t)` encoding
+//! into the shared [`action::AffineOp`] monoid. The equivalence checker
+//! verifies, on random inputs, that
+//!
+//! 1. the Blelloch scan of the encoded pairs equals the sequential scan
+//!    (associativity in action),
+//! 2. the online binary-counter scan reproduces the direct recurrence
+//!    state `s_t` at every step, and
+//! 3. `⊕` is associative on random triples,
+//!
+//! which together instantiate Theorem B.3: every family is a PSM with
+//! chunk size 1 and SPD-(n, 1) complexity. `cargo bench --bench
+//! table1_affine` regenerates the table with timings.
+
+pub mod action;
+pub mod families;
+
+pub use action::{Action, AffineOp, AffinePair};
+
+use crate::scan::{blelloch_scan, sequential_scan, Aggregator, OnlineScan};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// One Table-1 row: a layer family with a direct recurrence and an
+/// affine-pair encoding.
+pub trait Family: Sync {
+    /// Display name (matches the paper's Table 1).
+    fn name(&self) -> &'static str;
+
+    /// Shape `[p, d]` of the state.
+    fn state_shape(&self) -> [usize; 2];
+
+    /// The paper's gate/operator column (for the bench table).
+    fn gate_kind(&self) -> &'static str;
+
+    /// Sample `n` timesteps: returns the scan elements `(E_t, f_t)` and
+    /// the states `s_0..s_{n-1}` computed by the family's *published*
+    /// update rule (independent of the Action algebra).
+    fn generate(&self, rng: &mut Rng, n: usize)
+        -> (Vec<AffinePair>, Vec<Tensor>);
+}
+
+/// Result of the Table-1 equivalence check for one family.
+#[derive(Debug, Clone)]
+pub struct EquivalenceReport {
+    pub name: &'static str,
+    /// max |blelloch - sequential| over all prefixes (associativity).
+    pub scan_vs_seq: f32,
+    /// max |online inclusive prefix - direct recurrence| over all t.
+    pub online_vs_direct: f32,
+    /// max associativity defect on random triples.
+    pub assoc_defect: f32,
+    pub n: usize,
+}
+
+impl EquivalenceReport {
+    pub fn passes(&self, tol: f32) -> bool {
+        self.scan_vs_seq <= tol
+            && self.online_vs_direct <= tol
+            && self.assoc_defect <= tol
+    }
+}
+
+/// Run the three-way equivalence check for `family` on `n` random steps.
+pub fn check_family(
+    family: &dyn Family,
+    n: usize,
+    seed: u64,
+) -> EquivalenceReport {
+    let mut rng = Rng::new(seed);
+    let (pairs, direct) = family.generate(&mut rng, n);
+    assert_eq!(pairs.len(), n);
+    assert_eq!(direct.len(), n);
+    let op = AffineOp { state_shape: family.state_shape() };
+
+    // 1. static Blelloch vs sequential left fold (exclusive prefixes).
+    let b = blelloch_scan(&op, &pairs);
+    let s = sequential_scan(&op, &pairs);
+    let mut scan_vs_seq = 0.0f32;
+    for (pb, ps) in b.iter().zip(&s) {
+        scan_vs_seq = scan_vs_seq.max(pb.f.max_abs_diff(&ps.f));
+    }
+
+    // 2. online inclusive prefix vs the family's direct recurrence.
+    let mut online = OnlineScan::new(&op);
+    let mut online_vs_direct = 0.0f32;
+    for (t, x) in pairs.iter().enumerate() {
+        online.push(x.clone());
+        let got = online.prefix();
+        online_vs_direct = online_vs_direct.max(got.f.max_abs_diff(&direct[t]));
+    }
+
+    // 3. associativity on random triples drawn from fresh samples.
+    let mut assoc_defect = 0.0f32;
+    for _ in 0..8 {
+        let (trip, _) = family.generate(&mut rng, 3);
+        let lhs = op.agg(&op.agg(&trip[0], &trip[1]), &trip[2]);
+        let rhs = op.agg(&trip[0], &op.agg(&trip[1], &trip[2]));
+        assoc_defect = assoc_defect.max(lhs.f.max_abs_diff(&rhs.f));
+    }
+
+    EquivalenceReport {
+        name: family.name(),
+        scan_vs_seq,
+        online_vs_direct,
+        assoc_defect,
+        n,
+    }
+}
+
+/// All nine Table-1 families at width `d` (state `[d, d]` or `[d, 1]`
+/// as each family dictates).
+pub fn registry(d: usize) -> Vec<Box<dyn Family>> {
+    vec![
+        Box::new(families::linear_attention::LinearAttention { d }),
+        Box::new(families::delta_net::DeltaNet { d }),
+        Box::new(families::gated_delta_net::GatedDeltaNet { d }),
+        Box::new(families::ret_net::RetNet { d, gamma: 0.97 }),
+        Box::new(families::mlstm::MLstm { d }),
+        Box::new(families::gated_rfa::GatedRfa { d }),
+        Box::new(families::s4s6::S4S6 { p: d, d }),
+        Box::new(families::mamba::Mamba { p: d, d }),
+        Box::new(families::gla::Gla { p: d, d }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Theorem B.3, empirically: every Table-1 family passes the
+    /// three-way equivalence at f32 tolerance.
+    #[test]
+    fn all_families_equivalent() {
+        for family in registry(6) {
+            let rep = check_family(family.as_ref(), 33, 0xBEEF);
+            assert!(
+                rep.passes(2e-3),
+                "{}: {rep:?}",
+                rep.name
+            );
+        }
+    }
+
+    /// Equality must hold for non-power-of-two lengths too (identity
+    /// padding correctness).
+    #[test]
+    fn odd_lengths() {
+        for n in [1, 2, 5, 17] {
+            for family in registry(4) {
+                let rep = check_family(family.as_ref(), n, 7);
+                assert!(rep.passes(2e-3), "{} n={n}: {rep:?}", rep.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Bench harness (replaces criterion, unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that
+//! uses [`Bencher`] for microbenchmarks and the table printers for the
+//! figure/table reproductions. Results can also be dumped as JSON for
+//! EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Summary};
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Micro-benchmark runner: warmup then timed iterations, with a wall
+/// budget so expensive cases self-limit.
+pub struct Bencher {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget: Duration::from_secs(3),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 200,
+            budget: Duration::from_millis(800),
+        }
+    }
+
+    /// Run `f` repeatedly and collect timing statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let mut summary = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while iters < self.min_iters
+            || (start.elapsed() < self.budget && iters < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            let ns = t0.elapsed().as_nanos() as f64;
+            samples.push(ns);
+            summary.add(ns);
+            iters += 1;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: summary.mean(),
+            std_ns: summary.std(),
+            p50_ns: percentile(&samples, 50.0),
+            p99_ns: percentile(&samples, 99.0),
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+// ---------------------------------------------------------------------------
+// Table printing (the figure/table reproductions print paper-style rows)
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures() {
+        let b = Bencher {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 50,
+            budget: Duration::from_millis(50),
+        };
+        let r = b.run("spin", || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns * 1.0001);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["model", "ppl"]);
+        t.row(&["psm_c32".into(), "24.12".into()]);
+        t.print(); // smoke: no panic
+    }
+}

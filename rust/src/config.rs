@@ -1,0 +1,71 @@
+//! Run configuration: CLI options resolved against defaults, with the
+//! artifact directory and model registry wiring.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+/// Resolved configuration for a training / eval / bench run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub checkpoint: Option<PathBuf>,
+    pub out_json: Option<PathBuf>,
+    /// Quick mode: shrink everything for smoke runs.
+    pub quick: bool,
+}
+
+impl RunConfig {
+    pub fn from_args(args: &Args, default_model: &str) -> Result<RunConfig> {
+        Ok(RunConfig {
+            artifacts_dir: args
+                .opt_str("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(crate::runtime::default_artifacts_dir),
+            model: args.str_or("model", default_model),
+            steps: args.usize_or("steps", 200)?,
+            seed: args.u64_or("seed", 42)?,
+            checkpoint: args.opt_str("checkpoint").map(PathBuf::from),
+            out_json: args.opt_str("out").map(PathBuf::from),
+            quick: args.has_flag("quick"),
+        })
+    }
+}
+
+/// Canonical checkpoint path for a model.
+pub fn checkpoint_path(model: &str) -> PathBuf {
+    PathBuf::from("checkpoints").join(format!("{model}.ckpt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let args = Args::parse(
+            "train --model psm_lm_c16 --steps 50 --quick"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let cfg = RunConfig::from_args(&args, "psm_s5").unwrap();
+        assert_eq!(cfg.model, "psm_lm_c16");
+        assert_eq!(cfg.steps, 50);
+        assert!(cfg.quick);
+        assert!(cfg.checkpoint.is_none());
+    }
+
+    #[test]
+    fn default_model_used() {
+        let args = Args::parse(Vec::<String>::new().into_iter()).unwrap();
+        let cfg = RunConfig::from_args(&args, "psm_s5").unwrap();
+        assert_eq!(cfg.model, "psm_s5");
+        assert_eq!(cfg.steps, 200);
+    }
+}

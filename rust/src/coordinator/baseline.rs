@@ -1,0 +1,220 @@
+//! Baseline inference sessions for the Fig. 6 latency comparison:
+//!
+//! * [`GptSession`] — GPT-2 with a KV cache at bucketed context sizes.
+//!   Per-token attention cost is O(bucket); the session migrates to the
+//!   next bucket as the context grows, reproducing the linearly-growing
+//!   per-token latency the paper measures for transformers.
+//! * [`MambaSession`] — O(1) recurrent decode: constant state, constant
+//!   per-token work.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::log_debug;
+use crate::runtime::{HostValue, Module, ParamStore, Runtime};
+
+/// GPT-2 KV-cache decode across context-size buckets.
+pub struct GptSession<'rt> {
+    _rt: &'rt Runtime,
+    model: String,
+    params: Vec<HostValue>,
+    /// (bucket size, module) sorted ascending.
+    buckets: Vec<(usize, Module)>,
+    bucket_idx: usize,
+    /// KV cache value shaped per the current bucket's spec.
+    kv: HostValue,
+    pos: usize,
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+    pub vocab: usize,
+}
+
+impl<'rt> GptSession<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str, params: &ParamStore)
+        -> Result<Self> {
+        let spec = rt.model(model)?.clone();
+        let mut buckets = Vec::new();
+        for (entry, art) in &spec.artifacts {
+            if let Some(sz) = entry.strip_prefix("decode_") {
+                let bucket: usize = sz.parse()?;
+                let _ = art;
+                buckets.push((bucket, rt.load(model, entry)?));
+            }
+        }
+        if buckets.is_empty() {
+            bail!("{model} has no decode_<bucket> artifacts");
+        }
+        buckets.sort_by_key(|(b, _)| *b);
+        let kv_spec = buckets[0].1.spec.inputs
+            [buckets[0].1.spec.inputs.len() - 3]
+            .clone();
+        // kv: [layers, 2, 1, heads, bucket, head_dim]
+        let layers = kv_spec.shape[0];
+        let heads = kv_spec.shape[3];
+        let head_dim = kv_spec.shape[5];
+        let vocab = spec.cfg_usize("vocab")?;
+        Ok(GptSession {
+            _rt: rt,
+            model: model.to_string(),
+            params: params.to_values(),
+            kv: HostValue::zeros_f32(&kv_spec.shape),
+            buckets,
+            bucket_idx: 0,
+            pos: 0,
+            layers,
+            heads,
+            head_dim,
+            vocab,
+        })
+    }
+
+    fn current_bucket(&self) -> usize {
+        self.buckets[self.bucket_idx].0
+    }
+
+    /// Grow the KV cache into the next bucket, copying history.
+    fn migrate(&mut self) -> Result<()> {
+        let old_bucket = self.current_bucket();
+        self.bucket_idx += 1;
+        if self.bucket_idx >= self.buckets.len() {
+            bail!(
+                "{}: context {} exceeds the largest decode bucket",
+                self.model,
+                self.pos + 1
+            );
+        }
+        let new_bucket = self.current_bucket();
+        log_debug!("{}: kv bucket {} -> {}", self.model, old_bucket,
+                   new_bucket);
+        let (l, h, dh) = (self.layers, self.heads, self.head_dim);
+        let old = self.kv.as_f32()?.to_vec();
+        let mut new = vec![0.0f32; l * 2 * h * new_bucket * dh];
+        // Copy rows [li][kv][0][hi][t][:] — contiguous in dh.
+        for li in 0..l {
+            for kvi in 0..2 {
+                for hi in 0..h {
+                    for t in 0..old_bucket {
+                        let src =
+                            (((li * 2 + kvi) * h + hi) * old_bucket + t) * dh;
+                        let dst =
+                            (((li * 2 + kvi) * h + hi) * new_bucket + t) * dh;
+                        new[dst..dst + dh]
+                            .copy_from_slice(&old[src..src + dh]);
+                    }
+                }
+            }
+        }
+        self.kv = HostValue::f32(&[l, 2, 1, h, new_bucket, dh], new);
+        Ok(())
+    }
+
+    /// Feed one token; returns the logits for the next token.
+    pub fn push_token(&mut self, token: i32) -> Result<Vec<f32>> {
+        if self.pos >= self.current_bucket() {
+            self.migrate()?;
+        }
+        let module = &self.buckets[self.bucket_idx].1;
+        let mut inputs = self.params.clone();
+        inputs.push(self.kv.clone());
+        inputs.push(HostValue::s32(&[1], vec![token]));
+        inputs.push(HostValue::scalar_s32(self.pos as i32));
+        let outs = module.run(&inputs)?;
+        self.pos += 1;
+        let logits = outs[0].as_f32()?.to_vec();
+        self.kv = outs[1].clone();
+        Ok(logits)
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Mamba-style O(1) recurrent decode session.
+pub struct MambaSession<'rt> {
+    _rt: &'rt Runtime,
+    step: Module,
+    params: Vec<HostValue>,
+    state: HostValue,
+    pub vocab: usize,
+    pos: usize,
+}
+
+impl<'rt> MambaSession<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str, params: &ParamStore)
+        -> Result<Self> {
+        let spec = rt.model(model)?.clone();
+        let step = rt.load(model, "step")?;
+        let st_spec = step.spec.inputs[step.spec.inputs.len() - 2].clone();
+        let vocab = spec.cfg_usize("vocab")?;
+        Ok(MambaSession {
+            _rt: rt,
+            step,
+            params: params.to_values(),
+            state: HostValue::zeros_f32(&st_spec.shape),
+            vocab,
+            pos: 0,
+        })
+    }
+
+    /// Feed one token; returns next-token logits. Constant work/memory.
+    pub fn push_token(&mut self, token: i32) -> Result<Vec<f32>> {
+        let mut inputs = self.params.clone();
+        inputs.push(self.state.clone());
+        inputs.push(HostValue::s32(&[1], vec![token]));
+        let outs = self.step.run(&inputs)?;
+        self.pos += 1;
+        self.state = outs[1].clone();
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Streaming evaluators share this trait for the latency bench.
+pub trait TokenSession {
+    fn push(&mut self, token: i32) -> Result<Vec<f32>>;
+    fn name(&self) -> &'static str;
+}
+
+impl TokenSession for GptSession<'_> {
+    fn push(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.push_token(token)
+    }
+
+    fn name(&self) -> &'static str {
+        "gpt2-kv"
+    }
+}
+
+impl TokenSession for MambaSession<'_> {
+    fn push(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.push_token(token)
+    }
+
+    fn name(&self) -> &'static str {
+        "mamba-step"
+    }
+}
+
+impl TokenSession for super::stream::PsmSession<'_> {
+    fn push(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.push_token(token)
+    }
+
+    fn name(&self) -> &'static str {
+        "transformer-psm"
+    }
+}
+
+/// Helper: the error produced when a GPT session outruns its buckets.
+pub fn is_bucket_overflow(e: &anyhow::Error) -> bool {
+    e.to_string().contains("exceeds the largest decode bucket")
+}
+
+/// Convenience for tests: make an error.
+pub fn _anyhow_probe() -> anyhow::Error {
+    anyhow!("probe")
+}

@@ -1,0 +1,174 @@
+//! Dynamic batching policy for concurrent streaming sessions.
+//!
+//! PJRT executables are shape-specialised, so the batcher groups
+//! pending per-session `Inf` requests into the largest available batch
+//! bucket (e.g. B ∈ {1, 4}), padding the remainder. The policy object is
+//! pure (no PJRT dependency) so it is unit-testable; the server's
+//! executor thread applies its decisions.
+
+/// A pending request: one session wanting one Inf evaluation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pending {
+    pub session_id: u64,
+    /// Monotonic arrival stamp (for FIFO fairness).
+    pub arrival: u64,
+}
+
+/// Batching decision: which sessions to run together, at which bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub bucket: usize,
+    pub members: Vec<u64>,
+    /// Number of padded (wasted) slots.
+    pub padding: usize,
+}
+
+/// Dynamic batcher: FIFO queue + greedy largest-bucket policy with a
+/// max-wait deadline expressed in "ticks" (the executor polls once per
+/// loop iteration).
+#[derive(Debug)]
+pub struct Batcher {
+    /// Available batch buckets, ascending (e.g. [1, 4]).
+    buckets: Vec<usize>,
+    /// Wait at most this many ticks before dispatching a partial batch.
+    max_wait_ticks: u64,
+    queue: Vec<Pending>,
+    now: u64,
+    oldest_tick: Option<u64>,
+}
+
+impl Batcher {
+    pub fn new(mut buckets: Vec<usize>, max_wait_ticks: u64) -> Self {
+        assert!(!buckets.is_empty());
+        buckets.sort_unstable();
+        Batcher { buckets, max_wait_ticks, queue: Vec::new(), now: 0,
+                  oldest_tick: None }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue a session's request.
+    pub fn submit(&mut self, session_id: u64) {
+        if self.queue.is_empty() {
+            self.oldest_tick = Some(self.now);
+        }
+        self.queue.push(Pending { session_id, arrival: self.now });
+    }
+
+    /// Advance one executor tick; returns a plan if dispatch should
+    /// happen now.
+    pub fn tick(&mut self) -> Option<BatchPlan> {
+        self.now += 1;
+        if self.queue.is_empty() {
+            return None;
+        }
+        let biggest = *self.buckets.last().unwrap();
+        let waited = self.now - self.oldest_tick.unwrap_or(self.now);
+        if self.queue.len() >= biggest || waited >= self.max_wait_ticks {
+            return Some(self.dispatch());
+        }
+        None
+    }
+
+    /// Build the plan: the largest bucket <= queue length, or the
+    /// smallest bucket (with padding) when the deadline forces a partial
+    /// dispatch.
+    fn dispatch(&mut self) -> BatchPlan {
+        let n = self.queue.len();
+        // Largest bucket that is fully filled, else smallest bucket
+        // that fits everyone (padding), else biggest bucket chunk.
+        let bucket = self
+            .buckets
+            .iter()
+            .rev()
+            .find(|&&b| b <= n)
+            .copied()
+            .unwrap_or_else(|| {
+                *self
+                    .buckets
+                    .iter()
+                    .find(|&&b| b >= n)
+                    .unwrap_or(self.buckets.last().unwrap())
+            });
+        let take = bucket.min(n);
+        let members: Vec<u64> = self
+            .queue
+            .drain(..take)
+            .map(|p| p.session_id)
+            .collect();
+        self.oldest_tick = if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.now)
+        };
+        BatchPlan { bucket, padding: bucket - take, members }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_bucket_dispatches_immediately() {
+        let mut b = Batcher::new(vec![1, 4], 10);
+        for i in 0..4 {
+            b.submit(i);
+        }
+        let plan = b.tick().expect("should dispatch");
+        assert_eq!(plan.bucket, 4);
+        assert_eq!(plan.members, vec![0, 1, 2, 3]);
+        assert_eq!(plan.padding, 0);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn deadline_forces_partial_dispatch() {
+        let mut b = Batcher::new(vec![1, 4], 3);
+        b.submit(7);
+        assert!(b.tick().is_none());
+        assert!(b.tick().is_none());
+        let plan = b.tick().expect("deadline reached");
+        assert_eq!(plan.bucket, 1);
+        assert_eq!(plan.members, vec![7]);
+        assert_eq!(plan.padding, 0);
+    }
+
+    #[test]
+    fn partial_three_uses_bucket_one_thrice_or_four_padded() {
+        let mut b = Batcher::new(vec![1, 4], 1);
+        b.submit(1);
+        b.submit(2);
+        b.submit(3);
+        let plan = b.tick().expect("deadline");
+        // Largest fully-filled bucket <= 3 is 1; FIFO head departs.
+        assert_eq!(plan.bucket, 1);
+        assert_eq!(plan.members, vec![1]);
+        assert_eq!(b.queue_len(), 2);
+    }
+
+    #[test]
+    fn overflow_queue_dispatches_in_waves() {
+        let mut b = Batcher::new(vec![1, 4], 10);
+        for i in 0..9 {
+            b.submit(i);
+        }
+        let p1 = b.tick().unwrap();
+        assert_eq!(p1.bucket, 4);
+        let p2 = b.tick().unwrap();
+        assert_eq!(p2.bucket, 4);
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(vec![2], 100);
+        b.submit(10);
+        b.submit(11);
+        b.submit(12);
+        let plan = b.tick().unwrap();
+        assert_eq!(plan.members, vec![10, 11]);
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's inference contribution as a serving
+//! runtime.
+//!
+//! * [`stream`] — [`stream::PsmSession`]: Alg. 4 per-token streaming.
+//!   Chunk encodings, binary-counter roots and prefix states live as
+//!   *device-resident* PJRT buffers; only logits cross back to the host.
+//! * [`baseline`] — GPT-2-with-KV-cache (bucketed contexts) and Mamba
+//!   recurrent-step sessions for the Fig. 6 latency comparison.
+//! * [`batcher`] — dynamic batching of concurrent sessions' Inf calls.
+//! * [`server`] — a TCP line-protocol front end; connection threads
+//!   route requests over channels to the single executor thread that
+//!   owns the (non-`Send`) PJRT runtime.
+
+pub mod baseline;
+pub mod batcher;
+pub mod server;
+pub mod stream;
+
+pub use stream::{PsmSession, SessionMetrics};

@@ -1,0 +1,188 @@
+//! TCP serving front end.
+//!
+//! PJRT objects are not `Send`, so the architecture is: N connection
+//! threads parse a line protocol and send [`Request`]s over an mpsc
+//! channel to the single *executor* thread that owns the [`Runtime`]
+//! and all sessions; responses return over per-request channels. This
+//! is the shape a real single-accelerator serving process takes (cf.
+//! the vLLM router): routing and IO scale out in threads, device work
+//! is serialised on the owner.
+//!
+//! Protocol (one request per line):
+//!   GEN <n> <tok> <tok> ...   -> "OK <tok> <tok> ..." (greedy decode)
+//!   STATS                     -> "OK tokens=<n> sessions=<n>"
+//!   QUIT                      -> closes the connection
+//!
+//! Each connection gets its own streaming session (created lazily).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::stream::PsmSession;
+use crate::log_info;
+use crate::runtime::{ParamStore, Runtime};
+
+/// A request routed to the executor thread.
+pub enum Request {
+    /// Greedy-generate `n` tokens after feeding `prompt`.
+    Generate {
+        session: u64,
+        prompt: Vec<i32>,
+        n: usize,
+        reply: mpsc::Sender<Result<Vec<i32>>>,
+    },
+    /// Aggregate counters.
+    Stats { reply: mpsc::Sender<(u64, usize)> },
+    /// Tear down a session.
+    Close { session: u64 },
+    /// Stop the executor loop.
+    Shutdown,
+}
+
+/// Executor: owns the runtime and all sessions; single-threaded device
+/// work loop.
+pub fn executor_loop(
+    rt: &Runtime,
+    model: &str,
+    params: &ParamStore,
+    rx: mpsc::Receiver<Request>,
+) -> Result<()> {
+    let mut sessions: HashMap<u64, PsmSession> = HashMap::new();
+    let mut total_tokens: u64 = 0;
+    for req in rx {
+        match req {
+            Request::Generate { session, prompt, n, reply } => {
+                if !sessions.contains_key(&session) {
+                    sessions.insert(session,
+                                    PsmSession::new(rt, model, params)?);
+                }
+                let sess = sessions.get_mut(&session).unwrap();
+                let out = sess.generate(&prompt, n);
+                total_tokens += (prompt.len() + n) as u64;
+                let _ = reply.send(out);
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send((total_tokens, sessions.len()));
+            }
+            Request::Close { session } => {
+                sessions.remove(&session);
+            }
+            Request::Shutdown => break,
+        }
+    }
+    Ok(())
+}
+
+/// Serve `model` on `addr` until `stop` is set. Returns after the
+/// listener closes. Connection threads are detached; the executor runs
+/// on the *calling* thread (it owns the non-Send runtime).
+pub fn serve(
+    rt: &Runtime,
+    model: &str,
+    params: &ParamStore,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    log_info!("serving {model} on {addr}");
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let next_session = Arc::new(AtomicU64::new(0));
+
+    // Acceptor thread: hands connections to per-connection threads.
+    let acceptor = {
+        let tx = tx.clone();
+        let stop = stop.clone();
+        let next_session = next_session.clone();
+        std::thread::spawn(move || {
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        let id = next_session.fetch_add(1, Ordering::Relaxed);
+                        log_info!("conn {id} from {peer}");
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, id, tx);
+                        });
+                    }
+                    Err(ref e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(20),
+                        );
+                    }
+                    Err(e) => {
+                        log_info!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+            // Unblock the executor.
+            let _ = tx.send(Request::Shutdown);
+        })
+    };
+
+    executor_loop(rt, model, params, rx)?;
+    let _ = acceptor.join();
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    session: u64,
+    tx: mpsc::Sender<Request>,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("GEN") => {
+                let n: usize = parts
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(16);
+                let prompt: Vec<i32> = parts
+                    .filter_map(|s| s.parse().ok())
+                    .collect();
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request::Generate { session, prompt, n, reply: rtx })
+                    .ok();
+                match rrx.recv() {
+                    Ok(Ok(tokens)) => {
+                        let body: Vec<String> =
+                            tokens.iter().map(|t| t.to_string()).collect();
+                        writeln!(writer, "OK {}", body.join(" "))?;
+                    }
+                    Ok(Err(e)) => writeln!(writer, "ERR {e}")?,
+                    Err(_) => writeln!(writer, "ERR executor gone")?,
+                }
+            }
+            Some("STATS") => {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request::Stats { reply: rtx }).ok();
+                if let Ok((tokens, sessions)) = rrx.recv() {
+                    writeln!(writer,
+                             "OK tokens={tokens} sessions={sessions}")?;
+                }
+            }
+            Some("QUIT") | None => break,
+            Some(other) => writeln!(writer, "ERR unknown command {other}")?,
+        }
+    }
+    let _ = tx.send(Request::Close { session });
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! Alg. 4: per-token streaming inference for Transformer-PSM.
+//!
+//! The session keeps the binary-counter roots (Alg. 2) as PJRT device
+//! buffers; `Agg` merges and prefix folds run entirely on-device through
+//! the AOT `agg` artifact (non-tuple root ⇒ the output buffer feeds the
+//! next call with zero host copies). Per pushed token:
+//!
+//! 1. the partial chunk buffer is padded to `c` and re-encoded (`enc`),
+//! 2. `inf(prefix, enc)` produces logits; position `len-1` is the
+//!    next-token distribution (causal mask ⇒ padding is inert),
+//! 3. on chunk completion the encoding is pushed into the counter
+//!    (amortised ~1 `agg`/chunk) and the prefix fold (≤ log₂ r `agg`s)
+//!    is recomputed and cached.
+//!
+//! Memory: ⌈log₂(t/c+1)⌉ · c·d floats of device state — the paper's
+//! O(c log(n/c)) bound (Eq. C2) — versus O(n) for a KV cache.
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::{HostValue, Module, ParamStore, Runtime};
+
+/// Instrumentation counters for the complexity experiments (Eq. C2).
+#[derive(Clone, Debug, Default)]
+pub struct SessionMetrics {
+    pub tokens: u64,
+    pub enc_calls: u64,
+    pub agg_calls: u64,
+    pub inf_calls: u64,
+    /// Wall time spent in each phase (seconds).
+    pub enc_s: f64,
+    pub agg_s: f64,
+    pub inf_s: f64,
+    pub host_copy_s: f64,
+}
+
+impl SessionMetrics {
+    pub fn agg_calls_per_chunk(&self, chunk: usize) -> f64 {
+        let chunks = (self.tokens as f64 / chunk as f64).max(1.0);
+        self.agg_calls as f64 / chunks
+    }
+}
+
+/// One on-device `Agg` invocation (free function so callers can hold
+/// disjoint borrows of the session's fields).
+fn agg_call(
+    agg: &Module,
+    params: &[PjRtBuffer],
+    metrics: &mut SessionMetrics,
+    left: &PjRtBuffer,
+    right: &PjRtBuffer,
+) -> Result<PjRtBuffer> {
+    let t0 = std::time::Instant::now();
+    let mut args: Vec<&PjRtBuffer> = params.iter().collect();
+    args.push(left);
+    args.push(right);
+    let mut out = agg.run_buffers(&args)?;
+    metrics.agg_calls += 1;
+    metrics.agg_s += t0.elapsed().as_secs_f64();
+    Ok(out.pop().unwrap())
+}
+
+/// A single streaming Transformer-PSM inference session.
+pub struct PsmSession<'rt> {
+    rt: &'rt Runtime,
+    enc: Module,
+    agg: Module,
+    inf: Module,
+    param_bufs: Vec<PjRtBuffer>,
+    /// Learnable identity state e, broadcast to [1, c, d], on device.
+    identity: PjRtBuffer,
+    /// Binary-counter roots: roots[k] = aggregate of 2^k recent chunks.
+    roots: Vec<Option<PjRtBuffer>>,
+    /// Completed chunks so far.
+    chunk_count: u64,
+    /// Cached prefix state (recomputed on chunk completion).
+    prefix: PjRtBuffer,
+    /// Current partial chunk of raw tokens.
+    buf: Vec<i32>,
+    pub chunk: usize,
+    pub d: usize,
+    pub vocab: usize,
+    pub metrics: SessionMetrics,
+}
+
+impl<'rt> PsmSession<'rt> {
+    /// Open a session for `model` with the given parameters.
+    pub fn new(rt: &'rt Runtime, model: &str, params: &ParamStore)
+        -> Result<Self> {
+        let spec = rt.model(model)?.clone();
+        if spec.kind != "psm" {
+            bail!("{model} is kind {:?}, PsmSession needs a psm", spec.kind);
+        }
+        let enc = rt.load(model, "enc")?;
+        let agg = rt.load(model, "agg")?;
+        let inf = rt.load(model, "inf")?;
+        let chunk = spec.cfg_usize("chunk")?;
+        let d = spec.cfg_usize("d")?;
+        let vocab = spec.cfg_usize("vocab")?;
+
+        // Upload parameters once; they stay device-resident.
+        let param_bufs: Vec<PjRtBuffer> = params
+            .to_values()
+            .iter()
+            .map(|v| rt.to_device(v))
+            .collect::<Result<_>>()?;
+
+        // Device identity e = e_state[None] (learnable param).
+        let (eshape, edata) = params.get("e_state")?;
+        assert_eq!(eshape, &[chunk, d]);
+        let identity =
+            rt.to_device(&HostValue::f32(&[1, chunk, d], edata.to_vec()))?;
+        let prefix =
+            rt.to_device(&HostValue::f32(&[1, chunk, d], edata.to_vec()))?;
+
+        Ok(PsmSession {
+            rt,
+            enc,
+            agg,
+            inf,
+            param_bufs,
+            identity,
+            roots: Vec::new(),
+            chunk_count: 0,
+            prefix,
+            buf: Vec::with_capacity(chunk),
+            chunk,
+            d,
+            vocab,
+            metrics: SessionMetrics::default(),
+        })
+    }
+
+    fn run_enc(&mut self, tokens: &[i32]) -> Result<PjRtBuffer> {
+        let t0 = std::time::Instant::now();
+        let mut padded = tokens.to_vec();
+        padded.resize(self.chunk, 0);
+        let tok =
+            self.rt.to_device(&HostValue::s32(&[1, self.chunk], padded))?;
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tok);
+        let mut out = self.enc.run_buffers(&args)?;
+        self.metrics.enc_calls += 1;
+        self.metrics.enc_s += t0.elapsed().as_secs_f64();
+        Ok(out.pop().unwrap())
+    }
+
+    /// Binary-counter insert (Alg. 2 carry chain) + prefix fold, fully
+    /// device-side.
+    fn push_chunk(&mut self, x: PjRtBuffer) -> Result<()> {
+        let mut carry = x;
+        let mut k = 0usize;
+        loop {
+            if k == self.roots.len() {
+                self.roots.push(None);
+            }
+            match self.roots[k].take() {
+                Some(root) => {
+                    carry = agg_call(&self.agg, &self.param_bufs,
+                                     &mut self.metrics, &root, &carry)?;
+                    k += 1;
+                }
+                None => {
+                    self.roots[k] = Some(carry);
+                    break;
+                }
+            }
+        }
+        self.chunk_count += 1;
+
+        // Recompute the cached prefix: MSB -> LSB fold starting from the
+        // learned identity e — exactly the static downsweep's grouping
+        // (Thm 3.5), so serving reproduces the training parenthesisation.
+        let mut p: Option<PjRtBuffer> = None;
+        for root in self.roots.iter().rev().flatten() {
+            let left = p.as_ref().unwrap_or(&self.identity);
+            let merged = agg_call(&self.agg, &self.param_bufs,
+                                  &mut self.metrics, left, root)?;
+            p = Some(merged);
+        }
+        self.prefix = match p {
+            Some(b) => b,
+            None => clone_buffer(self.rt, &self.identity)?,
+        };
+        Ok(())
+    }
+
+    /// Feed one token; returns the next-token logits (host, length
+    /// `vocab`) predicted *after* this token.
+    pub fn push_token(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.buf.push(token);
+        self.metrics.tokens += 1;
+
+        // Encode the (padded) partial chunk and run Inf on the cached
+        // prefix. Under the causal mask the pad positions cannot affect
+        // position len-1, so the partial-chunk logits are exact.
+        let xe = self.run_enc(&self.buf.clone())?;
+        let t0 = std::time::Instant::now();
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&self.prefix);
+        args.push(&xe);
+        let out = self.inf.run_buffers(&args)?;
+        self.metrics.inf_calls += 1;
+        self.metrics.inf_s += t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let host = self.inf.buffers_to_host(&out)?;
+        self.metrics.host_copy_s += t1.elapsed().as_secs_f64();
+        let logits = host[0].as_f32()?;
+        let pos = self.buf.len() - 1;
+        let row = &logits[pos * self.vocab..(pos + 1) * self.vocab];
+        let result = row.to_vec();
+
+        // Chunk completion: insert into the counter.
+        if self.buf.len() == self.chunk {
+            self.push_chunk(xe)?;
+            self.buf.clear();
+        }
+        Ok(result)
+    }
+
+    /// Per-position predictions for a whole sequence (streaming). Row t
+    /// is the model's output distribution at position t given tokens
+    /// 0..=t — the label prediction in tagging mode (S5/MQAR), the
+    /// next-token distribution in LM mode. Matches the training logits
+    /// position for position, so eval can run at lengths far beyond the
+    /// static `fwd` artifact (the Fig. 3 length-generalization path).
+    pub fn logits_stream(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        tokens.iter().map(|&t| self.push_token(t)).collect()
+    }
+
+    /// Greedy-decode `n` tokens starting from `prompt`.
+    pub fn generate(&mut self, prompt: &[i32], n: usize) -> Result<Vec<i32>> {
+        let mut last = 0i32;
+        for &t in prompt {
+            let logits = self.push_token(t)?;
+            last = argmax(&logits) as i32;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(last);
+            let logits = self.push_token(last)?;
+            last = argmax(&logits) as i32;
+        }
+        Ok(out)
+    }
+
+    /// Occupied counter roots (device-state footprint in chunks) —
+    /// must satisfy Cor 3.6's popcount bound, asserted in tests.
+    pub fn occupied_roots(&self) -> usize {
+        self.roots.iter().filter(|r| r.is_some()).count()
+    }
+
+    pub fn chunk_count(&self) -> u64 {
+        self.chunk_count
+    }
+
+    /// Reset the stream (parameters stay resident).
+    pub fn reset(&mut self) -> Result<()> {
+        self.roots.clear();
+        self.chunk_count = 0;
+        self.buf.clear();
+        self.prefix = clone_buffer(self.rt, &self.identity)?;
+        self.metrics = SessionMetrics::default();
+        Ok(())
+    }
+}
+
+/// PjRtBuffer is not Clone; round-trip through a literal (c·d floats).
+fn clone_buffer(rt: &Runtime, b: &PjRtBuffer) -> Result<PjRtBuffer> {
+    let lit = b.to_literal_sync()?;
+    Ok(rt.client.buffer_from_host_literal(None, &lit)?)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}

@@ -1,0 +1,105 @@
+//! Flat batch container: the (tokens, labels, mask) triple every model's
+//! `train_step` / `fwd` artifact consumes, in row-major [B, n] layout.
+
+use crate::runtime::HostValue;
+
+/// One training/eval batch. `labels[i] = -1` (with `mask = 0`) marks
+/// ignored positions; `mask` is f32 so it multiplies straight into the
+//  loss inside HLO.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl Batch {
+    pub fn new(batch: usize, seq_len: usize) -> Self {
+        let n = batch * seq_len;
+        Batch {
+            batch,
+            seq_len,
+            tokens: vec![0; n],
+            labels: vec![0; n],
+            mask: vec![0.0; n],
+        }
+    }
+
+    pub fn idx(&self, b: usize, t: usize) -> usize {
+        b * self.seq_len + t
+    }
+
+    pub fn set(&mut self, b: usize, t: usize, token: i32, label: i32,
+               mask: f32) {
+        let i = self.idx(b, t);
+        self.tokens[i] = token;
+        self.labels[i] = label;
+        self.mask[i] = mask;
+    }
+
+    /// As HostValues in the (tokens, labels, mask) order the artifacts
+    /// expect.
+    pub fn to_values(&self) -> [HostValue; 3] {
+        let shape = [self.batch, self.seq_len];
+        [
+            HostValue::s32(&shape, self.tokens.clone()),
+            HostValue::s32(&shape, self.labels.clone()),
+            HostValue::f32(&shape, self.mask.clone()),
+        ]
+    }
+
+    /// Stack K batches into [K, B, n] values for `train_block`.
+    pub fn stack(batches: &[Batch]) -> [HostValue; 3] {
+        assert!(!batches.is_empty());
+        let (b, n) = (batches[0].batch, batches[0].seq_len);
+        let k = batches.len();
+        let mut tokens = Vec::with_capacity(k * b * n);
+        let mut labels = Vec::with_capacity(k * b * n);
+        let mut mask = Vec::with_capacity(k * b * n);
+        for batch in batches {
+            assert_eq!(batch.batch, b);
+            assert_eq!(batch.seq_len, n);
+            tokens.extend_from_slice(&batch.tokens);
+            labels.extend_from_slice(&batch.labels);
+            mask.extend_from_slice(&batch.mask);
+        }
+        let shape = [k, b, n];
+        [
+            HostValue::s32(&shape, tokens),
+            HostValue::s32(&shape, labels),
+            HostValue::f32(&shape, mask),
+        ]
+    }
+
+    /// Fraction of positions with non-zero mask.
+    pub fn mask_density(&self) -> f64 {
+        let on = self.mask.iter().filter(|&&m| m > 0.0).count();
+        on as f64 / self.mask.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_layout() {
+        let mut b = Batch::new(2, 3);
+        b.set(1, 2, 7, 8, 1.0);
+        assert_eq!(b.tokens[5], 7);
+        assert_eq!(b.labels[5], 8);
+        assert_eq!(b.mask[5], 1.0);
+        assert!((b.mask_density() - 1.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stack_shapes() {
+        let batches: Vec<Batch> = (0..4).map(|_| Batch::new(2, 3)).collect();
+        let [t, l, m] = Batch::stack(&batches);
+        assert_eq!(t.shape(), &[4, 2, 3]);
+        assert_eq!(l.shape(), &[4, 2, 3]);
+        assert_eq!(m.shape(), &[4, 2, 3]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Synthetic Zipf-HMM corpus — the WikiText-103 stand-in (DESIGN.md
+//! §Substitutions: no network access in this environment).
+//!
+//! A hidden Markov "topic" chain (T states, sticky transitions) emits
+//! byte tokens from per-state Zipfian unigram distributions over
+//! state-specific vocabulary slices, with a global whitespace/common
+//! token band. The result has (a) Zipfian marginal statistics, (b)
+//! local predictability (within-topic bigram structure), and (c)
+//! long-range dependence (topic persistence) — enough structure that
+//! perplexity separates models and improves with effective context, the
+//! property Fig. 5 measures.
+
+use super::batch::Batch;
+use crate::util::prng::{Rng, Zipf};
+
+/// Corpus hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    pub n_topics: usize,
+    /// Probability of staying in the current topic per step.
+    pub stickiness: f64,
+    /// Zipf exponent of the per-topic unigram distributions.
+    pub zipf_s: f64,
+    /// Fraction of the vocab shared across topics (function words).
+    pub common_frac: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 256,
+            n_topics: 8,
+            stickiness: 0.98,
+            zipf_s: 1.1,
+            common_frac: 0.25,
+        }
+    }
+}
+
+/// A deterministic synthetic corpus stream.
+pub struct Corpus {
+    cfg: CorpusConfig,
+    zipf_common: Zipf,
+    zipf_topic: Zipf,
+    common: usize,
+    per_topic: usize,
+    state: usize,
+    rng: Rng,
+}
+
+impl Corpus {
+    pub fn new(cfg: CorpusConfig, seed: u64) -> Self {
+        let common = ((cfg.vocab as f64) * cfg.common_frac) as usize;
+        let per_topic = (cfg.vocab - common) / cfg.n_topics;
+        assert!(per_topic >= 4, "vocab too small for {} topics",
+                cfg.n_topics);
+        Corpus {
+            zipf_common: Zipf::new(common, cfg.zipf_s),
+            zipf_topic: Zipf::new(per_topic, cfg.zipf_s),
+            common,
+            per_topic,
+            state: 0,
+            rng: Rng::new(seed),
+            cfg,
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    /// Next token of the stream.
+    pub fn next_token(&mut self) -> i32 {
+        // Topic transition.
+        if !self.rng.bernoulli(self.cfg.stickiness) {
+            self.state = self.rng.below(self.cfg.n_topics as u64) as usize;
+        }
+        // Emit: 40% common band, 60% topic band.
+        if self.rng.bernoulli(0.4) {
+            self.zipf_common.sample(&mut self.rng) as i32
+        } else {
+            (self.common
+                + self.state * self.per_topic
+                + self.zipf_topic.sample(&mut self.rng)) as i32
+        }
+    }
+
+    /// Generate `n` tokens.
+    pub fn tokens(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.next_token()).collect()
+    }
+
+    /// Next-token-prediction LM batch: labels are tokens shifted left by
+    /// one, all real positions masked in (last position of each row is
+    /// masked out — it has no target).
+    pub fn lm_batch(&mut self, batch_size: usize, seq_len: usize) -> Batch {
+        let mut b = Batch::new(batch_size, seq_len);
+        for row in 0..batch_size {
+            let toks = self.tokens(seq_len + 1);
+            for t in 0..seq_len {
+                b.set(row, t, toks[t], toks[t + 1], 1.0);
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range() {
+        let mut c = Corpus::new(CorpusConfig::default(), 1);
+        for t in c.tokens(10_000) {
+            assert!((0..256).contains(&t));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Corpus::new(CorpusConfig::default(), 42);
+        let mut b = Corpus::new(CorpusConfig::default(), 42);
+        assert_eq!(a.tokens(512), b.tokens(512));
+    }
+
+    #[test]
+    fn zipfian_head() {
+        // The most frequent token should dominate the median token.
+        let mut c = Corpus::new(CorpusConfig::default(), 3);
+        let mut counts = vec![0usize; 256];
+        for t in c.tokens(100_000) {
+            counts[t as usize] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(sorted[0] > 8 * sorted[100].max(1));
+    }
+
+    #[test]
+    fn topic_persistence_creates_local_correlation() {
+        // Consecutive tokens share a topic band far more often than
+        // independent draws would (long-range structure exists).
+        let cfg = CorpusConfig::default();
+        let common = ((cfg.vocab as f64) * cfg.common_frac) as usize;
+        let per_topic = (cfg.vocab - common) / cfg.n_topics;
+        let band = |t: i32| -> Option<usize> {
+            let t = t as usize;
+            if t < common { None } else { Some((t - common) / per_topic) }
+        };
+        let mut c = Corpus::new(cfg.clone(), 5);
+        let toks = c.tokens(50_000);
+        let mut same = 0usize;
+        let mut pairs = 0usize;
+        let mut last_band: Option<usize> = None;
+        for &t in &toks {
+            if let Some(b) = band(t) {
+                if let Some(lb) = last_band {
+                    pairs += 1;
+                    if lb == b {
+                        same += 1;
+                    }
+                }
+                last_band = Some(b);
+            }
+        }
+        let frac = same as f64 / pairs as f64;
+        assert!(frac > 0.5, "topic-band agreement {frac} too low");
+    }
+
+    #[test]
+    fn lm_batch_shift() {
+        let mut c = Corpus::new(CorpusConfig::default(), 7);
+        let b = c.lm_batch(2, 16);
+        // label[t] should be a plausible continuation: we can't recover
+        // tokens[t+1] directly (labels use the extra generated token at
+        // the end), but within a row labels[t] == tokens[t+1] for t <
+        // seq_len-1.
+        for row in 0..2 {
+            for t in 0..15 {
+                assert_eq!(b.labels[b.idx(row, t)], b.tokens[b.idx(row, t + 1)]);
+            }
+            assert_eq!(b.mask[b.idx(row, 15)], 1.0);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Task generators for the paper's three experiment families:
+//! S5 state tracking (Fig. 3), MQAR with uniform queries (Fig. 4), and
+//! a synthetic Zipf-HMM corpus standing in for WikiText-103 (Fig. 5 —
+//! see DESIGN.md §Substitutions).
+
+pub mod batch;
+pub mod corpus;
+pub mod mqar;
+pub mod s5;
+
+pub use batch::Batch;

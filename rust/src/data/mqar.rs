@@ -1,0 +1,177 @@
+//! Multi-Query Associative Recall (Sec. 4.2; Arora et al. 2023), in the
+//! paper's *harder* variant: queries are sampled **uniformly** over
+//! positions after the key-value prelude rather than shortly after the
+//! key's first appearance.
+//!
+//! Layout of one sequence:
+//!   [ k₁ v₁ k₂ v₂ ... k_P v_P | filler/query region ]
+//! In the query region, each of the P keys is queried exactly once at a
+//! uniformly random position (label = its value, mask = 1); remaining
+//! positions are filler tokens (mask = 0).
+//!
+//! Token space: keys ∈ [0, n_keys), values ∈ [n_keys, n_keys + n_vals),
+//! filler ∈ [n_keys + n_vals, vocab).
+
+use super::batch::Batch;
+use crate::util::prng::Rng;
+
+/// MQAR task parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MqarConfig {
+    pub vocab: usize,
+    pub n_pairs: usize,
+    pub seq_len: usize,
+}
+
+impl Default for MqarConfig {
+    fn default() -> Self {
+        // Matches the aot.py psm_mqar configs: vocab 512, 8 pairs.
+        MqarConfig { vocab: 512, n_pairs: 8, seq_len: 256 }
+    }
+}
+
+impl MqarConfig {
+    pub fn n_keys(&self) -> usize {
+        self.vocab / 4
+    }
+
+    pub fn n_vals(&self) -> usize {
+        self.vocab / 4
+    }
+
+    fn filler_base(&self) -> usize {
+        self.n_keys() + self.n_vals()
+    }
+}
+
+/// One (tokens, labels, mask) sequence.
+pub fn sequence(cfg: &MqarConfig, rng: &mut Rng)
+    -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let p = cfg.n_pairs;
+    let prelude = 2 * p;
+    assert!(cfg.seq_len >= prelude + p, "seq too short for {p} pairs");
+
+    let keys = rng.sample_distinct(cfg.n_keys(), p);
+    let vals: Vec<usize> = (0..p)
+        .map(|_| cfg.n_keys() + rng.below(cfg.n_vals() as u64) as usize)
+        .collect();
+
+    let mut tokens = vec![0i32; cfg.seq_len];
+    let mut labels = vec![0i32; cfg.seq_len];
+    let mut mask = vec![0f32; cfg.seq_len];
+
+    for i in 0..p {
+        tokens[2 * i] = keys[i] as i32;
+        tokens[2 * i + 1] = vals[i] as i32;
+    }
+
+    // Fill the tail with filler tokens.
+    for t in prelude..cfg.seq_len {
+        tokens[t] =
+            (cfg.filler_base() + rng.below((cfg.vocab - cfg.filler_base())
+                                           as u64) as usize) as i32;
+    }
+
+    // Uniform query positions: each key queried once, anywhere after the
+    // prelude (this is what makes the task harder than the standard
+    // "query soon after key" setting).
+    let positions = rng.sample_distinct(cfg.seq_len - prelude, p);
+    for (i, &off) in positions.iter().enumerate() {
+        let t = prelude + off;
+        tokens[t] = keys[i] as i32; // re-present the key as the query
+        labels[t] = vals[i] as i32; // model must recall its value
+        mask[t] = 1.0;
+    }
+
+    (tokens, labels, mask)
+}
+
+/// Build a [B, seq_len] batch.
+pub fn batch(cfg: &MqarConfig, rng: &mut Rng, batch_size: usize) -> Batch {
+    let mut b = Batch::new(batch_size, cfg.seq_len);
+    for row in 0..batch_size {
+        let (toks, labs, msk) = sequence(cfg, rng);
+        for t in 0..cfg.seq_len {
+            b.set(row, t, toks[t], labs[t], msk[t]);
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn each_key_queried_once() {
+        let cfg = MqarConfig { vocab: 64, n_pairs: 4, seq_len: 32 };
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let (tokens, labels, mask) = sequence(&cfg, &mut rng);
+            let queried: usize =
+                mask.iter().filter(|&&m| m > 0.0).count();
+            assert_eq!(queried, 4);
+            // Every queried key maps to its prelude value.
+            for t in 0..cfg.seq_len {
+                if mask[t] > 0.0 {
+                    let key = tokens[t];
+                    // find the key in the prelude
+                    let i = (0..4)
+                        .find(|&i| tokens[2 * i] == key)
+                        .expect("query must re-present a prelude key");
+                    assert_eq!(labels[t], tokens[2 * i + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn token_ranges_disjoint() {
+        let cfg = MqarConfig { vocab: 64, n_pairs: 4, seq_len: 32 };
+        let mut rng = Rng::new(2);
+        let (tokens, _, mask) = sequence(&cfg, &mut rng);
+        for (t, &tok) in tokens.iter().enumerate() {
+            if t < 8 {
+                if t % 2 == 0 {
+                    assert!((tok as usize) < cfg.n_keys());
+                } else {
+                    assert!((tok as usize) >= cfg.n_keys()
+                        && (tok as usize) < cfg.n_keys() + cfg.n_vals());
+                }
+            } else if mask[t] == 0.0 {
+                assert!((tok as usize) >= cfg.n_keys() + cfg.n_vals());
+            }
+        }
+    }
+
+    #[test]
+    fn queries_spread_uniformly() {
+        // Mean query offset should be ~ (region/2); a "query right after
+        // prelude" bias would show up as a much smaller mean.
+        let cfg = MqarConfig { vocab: 128, n_pairs: 4, seq_len: 128 };
+        let mut rng = Rng::new(3);
+        let mut sum = 0.0;
+        let mut count = 0.0;
+        for _ in 0..200 {
+            let (_, _, mask) = sequence(&cfg, &mut rng);
+            for (t, &m) in mask.iter().enumerate() {
+                if m > 0.0 {
+                    sum += t as f64;
+                    count += 1.0;
+                }
+            }
+        }
+        let mean = sum / count;
+        let expect = 8.0 + (128.0 - 8.0) / 2.0;
+        assert!((mean - expect).abs() < 6.0, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn batch_dims() {
+        let cfg = MqarConfig::default();
+        let mut rng = Rng::new(4);
+        let b = batch(&cfg, &mut rng, 3);
+        assert_eq!(b.tokens.len(), 3 * 256);
+        assert!((b.mask_density() - 8.0 / 256.0).abs() < 1e-9);
+    }
+}

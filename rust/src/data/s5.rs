@@ -1,0 +1,175 @@
+//! S₅ state tracking (Sec. 4.1): compose a stream of permutations of 5
+//! elements and predict the running composition at every step — the
+//! "permute cups and balls" task, NC¹-complete (Barrington 1986) and the
+//! canonical separator between constant-depth models and state trackers.
+//!
+//! Vocabulary: all 120 permutations of S₅, id 0..119 (lexicographic
+//! rank), plus BOS = 120. At position t the input is the t-th
+//! permutation token g_t and the label is the rank of the composition
+//! g_t ∘ ... ∘ g_1 ∘ g_0.
+
+use super::batch::Batch;
+use crate::util::prng::Rng;
+
+pub const N: usize = 5;
+pub const N_PERMS: usize = 120;
+pub const BOS: i32 = 120;
+pub const VOCAB: usize = 122; // 120 perms + BOS + 1 pad
+
+/// A permutation of {0..4}: `map[i]` is the image of i.
+pub type Perm = [u8; N];
+
+pub const IDENTITY: Perm = [0, 1, 2, 3, 4];
+
+/// Compose: `(a ∘ b)[i] = a[b[i]]` (apply b first, then a).
+pub fn compose(a: &Perm, b: &Perm) -> Perm {
+    let mut out = [0u8; N];
+    for i in 0..N {
+        out[i] = a[b[i] as usize];
+    }
+    out
+}
+
+/// Lexicographic rank of a permutation in 0..120 (Lehmer code).
+pub fn rank(p: &Perm) -> usize {
+    let mut r = 0usize;
+    let mut fact = 24; // 4!
+    for i in 0..N {
+        // Lehmer digit: remaining elements to the right smaller than p[i].
+        let less = p[i + 1..].iter().filter(|&&x| x < p[i]).count();
+        r += less * fact;
+        if i < N - 1 {
+            fact /= N - 1 - i;
+        }
+    }
+    r
+}
+
+/// Inverse of [`rank`]: the permutation with the given lexicographic rank.
+pub fn unrank(mut r: usize) -> Perm {
+    assert!(r < N_PERMS);
+    let mut avail: Vec<u8> = (0..N as u8).collect();
+    let mut fact = 24;
+    let mut out = [0u8; N];
+    for i in 0..N {
+        let idx = r / fact;
+        r %= fact;
+        out[i] = avail.remove(idx);
+        if i < N - 1 {
+            fact /= N - 1 - i;
+        }
+    }
+    out
+}
+
+/// Generate one sequence: `len` random permutation tokens with the
+/// running-composition labels. Returns (tokens, labels).
+pub fn sequence(rng: &mut Rng, len: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut tokens = Vec::with_capacity(len);
+    let mut labels = Vec::with_capacity(len);
+    let mut acc = IDENTITY;
+    for _ in 0..len {
+        let g = rng.below(N_PERMS as u64) as usize;
+        let perm = unrank(g);
+        acc = compose(&perm, &acc);
+        tokens.push(g as i32);
+        labels.push(rank(&acc) as i32);
+    }
+    (tokens, labels)
+}
+
+/// Build a training batch of sequences of length `len`, padded to
+/// `seq_len` (mask 0 past `len`). Label at every real position.
+pub fn batch(rng: &mut Rng, batch_size: usize, len: usize, seq_len: usize)
+    -> Batch {
+    assert!(len <= seq_len);
+    let mut b = Batch::new(batch_size, seq_len);
+    for row in 0..batch_size {
+        let (toks, labs) = sequence(rng, len);
+        for t in 0..seq_len {
+            if t < len {
+                b.set(row, t, toks[t], labs[t], 1.0);
+            } else {
+                b.set(row, t, BOS, 0, 0.0);
+            }
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_unrank_bijection() {
+        for r in 0..N_PERMS {
+            assert_eq!(rank(&unrank(r)), r);
+        }
+    }
+
+    #[test]
+    fn identity_has_rank_zero() {
+        assert_eq!(rank(&IDENTITY), 0);
+        assert_eq!(unrank(0), IDENTITY);
+    }
+
+    #[test]
+    fn compose_with_identity() {
+        for r in [0, 17, 63, 119] {
+            let p = unrank(r);
+            assert_eq!(compose(&p, &IDENTITY), p);
+            assert_eq!(compose(&IDENTITY, &p), p);
+        }
+    }
+
+    #[test]
+    fn compose_is_group_op() {
+        // (a∘b)∘c == a∘(b∘c) and every composition is a permutation.
+        let a = unrank(10);
+        let b = unrank(20);
+        let c = unrank(30);
+        assert_eq!(compose(&compose(&a, &b), &c),
+                   compose(&a, &compose(&b, &c)));
+        let ab = compose(&a, &b);
+        let mut seen = [false; N];
+        for &x in &ab {
+            assert!(!seen[x as usize]);
+            seen[x as usize] = true;
+        }
+    }
+
+    #[test]
+    fn labels_track_composition() {
+        let mut rng = Rng::new(5);
+        let (toks, labs) = sequence(&mut rng, 16);
+        let mut acc = IDENTITY;
+        for (g, lab) in toks.iter().zip(&labs) {
+            acc = compose(&unrank(*g as usize), &acc);
+            assert_eq!(rank(&acc) as i32, *lab);
+        }
+    }
+
+    #[test]
+    fn batch_masking() {
+        let mut rng = Rng::new(6);
+        let b = batch(&mut rng, 4, 10, 32);
+        assert!((b.mask_density() - 10.0 / 32.0).abs() < 1e-9);
+        // Padded positions carry BOS.
+        assert_eq!(b.tokens[b.idx(0, 31)], BOS);
+    }
+
+    #[test]
+    fn labels_are_nearly_uniform_over_s5() {
+        // The composition of uniform random permutations is uniform.
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0usize; N_PERMS];
+        for _ in 0..2000 {
+            let (_, labs) = sequence(&mut rng, 8);
+            counts[labs[7] as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max < 60 && min > 0, "min={min} max={max}");
+    }
+}

@@ -1,0 +1,48 @@
+//! # psm — Prefix-Scannable Models
+//!
+//! A production-shaped reproduction of *"Sequential-Parallel Duality in
+//! Prefix-Scannable Models"* (CS.LG 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's *inference* contribution: the
+//!   online binary-counter scan ([`scan::counter`], Alg. 2/4) driving
+//!   streaming sessions, chunk buffering, dynamic batching and serving
+//!   ([`coordinator`]), plus the full training driver ([`train`]), task
+//!   generators ([`data`]) and the bench harness ([`bench`]).
+//! * **Layer 2 (JAX, build-time)** — Transformer-PSM and baselines, AOT
+//!   lowered to HLO text in `artifacts/` (never imported at runtime).
+//! * **Layer 1 (Pallas, build-time)** — fused attention and chunked
+//!   affine-scan kernels inside the Layer-2 graphs.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) — the binary is self-contained once `make artifacts` has
+//! run.
+//!
+//! The algorithmic core ([`scan`], [`affine`]) is pure Rust and mirrors
+//! the paper's Sec. 3: a static Blelloch scan (training-time
+//! parenthesisation) and an online binary-counter scan that reproduces
+//! *exactly* the same parenthesisation in `O(log n)` space (Thm 3.5,
+//! Cor 3.6) — for arbitrary, possibly non-associative aggregators.
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts              # python: AOT-lower models to artifacts/
+//! cargo run --release --example quickstart
+//! cargo run --release -- train --model psm_s5 --steps 200
+//! cargo run --release -- bench fig6
+//! ```
+
+pub mod affine;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod scan;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

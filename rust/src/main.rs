@@ -1,0 +1,216 @@
+//! `psm` — command-line launcher for the Prefix-Scannable Models stack.
+//!
+//! ```text
+//! psm train --model psm_s5 --steps 200 [--seed 42] [--checkpoint p.ckpt]
+//! psm eval  --model psm_s5 --checkpoint p.ckpt [--task s5|mqar|lm]
+//! psm serve --model psm_lm_c16 [--addr 127.0.0.1:7433] [--checkpoint ..]
+//! psm gen   --model psm_lm_c16 --tokens 32 [--prompt "1 2 3"]
+//! psm models                      # list manifest entries
+//! psm check                       # verify every artifact loads
+//! ```
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use psm::config::RunConfig;
+use psm::coordinator::PsmSession;
+use psm::data::{corpus, mqar, s5};
+use psm::runtime::{ParamStore, Runtime};
+use psm::train::{eval::Evaluator, Curriculum, Trainer};
+use psm::util::cli::Args;
+use psm::util::prng::Rng;
+use psm::log_info;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "gen" => cmd_gen(&args),
+        "models" => cmd_models(&args),
+        "check" => cmd_check(&args),
+        _ => {
+            eprintln!(
+                "usage: psm <train|eval|serve|gen|models|check> [options]"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Pick the data generator matching a model's task family.
+fn batch_source<'a>(
+    model: &str,
+    bsz: usize,
+    seq: usize,
+    seed: u64,
+    steps: usize,
+) -> Box<dyn FnMut() -> psm::data::Batch + 'a> {
+    let mut rng = Rng::new(seed);
+    if model.contains("s5") {
+        let cur = Curriculum::s5(steps);
+        let mut step = 0usize;
+        Box::new(move |
+        | {
+            let len = cur.sample_len(&mut rng, step);
+            step += 1;
+            s5::batch(&mut rng, bsz, len, seq)
+        })
+    } else if model.contains("mqar") {
+        let cfg = mqar::MqarConfig { seq_len: seq, ..Default::default() };
+        Box::new(move || mqar::batch(&cfg, &mut rng, bsz))
+    } else {
+        let mut c = corpus::Corpus::new(corpus::CorpusConfig::default(), seed);
+        Box::new(move || c.lm_batch(bsz, seq))
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args, "psm_s5")?;
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let mut trainer = Trainer::new(&rt, &cfg.model, cfg.seed as i32)?;
+    let (bsz, seq) = trainer.batch_shape();
+    let steps = if cfg.quick { cfg.steps.min(8) } else { cfg.steps };
+    let src = batch_source(&cfg.model, bsz, seq, cfg.seed, steps);
+    trainer.run(steps, src)?;
+    let ckpt = cfg
+        .checkpoint
+        .unwrap_or_else(|| psm::config::checkpoint_path(&cfg.model));
+    if let Some(dir) = ckpt.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    trainer.save(&ckpt)?;
+    log_info!("saved checkpoint to {ckpt:?}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args, "psm_s5")?;
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let spec = rt.model(&cfg.model)?.clone();
+    let params = match &cfg.checkpoint {
+        Some(p) => ParamStore::load(&spec, p)?,
+        None => {
+            let p = psm::config::checkpoint_path(&cfg.model);
+            if p.exists() {
+                ParamStore::load(&spec, &p)?
+            } else {
+                bail!("no checkpoint; train first or pass --checkpoint")
+            }
+        }
+    };
+    let ev = Evaluator::new(&rt, &cfg.model, "fwd")?;
+    let mut src =
+        batch_source(&cfg.model, ev.batch, ev.seq_len, cfg.seed + 1, 0);
+    let batches: Vec<_> = (0..4).map(|_| src()).collect();
+    let mut err = 0.0;
+    for b in &batches {
+        err += ev.error_rate(&params, b)?;
+    }
+    println!("model={} error_rate={:.4}", cfg.model, err / 4.0);
+    if cfg.model.contains("lm") {
+        let ppl =
+            psm::train::eval::mean_perplexity(&ev, &params, &batches)?;
+        println!("perplexity={ppl:.2}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args, "psm_lm_c16")?;
+    let addr = args.str_or("addr", "127.0.0.1:7433");
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let spec = rt.model(&cfg.model)?.clone();
+    let params = match &cfg.checkpoint {
+        Some(p) => ParamStore::load(&spec, p)?,
+        None => ParamStore::init(&rt, &cfg.model, cfg.seed as i32)?,
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    psm::coordinator::server::serve(&rt, &cfg.model, &params, &addr, stop)
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args, "psm_lm_c16")?;
+    let n = args.usize_or("tokens", 32)?;
+    let prompt: Vec<i32> = args
+        .str_or("prompt", "1 2 3")
+        .split_whitespace()
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let spec = rt.model(&cfg.model)?.clone();
+    let params = match &cfg.checkpoint {
+        Some(p) => ParamStore::load(&spec, p)?,
+        None => ParamStore::init(&rt, &cfg.model, cfg.seed as i32)?,
+    };
+    let mut sess = PsmSession::new(&rt, &cfg.model, &params)?;
+    let out = sess.generate(&prompt, n)?;
+    println!(
+        "{}",
+        out.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+    );
+    let m = &sess.metrics;
+    log_info!(
+        "tokens={} enc={} agg={} inf={} roots={} (agg/chunk={:.2})",
+        m.tokens, m.enc_calls, m.agg_calls, m.inf_calls,
+        sess.occupied_roots(), m.agg_calls_per_chunk(sess.chunk)
+    );
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args, "psm_s5")?;
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    for (name, spec) in &rt.manifest.models {
+        println!(
+            "{name:<16} kind={:<5} params={:<3} ({:.2}M elems) entries: {}",
+            spec.kind,
+            spec.n_params(),
+            spec.param_elems() as f64 / 1e6,
+            spec.artifacts.keys().cloned().collect::<Vec<_>>().join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args, "psm_s5")?;
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let mut failures = 0;
+    let names: Vec<String> = rt.manifest.models.keys().cloned().collect();
+    for name in names {
+        let entries: Vec<String> = rt
+            .manifest
+            .model(&name)?
+            .artifacts
+            .keys()
+            .cloned()
+            .collect();
+        for entry in entries {
+            match rt.load(&name, &entry) {
+                Ok(_) => println!("ok   {name}/{entry}"),
+                Err(e) => {
+                    println!("FAIL {name}/{entry}: {e}");
+                    failures += 1;
+                }
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} artifacts failed to load");
+    }
+    Ok(())
+}

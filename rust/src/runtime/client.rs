@@ -1,0 +1,187 @@
+//! PJRT client wrapper: loads HLO-text artifacts, compiles once, caches
+//! executables, and provides typed execution over [`HostValue`]s or
+//! device-resident [`xla::PjRtBuffer`]s.
+//!
+//! Adapted from the /opt/xla-example/load_hlo reference: HLO *text* is
+//! the interchange format (`HloModuleProto::from_text_file` reassigns
+//! the 64-bit instruction ids jax >= 0.5 emits, which xla_extension
+//! 0.5.1 would otherwise reject).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
+use super::value::HostValue;
+use crate::log_info;
+
+/// A compiled entry point plus its IO contract.
+pub struct Module {
+    pub spec: ArtifactSpec,
+    exe: Rc<PjRtLoadedExecutable>,
+}
+
+impl Module {
+    /// Execute with host values (uploads inputs, downloads all outputs).
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<Literal>(&literals)?;
+        self.outputs_to_host(result)
+    }
+
+    /// Execute with pre-staged device buffers; returns device buffers.
+    /// Single-output (non-tuple) artifacts return exactly one buffer
+    /// that can be re-fed to later calls with no host copy.
+    pub fn run_buffers(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} buffers, expected {}",
+                self.spec.file,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut result = self.exe.execute_b(inputs)?;
+        Ok(std::mem::take(&mut result[0]))
+    }
+
+    /// Download and untuple the outputs of [`Module::run_buffers`].
+    pub fn buffers_to_host(&self, bufs: &[PjRtBuffer]) -> Result<Vec<HostValue>> {
+        if self.spec.tuple_output {
+            let mut lit = bufs[0].to_literal_sync()?;
+            let parts = lit.decompose_tuple()?;
+            self.literals_to_host(parts)
+        } else {
+            let lit = bufs[0].to_literal_sync()?;
+            Ok(vec![HostValue::from_literal(&lit, &self.spec.outputs[0])?])
+        }
+    }
+
+    fn outputs_to_host(
+        &self,
+        mut result: Vec<Vec<PjRtBuffer>>,
+    ) -> Result<Vec<HostValue>> {
+        let replica = std::mem::take(&mut result[0]);
+        self.buffers_to_host(&replica)
+    }
+
+    fn literals_to_host(&self, parts: Vec<Literal>) -> Result<Vec<HostValue>> {
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: tuple has {} parts, manifest says {}",
+                self.spec.file,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Like [`Module::run`] but returns raw literals without untupling —
+    /// used by the training loop to round-trip state cheaply.
+    pub fn run_literals(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} literals, expected {}",
+                self.spec.file,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self.exe.execute::<Literal>(inputs)?;
+        let mut lit = result[0][0].to_literal_sync()?;
+        if self.spec.tuple_output {
+            Ok(lit.decompose_tuple()?)
+        } else {
+            Ok(vec![lit])
+        }
+    }
+
+    fn check_inputs(&self, inputs: &[HostValue]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, expected {}",
+                self.spec.file,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (v, s) in inputs.iter().zip(&self.spec.inputs) {
+            v.check_spec(s)
+                .with_context(|| format!("artifact {}", self.spec.file))?;
+        }
+        Ok(())
+    }
+}
+
+/// The PJRT runtime: CPU client + manifest + executable cache.
+///
+/// PJRT objects are not `Send`; a `Runtime` lives on one thread (the
+/// coordinator routes work *to* it over channels — see
+/// [`crate::coordinator::server`]).
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        log_info!(
+            "PJRT client up: platform={} devices={} ({} models in manifest)",
+            client.platform_name(),
+            client.device_count(),
+            manifest.models.len()
+        );
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.manifest.model(name)
+    }
+
+    /// Load (compile-once, cached) an entry point of a model.
+    pub fn load(&self, model: &str, entry: &str) -> Result<Module> {
+        let spec = self.manifest.model(model)?.artifact(entry)?.clone();
+        let key = spec.file.clone();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(Module { spec, exe: exe.clone() });
+        }
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf8 path"),
+        )
+        .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        log_info!(
+            "compiled {model}/{entry} ({}) in {:.2}s",
+            spec.file,
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(Module { spec, exe })
+    }
+
+    /// Upload a host value to the device.
+    pub fn to_device(&self, v: &HostValue) -> Result<PjRtBuffer> {
+        let lit = v.to_literal()?;
+        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+}

@@ -1,0 +1,244 @@
+//! Parses `artifacts/manifest.json` (written by `python/compile/aot.py`)
+//! into typed specs the rest of the runtime consumes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype + name of one artifact argument or result.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One AOT-lowered entry point (HLO text file + IO contract).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Whether the HLO root is a tuple (multi-output) or a bare array.
+    pub tuple_output: bool,
+}
+
+impl ArtifactSpec {
+    fn parse(j: &Json) -> Result<ArtifactSpec> {
+        Ok(ArtifactSpec {
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: j
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?,
+            tuple_output: j.get("tuple_output")?.as_bool()?,
+        })
+    }
+}
+
+/// A model: its parameter layout, config and entry points.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// "psm" | "gpt" | "swt" | "mamba".
+    pub kind: String,
+    /// Raw config object (vocab, d, chunk, ...).
+    pub config: Json,
+    /// Ordered (name, shape) parameter layout (tree_leaves order).
+    pub params: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelSpec {
+    pub fn artifact(&self, entry: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(entry).ok_or_else(|| {
+            anyhow!("model {} has no artifact {entry:?} (have: {:?})",
+                    self.name, self.artifacts.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total parameter element count.
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Config accessors.
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config.get(key)?.as_usize()
+    }
+
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("model {} has no param {name:?}", self.name))
+    }
+}
+
+/// The full artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            let params = m
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| -> Result<(String, Vec<usize>)> {
+                    let pair = p.as_arr()?;
+                    Ok((
+                        pair[0].as_str()?.to_string(),
+                        pair[1]
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            let artifacts = m
+                .get("artifacts")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), ArtifactSpec::parse(v)?)))
+                .collect::<Result<_>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    kind: m.get("kind")?.as_str()?.to_string(),
+                    config: m.get("config")?.clone(),
+                    params,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("no model {name:?} in manifest (have: {:?})",
+                    self.models.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{"models": {"m1": {
+            "kind": "psm",
+            "config": {"vocab": 122, "d": 64, "chunk": 1},
+            "params": [["tok_emb", [122, 64]], ["head", [64, 122]]],
+            "artifacts": {"fwd": {
+                "file": "m1_fwd.hlo.txt",
+                "inputs": [
+                    {"name": "tok_emb", "dtype": "f32", "shape": [122, 64]},
+                    {"name": "tokens", "dtype": "s32", "shape": [16, 32]}],
+                "outputs": [
+                    {"name": "out0", "dtype": "f32", "shape": [16, 32, 122]}],
+                "tuple_output": false
+            }}}}}"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("psm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.model("m1").unwrap();
+        assert_eq!(spec.kind, "psm");
+        assert_eq!(spec.cfg_usize("d").unwrap(), 64);
+        assert_eq!(spec.n_params(), 2);
+        assert_eq!(spec.param_elems(), 122 * 64 * 2);
+        assert_eq!(spec.param_index("head").unwrap(), 1);
+        let art = spec.artifact("fwd").unwrap();
+        assert_eq!(art.inputs[1].dtype, DType::S32);
+        assert_eq!(art.outputs[0].elems(), 16 * 32 * 122);
+        assert!(!art.tuple_output);
+        assert!(spec.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let dir = std::env::temp_dir().join("psm_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("absent").is_err());
+    }
+}

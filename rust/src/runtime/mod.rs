@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! The rust binary is self-contained once `make artifacts` has run —
+//! python never executes on the request path.
+
+pub mod client;
+pub mod manifest;
+pub mod params;
+pub mod value;
+
+pub use client::{Module, Runtime};
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelSpec, TensorSpec};
+pub use params::ParamStore;
+pub use value::HostValue;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$PSM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("PSM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,284 @@
+//! Parameter storage: ordered named f32 buffers matching the manifest's
+//! tree_leaves layout, init-via-HLO, and an own-format binary checkpoint
+//! (no serde available offline).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::Runtime;
+use super::manifest::ModelSpec;
+use super::value::HostValue;
+
+const MAGIC: &[u8; 8] = b"PSMCKPT1";
+
+/// Ordered, named parameter set for one model (host copies).
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub model: String,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    bufs: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// Initialise by running the model's `init` artifact with `seed`.
+    pub fn init(rt: &Runtime, model: &str, seed: i32) -> Result<ParamStore> {
+        let spec = rt.model(model)?.clone();
+        let init = rt.load(model, "init")?;
+        let outs = init.run(&[HostValue::scalar_s32(seed)])?;
+        ParamStore::from_values(&spec, outs)
+    }
+
+    /// Build from output values in manifest order.
+    pub fn from_values(
+        spec: &ModelSpec,
+        values: Vec<HostValue>,
+    ) -> Result<ParamStore> {
+        if values.len() != spec.params.len() {
+            bail!(
+                "{}: got {} param values, manifest lists {}",
+                spec.name,
+                values.len(),
+                spec.params.len()
+            );
+        }
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut bufs = Vec::new();
+        for ((name, shape), v) in spec.params.iter().zip(values) {
+            if v.shape() != &shape[..] {
+                bail!("param {name}: shape {:?} != manifest {shape:?}",
+                      v.shape());
+            }
+            names.push(name.clone());
+            shapes.push(shape.clone());
+            bufs.push(v.as_f32()?.to_vec());
+        }
+        Ok(ParamStore { model: spec.name.clone(), names, shapes, bufs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Total element count.
+    pub fn total_elems(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        match self.names.iter().position(|n| n == name) {
+            Some(i) => Ok((&self.shapes[i], &self.bufs[i])),
+            None => bail!("no param {name:?} in {}", self.model),
+        }
+    }
+
+    pub fn set(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
+        match self.names.iter().position(|n| n == name) {
+            Some(i) => {
+                if data.len() != self.bufs[i].len() {
+                    bail!("param {name:?}: length mismatch");
+                }
+                self.bufs[i] = data;
+                Ok(())
+            }
+            None => bail!("no param {name:?} in {}", self.model),
+        }
+    }
+
+    /// As host values in manifest order (for feeding executables).
+    pub fn to_values(&self) -> Vec<HostValue> {
+        self.names
+            .iter()
+            .zip(&self.shapes)
+            .zip(&self.bufs)
+            .map(|((_, shape), buf)| HostValue::f32(shape, buf.clone()))
+            .collect()
+    }
+
+    /// Replace all buffers from values in manifest order (e.g. after a
+    /// train step returns updated parameters).
+    pub fn update_from(&mut self, values: &[HostValue]) -> Result<()> {
+        if values.len() != self.bufs.len() {
+            bail!("update_from: {} values vs {} params", values.len(),
+                  self.bufs.len());
+        }
+        for (buf, v) in self.bufs.iter_mut().zip(values) {
+            *buf = v.as_f32()?.to_vec();
+        }
+        Ok(())
+    }
+
+    // ---- checkpoints -------------------------------------------------
+
+    /// Save to an own-format binary checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        write_u32(&mut f, self.bufs.len() as u32)?;
+        for ((name, shape), buf) in
+            self.names.iter().zip(&self.shapes).zip(&self.bufs)
+        {
+            write_u32(&mut f, name.len() as u32)?;
+            f.write_all(name.as_bytes())?;
+            write_u32(&mut f, shape.len() as u32)?;
+            for &d in shape {
+                write_u32(&mut f, d as u32)?;
+            }
+            for &x in buf {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a checkpoint, validating against the manifest layout.
+    pub fn load(spec: &ModelSpec, path: &Path) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a PSM checkpoint");
+        }
+        let n = read_u32(&mut f)? as usize;
+        if n != spec.params.len() {
+            bail!("checkpoint has {n} params, manifest lists {}",
+                  spec.params.len());
+        }
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut bufs = Vec::new();
+        for (exp_name, exp_shape) in &spec.params {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes)?;
+            if &name != exp_name {
+                bail!("checkpoint param {name:?} != manifest {exp_name:?}");
+            }
+            let ndims = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            if &shape != exp_shape {
+                bail!("param {name}: shape {shape:?} != {exp_shape:?}");
+            }
+            let elems: usize = shape.iter().product();
+            let mut raw = vec![0u8; elems * 4];
+            f.read_exact(&mut raw)?;
+            let buf: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            names.push(name);
+            shapes.push(shape);
+            bufs.push(buf);
+        }
+        Ok(ParamStore { model: spec.name.clone(), names, shapes, bufs })
+    }
+}
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "tiny".into(),
+            kind: "psm".into(),
+            config: Json::parse("{}").unwrap(),
+            params: vec![
+                ("a".into(), vec![2, 2]),
+                ("b".into(), vec![3]),
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn values_roundtrip() {
+        let spec = tiny_spec();
+        let ps = ParamStore::from_values(
+            &spec,
+            vec![
+                HostValue::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                HostValue::f32(&[3], vec![5.0, 6.0, 7.0]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(ps.total_elems(), 7);
+        let (shape, data) = ps.get("b").unwrap();
+        assert_eq!(shape, &[3]);
+        assert_eq!(data, &[5.0, 6.0, 7.0]);
+        let vals = ps.to_values();
+        assert_eq!(vals[0].as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let spec = tiny_spec();
+        let ps = ParamStore::from_values(
+            &spec,
+            vec![
+                HostValue::f32(&[2, 2], vec![1.5, -2.0, 0.25, 4.0]),
+                HostValue::f32(&[3], vec![-1.0, 0.0, 9.5]),
+            ],
+        )
+        .unwrap();
+        let path = std::env::temp_dir().join("psm_ckpt_test.bin");
+        ps.save(&path).unwrap();
+        let back = ParamStore::load(&spec, &path).unwrap();
+        assert_eq!(back.get("a").unwrap().1, ps.get("a").unwrap().1);
+        assert_eq!(back.get("b").unwrap().1, ps.get("b").unwrap().1);
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let spec = tiny_spec();
+        let r = ParamStore::from_values(
+            &spec,
+            vec![
+                HostValue::f32(&[2, 2], vec![0.0; 4]),
+                HostValue::f32(&[4], vec![0.0; 4]),
+            ],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let spec = tiny_spec();
+        let path = std::env::temp_dir().join("psm_ckpt_bad.bin");
+        std::fs::write(&path, b"NOTACKPT__").unwrap();
+        assert!(ParamStore::load(&spec, &path).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Host-side tensor values and conversion to/from PJRT [`xla::Literal`]s.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor: f32 or i32, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn s32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::S32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostValue::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn scalar_s32(v: i32) -> Self {
+        HostValue::s32(&[], vec![v])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } | HostValue::S32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostValue::F32 { .. } => DType::F32,
+            HostValue::S32 { .. } => DType::S32,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::S32 { data, .. } => Ok(data),
+            _ => bail!("expected s32 value"),
+        }
+    }
+
+    /// Validate against an artifact IO spec.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype || self.shape() != &spec.shape[..] {
+            bail!(
+                "value {:?}/{:?} does not match spec {} {:?}/{:?}",
+                self.dtype(),
+                self.shape(),
+                spec.name,
+                spec.dtype,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to a PJRT literal (host copy).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostValue::F32 { data, .. } => {
+                Literal::vec1(data).reshape(&dims)?
+            }
+            HostValue::S32 { data, .. } => {
+                Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host value, checking dtype via shape.
+    pub fn from_literal(lit: &Literal, spec: &TensorSpec) -> Result<Self> {
+        let v = match spec.dtype {
+            DType::F32 => HostValue::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            },
+            DType::S32 => HostValue::S32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            },
+        };
+        if v.elems() != spec.elems() {
+            bail!(
+                "literal has {} elems, spec {} expects {}",
+                v.elems(),
+                spec.name,
+                spec.elems()
+            );
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let v = HostValue::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = v.to_literal().unwrap();
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 3],
+        };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn roundtrip_scalar_s32() {
+        let v = HostValue::scalar_s32(42);
+        let lit = v.to_literal().unwrap();
+        let spec = TensorSpec {
+            name: "seed".into(),
+            dtype: DType::S32,
+            shape: vec![],
+        };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_s32().unwrap(), &[42]);
+    }
+
+    #[test]
+    fn spec_mismatch_detected() {
+        let v = HostValue::zeros_f32(&[2, 2]);
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![4],
+        };
+        assert!(v.check_spec(&spec).is_err());
+        let spec2 = TensorSpec {
+            name: "x".into(),
+            dtype: DType::S32,
+            shape: vec![2, 2],
+        };
+        assert!(v.check_spec(&spec2).is_err());
+    }
+}

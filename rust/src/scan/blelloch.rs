@@ -1,0 +1,155 @@
+//! Alg. 1: the static Blelloch scan (upsweep + downsweep) over a heap-
+//! layout complete binary tree — the paper's *training-time* algorithm.
+//!
+//! For a non-associative operator the result is defined by the fixed
+//! tree parenthesisation π_Blelloch (Sec. 3.3 / Sec. E); the online
+//! binary-counter scan ([`super::counter`]) reproduces exactly the same
+//! values, which is the sequential-parallel duality under test.
+//!
+//! Inputs of non-power-of-two length are padded on the right with the
+//! identity; padded leaves only feed tree nodes strictly to the right of
+//! every real prefix, so all `n` returned prefixes are unaffected.
+
+use super::traits::Aggregator;
+use crate::util::pool;
+
+/// Exclusive Blelloch prefixes of `items`: `out[t] = x_0 Agg ... Agg
+/// x_{t-1}` under π_Blelloch, `out[0] = e`. Sequential execution.
+pub fn blelloch_scan<A: Aggregator>(
+    op: &A,
+    items: &[A::State],
+) -> Vec<A::State> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let r = n.next_power_of_two();
+    // Heap layout: internal nodes 1..r, leaves r..2r.
+    let mut tree: Vec<A::State> = Vec::with_capacity(2 * r);
+    tree.resize(2 * r, op.identity());
+    for (i, x) in items.iter().enumerate() {
+        tree[r + i] = x.clone();
+    }
+    // Upsweep (reduction), bottom-up.
+    for v in (1..r).rev() {
+        tree[v] = op.agg(&tree[2 * v], &tree[2 * v + 1]);
+    }
+    // Downsweep (prefix propagation), top-down.
+    let mut pref: Vec<A::State> = Vec::with_capacity(2 * r);
+    pref.resize(2 * r, op.identity());
+    for v in 1..r {
+        pref[2 * v] = pref[v].clone();
+        pref[2 * v + 1] = op.agg(&pref[v], &tree[2 * v]);
+    }
+    pref[r..r + n].to_vec()
+}
+
+/// Parallel Blelloch scan: same values as [`blelloch_scan`], with each
+/// tree *level* executed across `workers` threads — Θ(log n) parallel
+/// steps of Θ(n) total work, the paper's training-circuit shape.
+pub fn blelloch_scan_parallel<A>(
+    op: &A,
+    items: &[A::State],
+    workers: usize,
+) -> Vec<A::State>
+where
+    A: Aggregator + Sync,
+    A::State: Send + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let r = n.next_power_of_two();
+    let mut tree: Vec<A::State> = Vec::with_capacity(2 * r);
+    tree.resize(2 * r, op.identity());
+    for (i, x) in items.iter().enumerate() {
+        tree[r + i] = x.clone();
+    }
+    // Upsweep level by level: nodes [2^k, 2^{k+1}) are independent.
+    let mut level_start = r / 2;
+    while level_start >= 1 {
+        let level = level_start..(2 * level_start);
+        let parents: Vec<A::State> =
+            pool::parallel_map(level.len(), workers, |i| {
+                let v = level_start + i;
+                op.agg(&tree[2 * v], &tree[2 * v + 1])
+            });
+        for (i, p) in parents.into_iter().enumerate() {
+            tree[level_start + i] = p;
+        }
+        let _ = level;
+        level_start /= 2;
+    }
+    // Downsweep level by level.
+    let mut pref: Vec<A::State> = Vec::with_capacity(2 * r);
+    pref.resize(2 * r, op.identity());
+    let mut level_start = 1;
+    while level_start < r {
+        let children: Vec<(A::State, A::State)> =
+            pool::parallel_map(level_start, workers, |i| {
+                let v = level_start + i;
+                (pref[v].clone(), op.agg(&pref[v], &tree[2 * v]))
+            });
+        for (i, (even, odd)) in children.into_iter().enumerate() {
+            let v = level_start + i;
+            pref[2 * v] = even;
+            pref[2 * v + 1] = odd;
+        }
+        level_start *= 2;
+    }
+    pref[r..r + n].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sequential::sequential_scan;
+    use super::super::traits::ops::*;
+    use super::*;
+
+    #[test]
+    fn matches_sequential_for_associative_ops() {
+        for n in [1usize, 2, 3, 5, 8, 13, 16, 31, 64] {
+            let xs: Vec<i64> = (0..n as i64).map(|i| i * i + 1).collect();
+            assert_eq!(blelloch_scan(&AddOp, &xs), sequential_scan(&AddOp, &xs),
+                       "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_sequential_concat() {
+        let xs: Vec<String> =
+            (0..13).map(|i| format!("<{i}>")).collect();
+        assert_eq!(
+            blelloch_scan(&ConcatOp, &xs),
+            sequential_scan(&ConcatOp, &xs)
+        );
+    }
+
+    #[test]
+    fn nonassociative_differs_from_sequential() {
+        // For HalfAddOp the Blelloch grouping differs from left-nesting —
+        // this is exactly the Sec. 3.3 phenomenon.
+        let xs: Vec<f64> = (1..=8).map(|i| i as f64).collect();
+        let b = blelloch_scan(&HalfAddOp, &xs);
+        let s = sequential_scan(&HalfAddOp, &xs);
+        assert_eq!(b[0], s[0]); // both e
+        assert_eq!(b[1], s[1]); // single element
+        assert_eq!(b[2], s[2]); // two elements: only one grouping
+        assert_ne!(b[5], s[5], "grouping should matter at length 5");
+    }
+
+    #[test]
+    fn parallel_matches_sequential_execution() {
+        let xs: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let a = blelloch_scan(&HalfAddOp, &xs);
+        let b = blelloch_scan_parallel(&HalfAddOp, &xs, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(blelloch_scan(&AddOp, &[]).is_empty());
+        assert_eq!(blelloch_scan(&AddOp, &[7]), vec![0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Alg. 2: the online binary-counter scan — the paper's *inference-time*
+//! algorithm and the heart of the L3 coordinator.
+//!
+//! State is one optional root per block size 2^k (at most
+//! ⌈log2(t+1)⌉ of them, Cor 3.6). Inserting an element performs the
+//! binary-carry merge chain; the current prefix is the MSB→LSB fold of
+//! the occupied roots, which reproduces *exactly* the Blelloch
+//! parenthesisation of the static scan (Thm 3.5) — even for
+//! non-associative `Agg`.
+
+use super::traits::Aggregator;
+
+/// Streaming prefix-scan state for one sequence.
+pub struct OnlineScan<'a, A: Aggregator> {
+    op: &'a A,
+    /// `roots[k]` = aggregate of the most recent 2^k elements, when the
+    /// k-th bit of `count` is set (Prop. E.1 invariant).
+    roots: Vec<Option<A::State>>,
+    count: u64,
+}
+
+impl<'a, A: Aggregator> OnlineScan<'a, A> {
+    pub fn new(op: &'a A) -> Self {
+        OnlineScan { op, roots: Vec::new(), count: 0 }
+    }
+
+    /// Number of elements inserted so far.
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Number of occupied roots (current memory footprint in states).
+    pub fn occupied_roots(&self) -> usize {
+        self.roots.iter().filter(|r| r.is_some()).count()
+    }
+
+    /// Insert the next element (binary-carry merge chain).
+    pub fn push(&mut self, x: A::State) {
+        let mut carry = x;
+        let mut k = 0usize;
+        loop {
+            if k == self.roots.len() {
+                self.roots.push(None);
+            }
+            match self.roots[k].take() {
+                Some(root) => {
+                    // Merge two complete blocks of size 2^k (left block
+                    // is the older one — argument order matters for
+                    // non-associative Agg).
+                    carry = self.op.agg(&root, &carry);
+                    k += 1;
+                }
+                None => {
+                    self.roots[k] = Some(carry);
+                    break;
+                }
+            }
+        }
+        self.count += 1;
+    }
+
+    /// The current *inclusive* prefix: `x_0 Agg ... Agg x_{count-1}`
+    /// under π_Blelloch. (Equivalently: the exclusive prefix `P_count`
+    /// of the static scan — call before pushing the next element.)
+    ///
+    /// Cost: one `Agg` per occupied root (≤ ⌈log2(count+1)⌉).
+    pub fn prefix(&self) -> A::State {
+        let mut p = self.op.identity();
+        for root in self.roots.iter().rev().flatten() {
+            p = self.op.agg(&p, root);
+        }
+        p
+    }
+
+    /// Reset to the empty stream.
+    pub fn clear(&mut self) {
+        self.roots.clear();
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::blelloch::blelloch_scan;
+    use super::super::sequential::sequential_scan;
+    use super::super::traits::ops::*;
+    use super::super::traits::{Aggregator, CountingAgg};
+    use super::*;
+
+    /// Thm 3.5: online prefix == static Blelloch prefix at every t, for a
+    /// NON-associative operator.
+    #[test]
+    fn online_matches_static_nonassociative() {
+        let op = HalfAddOp;
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 11) as f64).collect();
+        let static_pref = blelloch_scan(&op, &xs);
+        let mut online = OnlineScan::new(&op);
+        for (t, x) in xs.iter().enumerate() {
+            // prefix() before pushing x_t is the exclusive prefix P_t.
+            assert_eq!(online.prefix(), static_pref[t], "t={t}");
+            online.push(*x);
+        }
+    }
+
+    #[test]
+    fn online_matches_sequential_for_associative() {
+        let op = ConcatOp;
+        let xs: Vec<String> = (0..33).map(|i| format!("{i},")).collect();
+        let seq = sequential_scan(&op, &xs);
+        let mut online = OnlineScan::new(&op);
+        for (t, x) in xs.iter().enumerate() {
+            assert_eq!(online.prefix(), seq[t], "t={t}");
+            online.push(x.clone());
+        }
+    }
+
+    /// Cor 3.6: at most ⌈log2(t+1)⌉ roots live after t+1 inserts.
+    #[test]
+    fn memory_bound() {
+        let op = AddOp;
+        let mut online = OnlineScan::new(&op);
+        for t in 0u64..4096 {
+            online.push(t as i64);
+            let bound = 64 - (t + 1).leading_zeros() as usize; // ⌊log2⌋+1
+            assert!(
+                online.occupied_roots() <= bound,
+                "t={t}: {} roots > bound {bound}",
+                online.occupied_roots()
+            );
+            // The number of occupied roots equals popcount(t+1).
+            assert_eq!(
+                online.occupied_roots() as u32,
+                (t + 1).count_ones()
+            );
+        }
+    }
+
+    /// "Work" remark: amortised ~2 Agg calls per inserted element
+    /// (1 leaf placement + expected 1 carry), excluding prefix() folds.
+    #[test]
+    fn amortised_push_cost() {
+        let op = CountingAgg::new(AddOp);
+        let mut online = OnlineScan::new(&op);
+        let n = 1u64 << 14;
+        for t in 0..n {
+            online.push(t as i64);
+        }
+        let per_elem = op.calls() as f64 / n as f64;
+        assert!(
+            per_elem < 1.01,
+            "carry merges per element should be < ~1, got {per_elem}"
+        );
+    }
+
+    #[test]
+    fn clear_resets() {
+        let op = AddOp;
+        let mut online = OnlineScan::new(&op);
+        online.push(1);
+        online.push(2);
+        online.clear();
+        assert!(online.is_empty());
+        assert_eq!(online.prefix(), 0);
+    }
+}

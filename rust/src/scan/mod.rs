@@ -1,0 +1,26 @@
+//! The paper's Sec. 3 algorithms, generic over the aggregation operator.
+//!
+//! * [`traits::Aggregator`] — a binary operator with identity over an
+//!   arbitrary state type. **No associativity is assumed**; for the
+//!   affine family ([`crate::affine`]) associativity is a *verified
+//!   property*, not an axiom.
+//! * [`sequential`] — the left-to-right reference recurrence.
+//! * [`blelloch`] — Alg. 1: the static upsweep/downsweep scan used at
+//!   training time (sequential and thread-pool parallel execution).
+//! * [`counter`] — Alg. 2: the online binary-counter scan used at
+//!   inference time; reproduces the Blelloch parenthesisation exactly in
+//!   `O(log n)` memory (Thm 3.5 / Cor 3.6).
+//! * [`parens`] — a symbolic aggregator whose states are expression
+//!   trees; the test suite uses it to verify the parenthesisation
+//!   theorems *structurally*, for arbitrary non-associative operators.
+
+pub mod blelloch;
+pub mod counter;
+pub mod parens;
+pub mod sequential;
+pub mod traits;
+
+pub use blelloch::{blelloch_scan, blelloch_scan_parallel};
+pub use counter::OnlineScan;
+pub use sequential::sequential_scan;
+pub use traits::{Aggregator, CountingAgg};

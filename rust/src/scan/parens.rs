@@ -1,0 +1,157 @@
+//! Symbolic aggregator whose states are *expression trees* — applying
+//! `Agg` builds a `Node` rather than computing a value. Structural
+//! equality of two results then proves they were computed with the
+//! **identical parenthesisation**, which is how the test suite verifies
+//! Thm 3.5 for arbitrary (maximally non-associative) operators: no
+//! numeric operator can over-claim equality here.
+
+use std::rc::Rc;
+
+use super::traits::Aggregator;
+
+/// A symbolic aggregation expression.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Expr {
+    /// The identity element `e`.
+    Id,
+    /// The t-th input element.
+    Leaf(u64),
+    /// `Agg(left, right)`.
+    Node(Rc<Expr>, Rc<Expr>),
+}
+
+impl Expr {
+    /// Leaves in left-to-right order (flattening the tree).
+    pub fn leaves(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.collect(&mut out);
+        out
+    }
+
+    fn collect(&self, out: &mut Vec<u64>) {
+        match self {
+            Expr::Id => {}
+            Expr::Leaf(i) => out.push(*i),
+            Expr::Node(l, r) => {
+                l.collect(out);
+                r.collect(out);
+            }
+        }
+    }
+
+    /// Render as a parenthesised string, e.g. `((e·x0)·(x1·x2))`.
+    pub fn render(&self) -> String {
+        match self {
+            Expr::Id => "e".to_string(),
+            Expr::Leaf(i) => format!("x{i}"),
+            Expr::Node(l, r) => format!("({}\u{b7}{})", l.render(), r.render()),
+        }
+    }
+
+    /// Depth of the expression tree.
+    pub fn depth(&self) -> usize {
+        match self {
+            Expr::Id | Expr::Leaf(_) => 0,
+            Expr::Node(l, r) => 1 + l.depth().max(r.depth()),
+        }
+    }
+}
+
+/// The symbolic operator: `agg` constructs a `Node`, nothing simplifies.
+pub struct SymbolicOp;
+
+impl Aggregator for SymbolicOp {
+    type State = Expr;
+
+    fn identity(&self) -> Expr {
+        Expr::Id
+    }
+
+    fn agg(&self, left: &Expr, right: &Expr) -> Expr {
+        Expr::Node(Rc::new(left.clone()), Rc::new(right.clone()))
+    }
+}
+
+/// Make the n input leaves `x0..x_{n-1}`.
+pub fn leaves(n: u64) -> Vec<Expr> {
+    (0..n).map(Expr::Leaf).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::blelloch::blelloch_scan;
+    use super::super::counter::OnlineScan;
+    use super::super::sequential::sequential_scan;
+    use super::*;
+
+    /// Thm 3.5, structurally: the online scan's prefix expression is
+    /// *identical as a tree* to the static Blelloch prefix, at every t.
+    #[test]
+    fn online_reproduces_blelloch_parenthesisation() {
+        let op = SymbolicOp;
+        for n in [1u64, 2, 3, 4, 7, 8, 15, 16, 33, 64] {
+            let xs = leaves(n);
+            let static_pref = blelloch_scan(&op, &xs);
+            let mut online = OnlineScan::new(&op);
+            for (t, x) in xs.iter().enumerate() {
+                assert_eq!(
+                    online.prefix(),
+                    static_pref[t],
+                    "n={n} t={t}: {} vs {}",
+                    online.prefix().render(),
+                    static_pref[t].render()
+                );
+                online.push(x.clone());
+            }
+        }
+    }
+
+    /// The Blelloch grouping differs from left-nesting in general —
+    /// the sequential scan produces a *different* tree.
+    #[test]
+    fn blelloch_differs_from_left_nesting() {
+        let op = SymbolicOp;
+        let xs = leaves(8);
+        let b = blelloch_scan(&op, &xs);
+        let s = sequential_scan(&op, &xs);
+        // At t = 5 the Blelloch prefix groups x0..x3 as a balanced tree;
+        // left-nesting does not.
+        assert_ne!(b[5], s[5]);
+        // But both contain the same leaves in the same order.
+        assert_eq!(b[5].leaves(), s[5].leaves());
+    }
+
+    /// Every prefix contains exactly the leaves 0..t in order.
+    #[test]
+    fn prefix_leaf_sets() {
+        let op = SymbolicOp;
+        let xs = leaves(32);
+        let pref = blelloch_scan(&op, &xs);
+        for (t, p) in pref.iter().enumerate() {
+            let expect: Vec<u64> = (0..t as u64).collect();
+            assert_eq!(p.leaves(), expect, "t={t}");
+        }
+    }
+
+    /// The online prefix fold has depth O(log t) — block trees are
+    /// balanced (the asymptotic claim behind Prop 3.2's depth bound).
+    #[test]
+    fn prefix_depth_logarithmic() {
+        let op = SymbolicOp;
+        let mut online = OnlineScan::new(&op);
+        for t in 0u64..512 {
+            online.push(Expr::Leaf(t));
+            let d = online.prefix().depth();
+            let log = 64 - (t + 1).leading_zeros() as usize;
+            // fold adds one level per occupied root: <= 2*log + 1 total.
+            assert!(d <= 2 * log + 1, "t={t}: depth {d} > {}", 2 * log + 1);
+        }
+    }
+
+    #[test]
+    fn render_readable() {
+        let op = SymbolicOp;
+        let e = op.agg(&Expr::Leaf(0), &op.agg(&Expr::Leaf(1), &Expr::Id));
+        assert_eq!(e.render(), "(x0\u{b7}(x1\u{b7}e))");
+    }
+}

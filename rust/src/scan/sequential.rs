@@ -1,0 +1,68 @@
+//! Left-to-right reference recurrence: the "sequential view" of Def. 2.1.
+//!
+//! For associative aggregators this matches the Blelloch scan exactly
+//! (Lemma 3.4); for non-associative ones it is the *left-nested*
+//! parenthesisation, which in general differs from the Blelloch tree —
+//! the distinction at the heart of Sec. 3.3.
+
+use super::traits::Aggregator;
+
+/// Exclusive left-fold prefixes: `out[t] = x_0 agg x_1 agg ... agg
+/// x_{t-1}` (left-nested), with `out[0] = e`. Returns `n` prefixes.
+pub fn sequential_scan<A: Aggregator>(
+    op: &A,
+    items: &[A::State],
+) -> Vec<A::State> {
+    let mut out = Vec::with_capacity(items.len());
+    let mut acc = op.identity();
+    for x in items {
+        out.push(acc.clone());
+        acc = op.agg(&acc, x);
+    }
+    out
+}
+
+/// Inclusive left-fold: the final accumulated value over all items.
+pub fn sequential_fold<A: Aggregator>(
+    op: &A,
+    items: &[A::State],
+) -> A::State {
+    let mut acc = op.identity();
+    for x in items {
+        acc = op.agg(&acc, x);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::traits::ops::*;
+    use super::*;
+
+    #[test]
+    fn exclusive_prefixes_add() {
+        let xs = vec![1i64, 2, 3, 4];
+        let p = sequential_scan(&AddOp, &xs);
+        assert_eq!(p, vec![0, 1, 3, 6]);
+    }
+
+    #[test]
+    fn exclusive_prefixes_concat_order() {
+        let xs: Vec<String> = ["a", "b", "c"].iter().map(|s| s.to_string())
+            .collect();
+        let p = sequential_scan(&ConcatOp, &xs);
+        assert_eq!(p, vec!["", "a", "ab"]);
+    }
+
+    #[test]
+    fn fold_totals() {
+        assert_eq!(sequential_fold(&AddOp, &[5, 6, 7]), 18);
+        assert_eq!(sequential_fold(&AddOp, &[]), 0);
+    }
+
+    #[test]
+    fn empty_input() {
+        let p = sequential_scan(&AddOp, &[]);
+        assert!(p.is_empty());
+    }
+}

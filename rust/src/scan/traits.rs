@@ -1,0 +1,157 @@
+//! The aggregation operator abstraction shared by every scan variant.
+
+use std::cell::Cell;
+
+/// A binary aggregation operator `Agg: M x M -> M` with identity `e`.
+///
+/// This is the paper's Eq. (3.2): **no associativity is assumed**.
+/// Implementations range from the affine monoid of Table 1 (associative,
+/// see [`crate::affine`]) to Transformer blocks executed through PJRT
+/// (non-associative, see [`crate::coordinator`]) and the symbolic
+/// expression-tree operator used to test the parenthesisation theorems
+/// ([`super::parens`]).
+pub trait Aggregator {
+    /// The state space `M`.
+    type State: Clone;
+
+    /// The identity element `e`.
+    fn identity(&self) -> Self::State;
+
+    /// `Agg(left, right)`. Order matters for non-associative operators.
+    fn agg(&self, left: &Self::State, right: &Self::State) -> Self::State;
+
+    /// Documentation hint used by tests: whether the implementation
+    /// *claims* associativity (the affine family). Tests *verify* the
+    /// claim on random inputs rather than trusting it.
+    fn claims_associative(&self) -> bool {
+        false
+    }
+}
+
+/// Wrapper that counts `agg` invocations — used by the complexity bench
+/// to verify the paper's "amortised ~2 Agg calls per element" claim and
+/// the `O(log n)` memory bound empirically.
+pub struct CountingAgg<A> {
+    inner: A,
+    calls: Cell<u64>,
+}
+
+impl<A> CountingAgg<A> {
+    pub fn new(inner: A) -> Self {
+        CountingAgg { inner, calls: Cell::new(0) }
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    pub fn reset(&self) {
+        self.calls.set(0);
+    }
+}
+
+impl<A: Aggregator> Aggregator for CountingAgg<A> {
+    type State = A::State;
+
+    fn identity(&self) -> Self::State {
+        self.inner.identity()
+    }
+
+    fn agg(&self, left: &Self::State, right: &Self::State) -> Self::State {
+        self.calls.set(self.calls.get() + 1);
+        self.inner.agg(left, right)
+    }
+
+    fn claims_associative(&self) -> bool {
+        self.inner.claims_associative()
+    }
+}
+
+/// Simple associative test operators used across the test suite.
+pub mod ops {
+    use super::Aggregator;
+
+    /// Integer addition (associative, commutative).
+    pub struct AddOp;
+
+    impl Aggregator for AddOp {
+        type State = i64;
+
+        fn identity(&self) -> i64 {
+            0
+        }
+
+        fn agg(&self, l: &i64, r: &i64) -> i64 {
+            l + r
+        }
+
+        fn claims_associative(&self) -> bool {
+            true
+        }
+    }
+
+    /// String concatenation (associative, non-commutative) — catches
+    /// argument-order bugs that addition would mask.
+    pub struct ConcatOp;
+
+    impl Aggregator for ConcatOp {
+        type State = String;
+
+        fn identity(&self) -> String {
+            String::new()
+        }
+
+        fn agg(&self, l: &String, r: &String) -> String {
+            let mut s = l.clone();
+            s.push_str(r);
+            s
+        }
+
+        fn claims_associative(&self) -> bool {
+            true
+        }
+    }
+
+    /// A deliberately NON-associative operator on f64:
+    /// `agg(a, b) = a * 0.5 + b` — affine but with a fixed contraction,
+    /// so grouping changes the result. Exercises the non-associative
+    /// code paths numerically.
+    pub struct HalfAddOp;
+
+    impl Aggregator for HalfAddOp {
+        type State = f64;
+
+        fn identity(&self) -> f64 {
+            0.0
+        }
+
+        fn agg(&self, l: &f64, r: &f64) -> f64 {
+            l * 0.5 + r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ops::*;
+    use super::*;
+
+    #[test]
+    fn counting_wrapper_counts() {
+        let c = CountingAgg::new(AddOp);
+        assert_eq!(c.calls(), 0);
+        let _ = c.agg(&1, &2);
+        let _ = c.agg(&3, &4);
+        assert_eq!(c.calls(), 2);
+        c.reset();
+        assert_eq!(c.calls(), 0);
+    }
+
+    #[test]
+    fn halfadd_is_not_associative() {
+        let op = HalfAddOp;
+        let abc = op.agg(&op.agg(&1.0, &2.0), &3.0);
+        let abc2 = op.agg(&1.0, &op.agg(&2.0, &3.0));
+        assert_ne!(abc, abc2);
+    }
+}

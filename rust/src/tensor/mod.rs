@@ -1,0 +1,331 @@
+//! Minimal host-side f32 tensor (replaces ndarray, unavailable offline).
+//!
+//! Used by the pure-rust reference paths — the affine catalogue of
+//! Table 1 ([`crate::affine`]) and host-side metric computation (softmax
+//! / cross-entropy over logits fetched from PJRT). Row-major, owned
+//! storage, 1-D/2-D focus; deliberately small rather than general.
+
+use std::fmt;
+
+/// A row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    // ---- constructors ----------------------------------------------------
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs {} elems", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::new(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor::new(shape, vec![v; shape.iter().product()])
+    }
+
+    /// Identity matrix [n, n].
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Tensor::new(shape, (0..n).map(&mut f).collect())
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        self.data[i * c + j] = v;
+    }
+
+    // ---- elementwise -----------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::new(&self.shape, self.data.iter().map(|&x| f(x)).collect())
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        Tensor::new(
+            &self.shape,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        )
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    // ---- linear algebra (2-D) --------------------------------------------
+
+    /// Matrix product [m, k] x [k, n] -> [m, n].
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(other.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        // ikj loop order for cache-friendly access to `other`.
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Outer product of two vectors: [m] x [n] -> [m, n].
+    pub fn outer(u: &[f32], v: &[f32]) -> Tensor {
+        let mut out = Vec::with_capacity(u.len() * v.len());
+        for &a in u {
+            for &b in v {
+                out.push(a * b);
+            }
+        }
+        Tensor::new(&[u.len(), v.len()], out)
+    }
+
+    /// Scale row i by d[i]: diag(d) * self.
+    pub fn scale_rows(&self, d: &[f32]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(d.len(), self.shape[0]);
+        let n = self.shape[1];
+        let mut out = self.data.clone();
+        for (i, &s) in d.iter().enumerate() {
+            for v in &mut out[i * n..(i + 1) * n] {
+                *v *= s;
+            }
+        }
+        Tensor::new(&self.shape, out)
+    }
+
+    /// Scale column j by d[j]: self * diag(d).
+    pub fn scale_cols(&self, d: &[f32]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(d.len(), self.shape[1]);
+        let n = self.shape[1];
+        let mut out = self.data.clone();
+        for row in out.chunks_mut(n) {
+            for (v, &s) in row.iter_mut().zip(d) {
+                *v *= s;
+            }
+        }
+        Tensor::new(&self.shape, out)
+    }
+
+    /// Max |a - b| over elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host-side numerics for metrics (logits -> loss / accuracy)
+// ---------------------------------------------------------------------------
+
+/// Numerically-stable log-softmax over the last axis of a [rows, v] slice.
+pub fn log_softmax_rows(logits: &[f32], v: usize) -> Vec<f32> {
+    assert_eq!(logits.len() % v, 0);
+    let mut out = Vec::with_capacity(logits.len());
+    for row in logits.chunks(v) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|x| (x - m).exp()).sum::<f32>().ln() + m;
+        out.extend(row.iter().map(|x| x - lse));
+    }
+    out
+}
+
+/// Mean masked cross-entropy given flat logits [n, v], labels, mask.
+pub fn masked_cross_entropy(
+    logits: &[f32],
+    v: usize,
+    labels: &[i32],
+    mask: &[f32],
+) -> f64 {
+    let lsm = log_softmax_rows(logits, v);
+    let mut total = 0.0f64;
+    let mut count = 0.0f64;
+    for (i, (&lab, &m)) in labels.iter().zip(mask).enumerate() {
+        if m > 0.0 {
+            total -= f64::from(lsm[i * v + lab as usize]) * f64::from(m);
+            count += f64::from(m);
+        }
+    }
+    if count == 0.0 { 0.0 } else { total / count }
+}
+
+/// Argmax over each row of flat logits [n, v].
+pub fn argmax_rows(logits: &[f32], v: usize) -> Vec<usize> {
+    logits
+        .chunks(v)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_fn(&[3, 3], |i| i as f32);
+        assert_eq!(a.matmul(&Tensor::eye(3)), a);
+        assert_eq!(Tensor::eye(3).matmul(&a), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::from_fn(&[2, 5], |i| i as f32 * 0.5);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn outer_and_scale() {
+        let o = Tensor::outer(&[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(o.data(), &[3.0, 4.0, 6.0, 8.0]);
+        assert_eq!(o.scale(2.0).data(), &[6.0, 8.0, 12.0, 16.0]);
+    }
+
+    #[test]
+    fn row_col_scaling() {
+        let a = Tensor::new(&[2, 2], vec![1.0; 4]);
+        assert_eq!(a.scale_rows(&[2.0, 3.0]).data(), &[2.0, 2.0, 3.0, 3.0]);
+        assert_eq!(a.scale_cols(&[2.0, 3.0]).data(), &[2.0, 3.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn log_softmax_sums_to_one() {
+        let lsm = log_softmax_rows(&[1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0], 3);
+        for row in lsm.chunks(3) {
+            let p: f32 = row.iter().map(|x| x.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-4); // f32 at offset 1000: ~1e-4
+        }
+    }
+
+    #[test]
+    fn cross_entropy_and_argmax() {
+        // Row 0 prefers class 2, row 1 masked out.
+        let logits = vec![0.0, 0.0, 10.0, 5.0, 0.0, 0.0];
+        let ce = masked_cross_entropy(&logits, 3, &[2, 0], &[1.0, 0.0]);
+        assert!(ce < 0.01, "ce={ce}");
+        assert_eq!(argmax_rows(&logits, 3), vec![2, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 2]);
+        let _ = a.add(&b);
+    }
+}

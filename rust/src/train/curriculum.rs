@@ -1,0 +1,75 @@
+//! Length curricula (Sec. 4.1: S5 trains on lengths 4..18 before being
+//! evaluated far beyond).
+
+use crate::util::prng::Rng;
+
+/// A simple staged length curriculum: lengths `lo..=hi`, each sampled
+/// uniformly once the stage is unlocked; stages unlock linearly over
+/// `total_steps`.
+#[derive(Clone, Debug)]
+pub struct Curriculum {
+    pub lo: usize,
+    pub hi: usize,
+    pub total_steps: usize,
+}
+
+impl Curriculum {
+    /// The paper's S5 schedule scaled to our budget: lengths 4..=18.
+    pub fn s5(total_steps: usize) -> Self {
+        Curriculum { lo: 4, hi: 18, total_steps }
+    }
+
+    /// Max length unlocked at `step`.
+    pub fn max_len_at(&self, step: usize) -> usize {
+        if self.total_steps == 0 {
+            return self.hi;
+        }
+        let frac = (step as f64 / self.total_steps as f64).min(1.0);
+        // Unlock the full range by 60% of training.
+        let frac = (frac / 0.6).min(1.0);
+        self.lo + ((self.hi - self.lo) as f64 * frac).round() as usize
+    }
+
+    /// Sample a training length for `step`.
+    pub fn sample_len(&self, rng: &mut Rng, step: usize) -> usize {
+        let hi = self.max_len_at(step);
+        rng.range(self.lo, hi + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlocks_monotonically() {
+        let c = Curriculum::s5(100);
+        assert_eq!(c.max_len_at(0), c.lo);
+        let mut last = 0;
+        for step in 0..120 {
+            let m = c.max_len_at(step);
+            assert!(m >= last);
+            last = m;
+        }
+        assert_eq!(c.max_len_at(100), c.hi);
+        assert_eq!(c.max_len_at(60), c.hi); // full range by 60%
+    }
+
+    #[test]
+    fn samples_in_range() {
+        let c = Curriculum::s5(50);
+        let mut rng = Rng::new(1);
+        for step in [0, 10, 25, 50, 99] {
+            for _ in 0..50 {
+                let l = c.sample_len(&mut rng, step);
+                assert!(l >= c.lo && l <= c.max_len_at(step));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_steps_means_full_range() {
+        let c = Curriculum { lo: 2, hi: 9, total_steps: 0 };
+        assert_eq!(c.max_len_at(0), 9);
+    }
+}

@@ -1,0 +1,120 @@
+//! Evaluation helpers: batched forward passes through the `fwd` /
+//! `fwd_long` artifacts plus host-side metrics (error rate, perplexity).
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::{Module, ParamStore, Runtime};
+use crate::tensor::{argmax_rows, masked_cross_entropy};
+
+/// A compiled forward evaluator for one model + entry point.
+pub struct Evaluator {
+    fwd: Module,
+    vocab: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl Evaluator {
+    /// `entry` is usually "fwd" (train length) or "fwd_long" (eval
+    /// length for the length-generalization figures).
+    pub fn new(rt: &Runtime, model: &str, entry: &str) -> Result<Self> {
+        let fwd = rt.load(model, entry)?;
+        let out = &fwd.spec.outputs[0];
+        let tok = fwd.spec.inputs.last().unwrap();
+        Ok(Evaluator {
+            vocab: out.shape[2],
+            batch: tok.shape[0],
+            seq_len: tok.shape[1],
+            fwd,
+        })
+    }
+
+    /// Run the forward pass; returns flat logits [B * n * vocab].
+    pub fn logits(&self, params: &ParamStore, batch: &Batch) -> Result<Vec<f32>> {
+        let [t, _, _] = batch.to_values();
+        let mut inputs = params.to_values();
+        inputs.push(t);
+        let outs = self.fwd.run(&inputs)?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    /// Masked classification error rate over one batch.
+    pub fn error_rate(&self, params: &ParamStore, batch: &Batch) -> Result<f64> {
+        let logits = self.logits(params, batch)?;
+        Ok(error_rate_from_logits(&logits, self.vocab, batch))
+    }
+
+    /// Masked perplexity over one batch.
+    pub fn perplexity(&self, params: &ParamStore, batch: &Batch) -> Result<f64> {
+        let logits = self.logits(params, batch)?;
+        let ce = masked_cross_entropy(&logits, self.vocab, &batch.labels,
+                                      &batch.mask);
+        Ok(ce.exp())
+    }
+
+    /// Mean masked cross-entropy (nats).
+    pub fn cross_entropy(&self, params: &ParamStore, batch: &Batch)
+        -> Result<f64> {
+        let logits = self.logits(params, batch)?;
+        Ok(masked_cross_entropy(&logits, self.vocab, &batch.labels,
+                                &batch.mask))
+    }
+}
+
+/// Error rate from precomputed flat logits.
+pub fn error_rate_from_logits(logits: &[f32], vocab: usize, batch: &Batch)
+    -> f64 {
+    let preds = argmax_rows(logits, vocab);
+    let mut wrong = 0usize;
+    let mut total = 0usize;
+    for (i, (&lab, &m)) in batch.labels.iter().zip(&batch.mask).enumerate() {
+        if m > 0.0 {
+            total += 1;
+            if preds[i] != lab as usize {
+                wrong += 1;
+            }
+        }
+    }
+    if total == 0 { 0.0 } else { wrong as f64 / total as f64 }
+}
+
+/// Aggregate perplexity across several batches (token-weighted).
+pub fn mean_perplexity(
+    ev: &Evaluator,
+    params: &ParamStore,
+    batches: &[Batch],
+) -> Result<f64> {
+    let mut total_ce = 0.0f64;
+    let mut total_tok = 0.0f64;
+    for b in batches {
+        let ce = ev.cross_entropy(params, b)?;
+        let toks: f64 = b.mask.iter().map(|&m| f64::from(m)).sum();
+        total_ce += ce * toks;
+        total_tok += toks;
+    }
+    Ok((total_ce / total_tok).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_rate_counts_masked_only() {
+        // vocab 3, 4 positions; logits prefer class 0 everywhere.
+        let logits = vec![
+            9.0, 0.0, 0.0, //
+            9.0, 0.0, 0.0, //
+            9.0, 0.0, 0.0, //
+            9.0, 0.0, 0.0,
+        ];
+        let mut b = Batch::new(1, 4);
+        b.set(0, 0, 0, 0, 1.0); // correct
+        b.set(0, 1, 0, 1, 1.0); // wrong
+        b.set(0, 2, 0, 2, 0.0); // masked out (would be wrong)
+        b.set(0, 3, 0, 0, 1.0); // correct
+        let er = error_rate_from_logits(&logits, 3, &b);
+        assert!((er - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Training driver: runs the AOT `train_step` / `train_block` artifacts
+//! from rust (python never executes at runtime), with curriculum
+//! scheduling, evaluation loops and checkpointing.
+
+pub mod curriculum;
+pub mod eval;
+pub mod trainer;
+
+pub use curriculum::Curriculum;
+pub use trainer::Trainer;

@@ -1,0 +1,187 @@
+//! The core training loop over AOT train artifacts.
+//!
+//! State layout matches aot.py: `[params..., adam_m..., adam_v..., step]`
+//! where each segment has `n_params` entries. `train_step` advances one
+//! batch; `train_block` advances K batches inside a single HLO call
+//! (`lax.scan`), amortising the host<->device round trip — the main
+//! training path for the figure reproductions.
+
+use anyhow::{bail, Result};
+
+use crate::data::Batch;
+use crate::log_info;
+use crate::runtime::{HostValue, Module, ModelSpec, ParamStore, Runtime};
+
+/// Training driver for one model.
+///
+/// `train_step` / `train_block` executables compile lazily on first use
+/// — XLA CPU compilation is the dominant fixed cost on this host, and a
+/// run whose step count fits whole blocks never needs `train_step`.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub spec: ModelSpec,
+    step_mod: Option<Module>,
+    block_mod: Option<Module>,
+    /// Flat state: params + m + v + step scalar.
+    state: Vec<HostValue>,
+    n_params: usize,
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialise parameters via the model's `init` artifact.
+    pub fn new(rt: &'rt Runtime, model: &str, seed: i32) -> Result<Self> {
+        let spec = rt.model(model)?.clone();
+        let params = ParamStore::init(rt, model, seed)?;
+        Self::with_params(rt, spec, params)
+    }
+
+    /// Start from an existing parameter set (fresh optimizer state).
+    pub fn with_params(
+        rt: &'rt Runtime,
+        spec: ModelSpec,
+        params: ParamStore,
+    ) -> Result<Self> {
+        let n_params = spec.n_params();
+        let mut state = params.to_values();
+        let zeros: Vec<HostValue> = state
+            .iter()
+            .map(|v| HostValue::zeros_f32(v.shape()))
+            .collect();
+        state.extend(zeros.clone());
+        state.extend(zeros);
+        state.push(HostValue::scalar_s32(0));
+        Ok(Trainer {
+            rt,
+            spec,
+            step_mod: None,
+            block_mod: None,
+            state,
+            n_params,
+            losses: Vec::new(),
+        })
+    }
+
+    fn step_mod(&mut self) -> Result<&Module> {
+        if self.step_mod.is_none() {
+            self.step_mod = Some(self.rt.load(&self.spec.name,
+                                              "train_step")?);
+        }
+        Ok(self.step_mod.as_ref().unwrap())
+    }
+
+    fn block_mod(&mut self) -> Result<&Module> {
+        if self.block_mod.is_none() {
+            self.block_mod = Some(self.rt.load(&self.spec.name,
+                                               "train_block")?);
+        }
+        Ok(self.block_mod.as_ref().unwrap())
+    }
+
+    /// Steps taken so far (from the in-HLO counter).
+    pub fn step_count(&self) -> i32 {
+        self.state.last().unwrap().as_s32().unwrap()[0]
+    }
+
+    /// The batch shape `[B, n]` expected by `train_step` (read from the
+    /// manifest — does not trigger compilation).
+    pub fn batch_shape(&self) -> (usize, usize) {
+        let art = self.spec.artifact("train_step").expect("train_step");
+        let t = &art.inputs[art.inputs.len() - 3];
+        (t.shape[0], t.shape[1])
+    }
+
+    /// K for `train_block` (0 if the artifact is absent). Manifest-only.
+    pub fn block_k(&self) -> usize {
+        self.spec
+            .artifact("train_block")
+            .map(|a| a.inputs[a.inputs.len() - 3].shape[0])
+            .unwrap_or(0)
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let [t, l, m] = batch.to_values();
+        let mut inputs = self.state.clone();
+        inputs.push(t);
+        inputs.push(l);
+        inputs.push(m);
+        let outs = self.step_mod()?.run(&inputs)?;
+        let loss = outs[0].as_f32()?[0];
+        self.state = outs[1..].to_vec();
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// K steps in one HLO call; returns the K losses.
+    pub fn block(&mut self, batches: &[Batch]) -> Result<Vec<f32>> {
+        let k = self.block_k();
+        if k == 0 {
+            bail!("{} has no train_block artifact", self.spec.name);
+        }
+        if batches.len() != k {
+            bail!("train_block expects {k} batches, got {}", batches.len());
+        }
+        let [t, l, m] = Batch::stack(batches);
+        let mut inputs = self.state.clone();
+        inputs.push(t);
+        inputs.push(l);
+        inputs.push(m);
+        let outs = self.block_mod()?.run(&inputs)?;
+        let losses = outs[0].as_f32()?.to_vec();
+        self.state = outs[1..].to_vec();
+        self.losses.extend_from_slice(&losses);
+        Ok(losses)
+    }
+
+    /// Run `steps` optimizer steps pulling batches from `next_batch`,
+    /// using `train_block` when available. Logs every ~20 steps.
+    pub fn run(
+        &mut self,
+        steps: usize,
+        mut next_batch: impl FnMut() -> Batch,
+    ) -> Result<()> {
+        let k = self.block_k().max(1);
+        let mut done = 0;
+        while done < steps {
+            if self.block_k() > 0 && steps - done >= k {
+                let batches: Vec<Batch> = (0..k).map(|_| next_batch()).collect();
+                let losses = self.block(&batches)?;
+                done += k;
+                let last = *losses.last().unwrap();
+                if done % 24 < k {
+                    log_info!(
+                        "{} step {:>5}  loss {:.4}",
+                        self.spec.name, self.step_count(), last
+                    );
+                }
+            } else {
+                let loss = self.step(&next_batch())?;
+                done += 1;
+                if done % 20 == 0 {
+                    log_info!(
+                        "{} step {:>5}  loss {:.4}",
+                        self.spec.name, self.step_count(), loss
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Current parameters as a [`ParamStore`] (for eval / serving /
+    /// checkpointing).
+    pub fn params(&self) -> Result<ParamStore> {
+        ParamStore::from_values(&self.spec, self.state[..self.n_params].to_vec())
+    }
+
+    /// Save parameters (not optimizer state) to a checkpoint.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.params()?.save(path)
+    }
+
+    /// The runtime this trainer runs on.
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+}

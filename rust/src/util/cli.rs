@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (replaces clap, unavailable offline).
+//!
+//! Grammar: `psm <command> [positional...] [--flag] [--key value]...`.
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require_str(&self, name: &str) -> Result<String> {
+        self.opt_str(name)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{name}: bad integer {s:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{name}: bad integer {s:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{name}: bad float {s:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("train --model psm_s5 --steps 100 --verbose");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.opt_str("model"), Some("psm_s5"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --name=fig6 --n=32");
+        assert_eq!(a.opt_str("name"), Some("fig6"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.has_flag("fast"));
+        assert!(a.opt_str("fast").is_none());
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --k notanum");
+        assert!(a.usize_or("k", 3).is_err());
+        assert_eq!(a.usize_or("missing", 3).unwrap(), 3);
+        assert!(a.require_str("absent").is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Scoped thread pool (replaces rayon, unavailable offline).
+//!
+//! Supplies the parallel upsweep/downsweep execution of the static
+//! Blelloch scan ([`crate::scan::blelloch`]) and the coordinator's worker
+//! fan-out. Work items are closures run via `std::thread::scope`, so
+//! borrowed data needs no `'static` bound.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (cores, capped at 16).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices over `workers`
+/// threads with dynamic (work-stealing-ish atomic counter) scheduling.
+///
+/// Blocks until all items complete. Panics in workers propagate.
+pub fn parallel_for<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    struct Slots<T>(*mut Option<T>);
+    // SAFETY: each index is claimed by exactly one worker (the atomic
+    // counter in parallel_for hands out every i once), so writes are
+    // disjoint; the scope joins all workers before we read.
+    unsafe impl<T: Send> Sync for Slots<T> {}
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = Slots(out.as_mut_ptr());
+    let slots_ref = &slots; // capture the Sync wrapper, not the raw field
+    parallel_for(n, workers, |i| {
+        let v = f(i);
+        unsafe { std::ptr::write(slots_ref.0.add(i), Some(v)) };
+    });
+    out.into_iter().map(|o| o.expect("worker missed index")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices() {
+        let hits = AtomicU64::new(0);
+        parallel_for(1000, 8, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 500_500);
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let hits = AtomicU64::new(0);
+        parallel_for(10, 1, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+}

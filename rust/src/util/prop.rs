@@ -1,0 +1,112 @@
+//! Minimal property-testing driver (replaces proptest, unavailable
+//! offline). Runs a property over N random cases drawn from a seeded
+//! [`Rng`](crate::util::prng::Rng); on failure it reports the failing
+//! seed/case so the exact input can be replayed, and attempts a simple
+//! size-based shrink when the generator supports sized generation.
+
+use crate::util::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Max "size" hint passed to the generator (e.g. vector length).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 256, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases; sizes ramp from 1 to
+/// `cfg.max_size`. `prop` returns `Err(msg)` on failure.
+///
+/// On failure, retries smaller sizes with the same sub-seed (cheap
+/// shrink) and panics with the smallest reproduction found.
+pub fn check<F>(cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let sub_seed = meta.next_u64();
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Rng::new(sub_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: try the same stream at smaller sizes.
+            let mut best = (size, msg.clone());
+            let mut sz = size / 2;
+            while sz >= 1 {
+                let mut rng = Rng::new(sub_seed);
+                if let Err(m) = prop(&mut rng, sz) {
+                    best = (sz, m);
+                    if sz == 1 {
+                        break;
+                    }
+                    sz /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {sub_seed:#x}, \
+                 size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(PropConfig { cases: 64, ..Default::default() }, |rng, size| {
+            let v: Vec<u64> = (0..size).map(|_| rng.below(100)).collect();
+            let sum: u64 = v.iter().sum();
+            if sum <= 100 * size as u64 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(PropConfig { cases: 16, ..Default::default() }, |_, size| {
+            if size < 3 {
+                Ok(())
+            } else {
+                Err("size >= 3".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.000001], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Property tests for the paper's core theorems, over random operators
+//! and inputs (pure rust — no PJRT; run as harness = false alongside
+//! the other integration targets).
+//!
+//! * Thm 3.5 — online binary-counter scan == static Blelloch scan, for
+//!   arbitrary non-associative operators (numeric AND structural).
+//! * Cor 3.6 — occupied roots == popcount(t+1) <= ⌈log2(t+1)⌉.
+//! * "Work" — amortised carry merges per push < 1 + ε.
+//! * Table 1 — every affine family: scan == published recurrence, and
+//!   ⊕ associativity on random triples.
+
+use psm::affine::{check_family, registry};
+use psm::scan::parens::{leaves, SymbolicOp};
+use psm::scan::traits::ops::HalfAddOp;
+use psm::scan::traits::{Aggregator, CountingAgg};
+use psm::scan::{blelloch_scan, blelloch_scan_parallel, OnlineScan};
+use psm::util::prng::Rng;
+use psm::util::prop::{check, PropConfig};
+
+fn main() {
+    let mut failed = 0;
+    let mut run = |name: &str, f: fn()| {
+        let ok = std::panic::catch_unwind(f).is_ok();
+        println!("test scan_duality::{name} ... {}",
+                 if ok { "ok" } else { "FAILED" });
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("thm35_numeric_random_lengths", thm35_numeric_random_lengths);
+    run("thm35_structural_to_512", thm35_structural_to_512);
+    run("cor36_memory_popcount", cor36_memory_popcount);
+    run("amortised_work_constant", amortised_work_constant);
+    run("parallel_blelloch_equals_sequential_execution",
+        parallel_blelloch_equals_sequential_execution);
+    run("table1_families_property", table1_families_property);
+    run("random_affine_ops_associative", random_affine_ops_associative);
+
+    if failed > 0 {
+        eprintln!("{failed} scan_duality tests failed");
+        std::process::exit(1);
+    }
+    println!("test result: ok.");
+}
+
+/// Thm 3.5 numerically, with a non-associative operator, at random
+/// lengths (shrinks on failure via the prop driver).
+fn thm35_numeric_random_lengths() {
+    check(
+        PropConfig { cases: 200, max_size: 300, ..Default::default() },
+        |rng, size| {
+            let op = HalfAddOp;
+            let xs: Vec<f64> = (0..size).map(|_| rng.normal()).collect();
+            let static_pref = blelloch_scan(&op, &xs);
+            let mut online = OnlineScan::new(&op);
+            for (t, x) in xs.iter().enumerate() {
+                let got = online.prefix();
+                let want = static_pref[t];
+                if (got - want).abs() > 1e-9 * (1.0 + want.abs()) {
+                    return Err(format!(
+                        "t={t}: online {got} != static {want}"
+                    ));
+                }
+                online.push(*x);
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Thm 3.5 structurally: identical expression trees at every prefix for
+/// every length up to 512 — no numeric coincidence can fake this.
+fn thm35_structural_to_512() {
+    let op = SymbolicOp;
+    let xs = leaves(512);
+    let static_pref = blelloch_scan(&op, &xs);
+    let mut online = OnlineScan::new(&op);
+    for (t, x) in xs.iter().enumerate() {
+        assert_eq!(online.prefix(), static_pref[t], "t={t}");
+        online.push(x.clone());
+    }
+}
+
+fn cor36_memory_popcount() {
+    let op = SymbolicOp;
+    let mut online = OnlineScan::new(&op);
+    for t in 0u64..2048 {
+        online.push(psm::scan::parens::Expr::Leaf(t));
+        let expect = (t + 1).count_ones() as usize;
+        assert_eq!(online.occupied_roots(), expect, "t={t}");
+        let bound = (64 - (t + 1).leading_zeros()) as usize;
+        assert!(online.occupied_roots() <= bound);
+    }
+}
+
+fn amortised_work_constant() {
+    // Carry merges over n pushes total exactly n - popcount(n) < n.
+    for n in [100u64, 1000, 4096, 10_000] {
+        let op = CountingAgg::new(HalfAddOp);
+        let mut online = OnlineScan::new(&op);
+        for t in 0..n {
+            online.push(t as f64);
+        }
+        let per = op.calls() as f64 / n as f64;
+        assert!(per < 1.0, "n={n}: {per} merges/elem");
+        assert_eq!(op.calls(), n - u64::from(n.count_ones()));
+    }
+}
+
+fn parallel_blelloch_equals_sequential_execution() {
+    check(
+        PropConfig { cases: 60, max_size: 200, ..Default::default() },
+        |rng, size| {
+            let op = HalfAddOp;
+            let xs: Vec<f64> = (0..size).map(|_| rng.normal()).collect();
+            let a = blelloch_scan(&op, &xs);
+            let b = blelloch_scan_parallel(&op, &xs, 8);
+            if a == b {
+                Ok(())
+            } else {
+                Err("parallel != sequential execution".into())
+            }
+        },
+    );
+}
+
+fn table1_families_property() {
+    let mut rng = Rng::new(0xF00D);
+    for family in registry(5) {
+        for _ in 0..5 {
+            let n = rng.range(1, 70);
+            let seed = rng.next_u64();
+            let rep = check_family(family.as_ref(), n, seed);
+            assert!(
+                rep.passes(5e-3),
+                "{} n={n} seed={seed:#x}: {rep:?}",
+                rep.name
+            );
+        }
+    }
+}
+
+/// Lemma 3.4 at the operator level: ⊕ on random affine pairs is
+/// associative for every action type the families use.
+fn random_affine_ops_associative() {
+    use psm::affine::{Action, AffineOp, AffinePair};
+    use psm::tensor::Tensor;
+    let mut rng = Rng::new(0xABCD);
+    let d = 4;
+    let op = AffineOp { state_shape: [d, d] };
+    let mut rand_t =
+        |rng: &mut Rng| Tensor::from_fn(&[d, d], |_| rng.normal() as f32 * 0.5);
+    for case in 0..200 {
+        let mk = |rng: &mut Rng, t: &Tensor| match case % 4 {
+            0 => Action::Scalar(rng.f32()),
+            1 => Action::ColDiag((0..d).map(|_| rng.f32()).collect()),
+            2 => Action::Elem(t.clone()),
+            _ => Action::RightMul(t.clone()),
+        };
+        let trip: Vec<AffinePair> = (0..3)
+            .map(|_| {
+                let t = rand_t(&mut rng);
+                let e = mk(&mut rng, &t);
+                AffinePair::new(e, rand_t(&mut rng))
+            })
+            .collect();
+        let lhs = op.agg(&op.agg(&trip[0], &trip[1]), &trip[2]);
+        let rhs = op.agg(&trip[0], &op.agg(&trip[1], &trip[2]));
+        let err = lhs.f.max_abs_diff(&rhs.f);
+        assert!(err < 1e-4, "case {case}: assoc defect {err}");
+    }
+}
