@@ -1,0 +1,25 @@
+# Convenience targets. The rust workspace builds standalone (reference
+# backend); `artifacts` is only needed for the optional PJRT path.
+
+ARTIFACTS ?= artifacts
+
+.PHONY: build test bench artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench scan_hotpath
+
+# AOT-lower every model entry point to HLO text + manifest.json for the
+# PJRT backend. Requires a python environment with jax (build-time only;
+# python never runs on the request path).
+artifacts:
+	cd python && python3 -m compile.aot --out $(abspath $(ARTIFACTS))
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS)

@@ -3,10 +3,12 @@
 //! 1. Pure-rust core: the online binary-counter scan reproduces the
 //!    static Blelloch scan for a non-associative operator (Thm 3.5).
 //! 2. Table 1: one affine family verified scan == recurrence.
-//! 3. PJRT path: init a Transformer-PSM from its AOT artifact and
+//! 3. Serving path: init a PSM on whichever backend is available (the
+//!    pure-rust reference backend on a clean machine; PJRT over AOT
+//!    artifacts after `make artifacts` with `--features pjrt`) and
 //!    stream a few tokens through the coordinator.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart` — no setup needed.
 
 use psm::affine::{check_family, registry};
 use psm::coordinator::PsmSession;
@@ -40,19 +42,15 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(rep.passes(1e-3));
 
-    // --- 3. the AOT three-layer path
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("[3] skipped (run `make artifacts` first)");
-        return Ok(());
-    }
-    let rt = Runtime::new(&dir)?;
+    // --- 3. the serving path, on whichever backend is available
+    let rt = Runtime::new(&default_artifacts_dir())?;
     let model = "psm_s5";
     let params = ParamStore::init(&rt, model, 42)?;
     println!(
-        "[3] {model}: {} params ({} arrays) initialised via AOT HLO",
+        "[3] {model}: {} params ({} arrays) initialised on the {} backend",
         params.total_elems(),
-        params.len()
+        params.len(),
+        rt.backend_name()
     );
     let mut sess = PsmSession::new(&rt, model, &params)?;
     let logits = sess.logits_stream(&[3, 1, 4, 1, 5, 9, 2, 6])?;

@@ -199,7 +199,7 @@ impl TokenSession for MambaSession<'_> {
     }
 }
 
-impl TokenSession for super::stream::PsmSession<'_> {
+impl TokenSession for super::stream::PsmSession {
     fn push(&mut self, token: i32) -> Result<Vec<f32>> {
         self.push_token(token)
     }

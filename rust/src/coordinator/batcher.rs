@@ -59,50 +59,48 @@ impl Batcher {
 
     /// Advance one executor tick; returns a plan if dispatch should
     /// happen now.
+    ///
+    /// Two dispatch triggers:
+    /// * the queue fills the biggest bucket — run a full biggest-bucket
+    ///   batch (the throughput path; remaining requests wait for the
+    ///   next wave);
+    /// * the head of the queue has waited `max_wait_ticks` — drain the
+    ///   *whole* queue through the smallest bucket that fits everyone
+    ///   (padded). Dispatching bucket 1 here would strand n-1 requests
+    ///   for another full deadline each.
     pub fn tick(&mut self) -> Option<BatchPlan> {
         self.now += 1;
         if self.queue.is_empty() {
             return None;
         }
         let biggest = *self.buckets.last().unwrap();
+        if self.queue.len() >= biggest {
+            return Some(self.dispatch(biggest));
+        }
         let waited = self.now - self.oldest_tick.unwrap_or(self.now);
-        if self.queue.len() >= biggest || waited >= self.max_wait_ticks {
-            return Some(self.dispatch());
+        if waited >= self.max_wait_ticks {
+            let n = self.queue.len();
+            // Smallest bucket that fits everyone; n > biggest cannot
+            // happen here (caught by the full-bucket branch above), but
+            // fall back to a biggest-bucket chunk defensively.
+            let bucket =
+                *self.buckets.iter().find(|&&b| b >= n).unwrap_or(&biggest);
+            return Some(self.dispatch(bucket));
         }
         None
     }
 
-    /// Build the plan: the largest bucket <= queue length, or the
-    /// smallest bucket (with padding) when the deadline forces a partial
-    /// dispatch.
-    fn dispatch(&mut self) -> BatchPlan {
-        let n = self.queue.len();
-        // Largest bucket that is fully filled, else smallest bucket
-        // that fits everyone (padding), else biggest bucket chunk.
-        let bucket = self
-            .buckets
-            .iter()
-            .rev()
-            .find(|&&b| b <= n)
-            .copied()
-            .unwrap_or_else(|| {
-                *self
-                    .buckets
-                    .iter()
-                    .find(|&&b| b >= n)
-                    .unwrap_or(self.buckets.last().unwrap())
-            });
-        let take = bucket.min(n);
+    /// Drain up to `bucket` requests FIFO and build the plan. Stragglers
+    /// keep their wait credit: the deadline clock restarts from the new
+    /// queue head's *arrival* tick, not from now.
+    fn dispatch(&mut self, bucket: usize) -> BatchPlan {
+        let take = bucket.min(self.queue.len());
         let members: Vec<u64> = self
             .queue
             .drain(..take)
             .map(|p| p.session_id)
             .collect();
-        self.oldest_tick = if self.queue.is_empty() {
-            None
-        } else {
-            Some(self.now)
-        };
+        self.oldest_tick = self.queue.first().map(|p| p.arrival);
         BatchPlan { bucket, padding: bucket - take, members }
     }
 }
@@ -137,16 +135,61 @@ mod tests {
     }
 
     #[test]
-    fn partial_three_uses_bucket_one_thrice_or_four_padded() {
+    fn deadline_drains_whole_queue_padded() {
         let mut b = Batcher::new(vec![1, 4], 1);
         b.submit(1);
         b.submit(2);
         b.submit(3);
         let plan = b.tick().expect("deadline");
-        // Largest fully-filled bucket <= 3 is 1; FIFO head departs.
-        assert_eq!(plan.bucket, 1);
-        assert_eq!(plan.members, vec![1]);
-        assert_eq!(b.queue_len(), 2);
+        // Deadline dispatch drains everyone through the smallest bucket
+        // >= queue length (4, one padded slot) instead of stranding two
+        // requests behind a bucket-1 dispatch.
+        assert_eq!(plan.bucket, 4);
+        assert_eq!(plan.members, vec![1, 2, 3]);
+        assert_eq!(plan.padding, 1);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    /// Regression for the straggler-wait bug: after a partial dispatch,
+    /// the request left behind keeps the wait it has already accrued
+    /// (deadline clock = its arrival tick), rather than being reset to
+    /// a fresh `max_wait_ticks` countdown.
+    #[test]
+    fn straggler_keeps_wait_credit_after_partial_dispatch() {
+        let mut b = Batcher::new(vec![4], 10);
+        for i in 0..5 {
+            b.submit(i); // all arrive at tick 0
+        }
+        let p1 = b.tick().expect("full bucket"); // now = 1
+        assert_eq!(p1.members, vec![0, 1, 2, 3]);
+        assert_eq!(b.queue_len(), 1);
+        // The straggler arrived at tick 0, so the deadline fires when
+        // now - 0 >= 10, i.e. at now = 10: eight empty ticks (2..=9)...
+        for _ in 0..8 {
+            assert!(b.tick().is_none());
+        }
+        // ...then the ninth tick dispatches. (With the old reset-to-now
+        // bug this fired one tick later, at now = 11.)
+        let p2 = b.tick().expect("straggler deadline at now=10");
+        assert_eq!(p2.members, vec![4]);
+        assert_eq!(p2.bucket, 4);
+        assert_eq!(p2.padding, 3);
+    }
+
+    #[test]
+    fn deadline_takes_late_arrivals_along() {
+        // The head's deadline drains the whole queue, including a
+        // request that arrived later — nobody waits a second deadline.
+        let mut b = Batcher::new(vec![1, 4], 3);
+        b.submit(7);
+        assert!(b.tick().is_none()); // now = 1, head waited 1
+        assert!(b.tick().is_none()); // now = 2, head waited 2
+        b.submit(8); // arrives at tick 2
+        let plan = b.tick().expect("head deadline at now=3");
+        assert_eq!(plan.bucket, 4); // smallest bucket fitting both
+        assert_eq!(plan.members, vec![7, 8]);
+        assert_eq!(plan.padding, 2);
+        assert_eq!(b.queue_len(), 0);
     }
 
     #[test]

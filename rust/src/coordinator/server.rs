@@ -1,12 +1,12 @@
 //! TCP serving front end.
 //!
-//! PJRT objects are not `Send`, so the architecture is: N connection
-//! threads parse a line protocol and send [`Request`]s over an mpsc
-//! channel to the single *executor* thread that owns the [`Runtime`]
-//! and all sessions; responses return over per-request channels. This
-//! is the shape a real single-accelerator serving process takes (cf.
-//! the vLLM router): routing and IO scale out in threads, device work
-//! is serialised on the owner.
+//! Backends need not be `Send` (PJRT objects are not), so the
+//! architecture is: N connection threads parse a line protocol and send
+//! [`Request`]s over an mpsc channel to the single *executor* thread
+//! that owns the [`Runtime`] and all sessions; responses return over
+//! per-request channels. This is the shape a real single-accelerator
+//! serving process takes (cf. the vLLM router): routing and IO scale
+//! out in threads, device work is serialised on the owner.
 //!
 //! Protocol (one request per line):
 //!   GEN <n> <tok> <tok> ...   -> "OK <tok> <tok> ..." (greedy decode)

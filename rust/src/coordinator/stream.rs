@@ -1,9 +1,9 @@
-//! Alg. 4: per-token streaming inference for Transformer-PSM.
+//! Alg. 4: per-token streaming inference for Transformer-PSM,
+//! backend-agnostic.
 //!
-//! The session keeps the binary-counter roots (Alg. 2) as PJRT device
-//! buffers; `Agg` merges and prefix folds run entirely on-device through
-//! the AOT `agg` artifact (non-tuple root ⇒ the output buffer feeds the
-//! next call with zero host copies). Per pushed token:
+//! The session keeps the binary-counter roots (Alg. 2) as backend
+//! states and drives the model's `enc` / `agg` / `inf` entry points
+//! through the [`Runtime`] facade. Per pushed token:
 //!
 //! 1. the partial chunk buffer is padded to `c` and re-encoded (`enc`),
 //! 2. `inf(prefix, enc)` produces logits; position `len-1` is the
@@ -12,11 +12,16 @@
 //!    (amortised ~1 `agg`/chunk) and the prefix fold (≤ log₂ r `agg`s)
 //!    is recomputed and cached.
 //!
-//! Memory: ⌈log₂(t/c+1)⌉ · c·d floats of device state — the paper's
+//! Memory: ⌈log₂(t/c+1)⌉ · c·d floats of state — the paper's
 //! O(c log(n/c)) bound (Eq. C2) — versus O(n) for a KV cache.
+//!
+//! States cross the module boundary as [`HostValue`]s; whether they
+//! stage through device memory is the backend's concern (the PJRT
+//! backend uploads/downloads inside [`crate::runtime::Module::run`],
+//! the reference backend computes in place). `host_copy_s` is therefore
+//! folded into the per-phase timings rather than tracked separately.
 
 use anyhow::{bail, Result};
-use xla::PjRtBuffer;
 
 use crate::runtime::{HostValue, Module, ParamStore, Runtime};
 
@@ -31,6 +36,8 @@ pub struct SessionMetrics {
     pub enc_s: f64,
     pub agg_s: f64,
     pub inf_s: f64,
+    /// Retained for dashboard compatibility; host copies now happen
+    /// inside the backend and are included in `enc_s`/`inf_s`/`agg_s`.
     pub host_copy_s: f64,
 }
 
@@ -41,40 +48,41 @@ impl SessionMetrics {
     }
 }
 
-/// One on-device `Agg` invocation (free function so callers can hold
-/// disjoint borrows of the session's fields).
+/// One `Agg` invocation (free function so callers can hold disjoint
+/// borrows of the session's fields).
 fn agg_call(
     agg: &Module,
-    params: &[PjRtBuffer],
+    params: &[HostValue],
     metrics: &mut SessionMetrics,
-    left: &PjRtBuffer,
-    right: &PjRtBuffer,
-) -> Result<PjRtBuffer> {
+    left: &HostValue,
+    right: &HostValue,
+) -> Result<HostValue> {
     let t0 = std::time::Instant::now();
-    let mut args: Vec<&PjRtBuffer> = params.iter().collect();
-    args.push(left);
-    args.push(right);
-    let mut out = agg.run_buffers(&args)?;
+    let mut inputs = params.to_vec();
+    inputs.push(left.clone());
+    inputs.push(right.clone());
+    let mut out = agg.run(&inputs)?;
     metrics.agg_calls += 1;
     metrics.agg_s += t0.elapsed().as_secs_f64();
-    Ok(out.pop().unwrap())
+    Ok(out.remove(0))
 }
 
-/// A single streaming Transformer-PSM inference session.
-pub struct PsmSession<'rt> {
-    rt: &'rt Runtime,
+/// A single streaming Transformer-PSM inference session. Owns its
+/// loaded modules and states outright, so it does not borrow the
+/// runtime after construction.
+pub struct PsmSession {
     enc: Module,
     agg: Module,
     inf: Module,
-    param_bufs: Vec<PjRtBuffer>,
-    /// Learnable identity state e, broadcast to [1, c, d], on device.
-    identity: PjRtBuffer,
+    params: Vec<HostValue>,
+    /// Learnable identity state e, broadcast to [1, c, d].
+    identity: HostValue,
     /// Binary-counter roots: roots[k] = aggregate of 2^k recent chunks.
-    roots: Vec<Option<PjRtBuffer>>,
+    roots: Vec<Option<HostValue>>,
     /// Completed chunks so far.
     chunk_count: u64,
     /// Cached prefix state (recomputed on chunk completion).
-    prefix: PjRtBuffer,
+    prefix: HostValue,
     /// Current partial chunk of raw tokens.
     buf: Vec<i32>,
     pub chunk: usize,
@@ -83,9 +91,9 @@ pub struct PsmSession<'rt> {
     pub metrics: SessionMetrics,
 }
 
-impl<'rt> PsmSession<'rt> {
+impl PsmSession {
     /// Open a session for `model` with the given parameters.
-    pub fn new(rt: &'rt Runtime, model: &str, params: &ParamStore)
+    pub fn new(rt: &Runtime, model: &str, params: &ParamStore)
         -> Result<Self> {
         let spec = rt.model(model)?.clone();
         if spec.kind != "psm" {
@@ -98,27 +106,19 @@ impl<'rt> PsmSession<'rt> {
         let d = spec.cfg_usize("d")?;
         let vocab = spec.cfg_usize("vocab")?;
 
-        // Upload parameters once; they stay device-resident.
-        let param_bufs: Vec<PjRtBuffer> = params
-            .to_values()
-            .iter()
-            .map(|v| rt.to_device(v))
-            .collect::<Result<_>>()?;
+        let param_values = params.to_values();
 
-        // Device identity e = e_state[None] (learnable param).
+        // Identity e = e_state[None] (learnable param).
         let (eshape, edata) = params.get("e_state")?;
         assert_eq!(eshape, &[chunk, d]);
-        let identity =
-            rt.to_device(&HostValue::f32(&[1, chunk, d], edata.to_vec()))?;
-        let prefix =
-            rt.to_device(&HostValue::f32(&[1, chunk, d], edata.to_vec()))?;
+        let identity = HostValue::f32(&[1, chunk, d], edata.to_vec());
+        let prefix = identity.clone();
 
         Ok(PsmSession {
-            rt,
             enc,
             agg,
             inf,
-            param_bufs,
+            params: param_values,
             identity,
             roots: Vec::new(),
             chunk_count: 0,
@@ -131,23 +131,21 @@ impl<'rt> PsmSession<'rt> {
         })
     }
 
-    fn run_enc(&mut self, tokens: &[i32]) -> Result<PjRtBuffer> {
+    fn run_enc(&mut self, tokens: &[i32]) -> Result<HostValue> {
         let t0 = std::time::Instant::now();
         let mut padded = tokens.to_vec();
         padded.resize(self.chunk, 0);
-        let tok =
-            self.rt.to_device(&HostValue::s32(&[1, self.chunk], padded))?;
-        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
-        args.push(&tok);
-        let mut out = self.enc.run_buffers(&args)?;
+        let tok = HostValue::s32(&[1, self.chunk], padded);
+        let mut inputs = self.params.clone();
+        inputs.push(tok);
+        let mut out = self.enc.run(&inputs)?;
         self.metrics.enc_calls += 1;
         self.metrics.enc_s += t0.elapsed().as_secs_f64();
-        Ok(out.pop().unwrap())
+        Ok(out.remove(0))
     }
 
-    /// Binary-counter insert (Alg. 2 carry chain) + prefix fold, fully
-    /// device-side.
-    fn push_chunk(&mut self, x: PjRtBuffer) -> Result<()> {
+    /// Binary-counter insert (Alg. 2 carry chain) + prefix fold.
+    fn push_chunk(&mut self, x: HostValue) -> Result<()> {
         let mut carry = x;
         let mut k = 0usize;
         loop {
@@ -156,7 +154,10 @@ impl<'rt> PsmSession<'rt> {
             }
             match self.roots[k].take() {
                 Some(root) => {
-                    carry = agg_call(&self.agg, &self.param_bufs,
+                    // Merge two complete blocks of size 2^k (left block
+                    // is the older one — argument order matters for
+                    // non-associative Agg).
+                    carry = agg_call(&self.agg, &self.params,
                                      &mut self.metrics, &root, &carry)?;
                     k += 1;
                 }
@@ -171,16 +172,16 @@ impl<'rt> PsmSession<'rt> {
         // Recompute the cached prefix: MSB -> LSB fold starting from the
         // learned identity e — exactly the static downsweep's grouping
         // (Thm 3.5), so serving reproduces the training parenthesisation.
-        let mut p: Option<PjRtBuffer> = None;
+        let mut p: Option<HostValue> = None;
         for root in self.roots.iter().rev().flatten() {
             let left = p.as_ref().unwrap_or(&self.identity);
-            let merged = agg_call(&self.agg, &self.param_bufs,
+            let merged = agg_call(&self.agg, &self.params,
                                   &mut self.metrics, left, root)?;
             p = Some(merged);
         }
         self.prefix = match p {
             Some(b) => b,
-            None => clone_buffer(self.rt, &self.identity)?,
+            None => self.identity.clone(),
         };
         Ok(())
     }
@@ -196,17 +197,14 @@ impl<'rt> PsmSession<'rt> {
         // position len-1, so the partial-chunk logits are exact.
         let xe = self.run_enc(&self.buf.clone())?;
         let t0 = std::time::Instant::now();
-        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
-        args.push(&self.prefix);
-        args.push(&xe);
-        let out = self.inf.run_buffers(&args)?;
+        let mut inputs = self.params.clone();
+        inputs.push(self.prefix.clone());
+        inputs.push(xe.clone());
+        let out = self.inf.run(&inputs)?;
         self.metrics.inf_calls += 1;
         self.metrics.inf_s += t0.elapsed().as_secs_f64();
 
-        let t1 = std::time::Instant::now();
-        let host = self.inf.buffers_to_host(&out)?;
-        self.metrics.host_copy_s += t1.elapsed().as_secs_f64();
-        let logits = host[0].as_f32()?;
+        let logits = out[0].as_f32()?;
         let pos = self.buf.len() - 1;
         let row = &logits[pos * self.vocab..(pos + 1) * self.vocab];
         let result = row.to_vec();
@@ -245,8 +243,8 @@ impl<'rt> PsmSession<'rt> {
         Ok(out)
     }
 
-    /// Occupied counter roots (device-state footprint in chunks) —
-    /// must satisfy Cor 3.6's popcount bound, asserted in tests.
+    /// Occupied counter roots (state footprint in chunks) — must
+    /// satisfy Cor 3.6's popcount bound, asserted in tests.
     pub fn occupied_roots(&self) -> usize {
         self.roots.iter().filter(|r| r.is_some()).count()
     }
@@ -255,21 +253,15 @@ impl<'rt> PsmSession<'rt> {
         self.chunk_count
     }
 
-    /// Reset the stream (parameters stay resident).
+    /// Reset the stream (parameters stay loaded).
     pub fn reset(&mut self) -> Result<()> {
         self.roots.clear();
         self.chunk_count = 0;
         self.buf.clear();
-        self.prefix = clone_buffer(self.rt, &self.identity)?;
+        self.prefix = self.identity.clone();
         self.metrics = SessionMetrics::default();
         Ok(())
     }
-}
-
-/// PjRtBuffer is not Clone; round-trip through a literal (c·d floats).
-fn clone_buffer(rt: &Runtime, b: &PjRtBuffer) -> Result<PjRtBuffer> {
-    let lit = b.to_literal_sync()?;
-    Ok(rt.client.buffer_from_host_literal(None, &lit)?)
 }
 
 fn argmax(xs: &[f32]) -> usize {

@@ -14,9 +14,13 @@
 //! * **Layer 1 (Pallas, build-time)** — fused attention and chunked
 //!   affine-scan kernels inside the Layer-2 graphs.
 //!
-//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) — the binary is self-contained once `make artifacts` has
-//! run.
+//! The [`runtime`] module is **multi-backend** behind a
+//! [`runtime::Backend`] trait: the pure-Rust reference backend (built
+//! on [`scan`] + the affine model family) runs everything on a clean
+//! machine with no Python artifacts, while the PJRT backend
+//! (`--features pjrt`) executes the AOT artifacts through the PJRT C
+//! API (`xla` crate) once `make artifacts` has run. Python never
+//! executes on the request path either way.
 //!
 //! The algorithmic core ([`scan`], [`affine`]) is pure Rust and mirrors
 //! the paper's Sec. 3: a static Blelloch scan (training-time
@@ -27,11 +31,16 @@
 //! ## Quickstart
 //!
 //! ```bash
-//! make artifacts              # python: AOT-lower models to artifacts/
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart     # reference backend, no setup
 //! cargo run --release -- train --model psm_s5 --steps 200
-//! cargo run --release -- bench fig6
+//! cargo bench --bench scan_hotpath             # sequential vs parallel scan
+//!
+//! # Optional PJRT path (needs jax for the one-off AOT lowering):
+//! make artifacts
+//! cargo run --release --features pjrt -- check
 //! ```
+//!
+//! See the repository `README.md` for the full build matrix.
 
 pub mod affine;
 pub mod bench;

@@ -8,6 +8,11 @@
 //! psm models                      # list manifest entries
 //! psm check                       # verify every artifact loads
 //! ```
+//!
+//! Every command accepts `--backend reference|pjrt|auto` (equivalently
+//! the `PSM_BACKEND` env var). The default `auto` picks PJRT when the
+//! binary was built with `--features pjrt` *and* AOT artifacts exist,
+//! else the pure-rust reference backend.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -30,6 +35,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // `--backend` is sugar for PSM_BACKEND, resolved in Runtime::new.
+    if let Some(backend) = args.opt_str("backend") {
+        std::env::set_var("PSM_BACKEND", backend);
+    }
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),

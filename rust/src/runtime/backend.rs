@@ -1,0 +1,208 @@
+//! The backend abstraction: everything above this layer (coordinator,
+//! trainer, evaluator, CLI, examples) talks to a [`Runtime`] facade and
+//! never names a concrete execution engine.
+//!
+//! A [`Backend`] exposes a [`Manifest`] of models and loads named entry
+//! points as [`Module`]s — typed host-tensor functions. Two backends
+//! exist:
+//!
+//! * [`super::reference`] — pure Rust, built on the crate's own scan /
+//!   affine core. Always available; the default on a clean machine.
+//! * [`super::client`] (`--features pjrt`) — executes the AOT HLO
+//!   artifacts produced by `python/compile/aot.py` through the PJRT C
+//!   API. Selected automatically when `artifacts/manifest.json` exists.
+//!
+//! Selection can be forced with `PSM_BACKEND=reference|pjrt` (or the
+//! `--backend` CLI flag, which sets that variable).
+
+use std::any::Any;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
+use super::value::HostValue;
+use crate::log_info;
+
+/// A loaded entry point: a function from host tensors to host tensors.
+///
+/// Implementations may stage through device memory internally (the PJRT
+/// backend does); the contract here is host-to-host.
+pub trait Executable {
+    /// The IO contract this executable was loaded against.
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Execute. Inputs are pre-validated against `spec().inputs` by
+    /// [`Module::run`].
+    fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>>;
+}
+
+/// An execution engine: a model manifest plus entry-point loading.
+pub trait Backend {
+    /// Short name for logs ("reference", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The models this backend can serve.
+    fn manifest(&self) -> &Manifest;
+
+    /// Load (and cache/compile as needed) one entry point of a model.
+    fn load(&self, model: &str, entry: &str) -> Result<Module>;
+
+    /// Escape hatch for backend-specific integration tests (e.g. the
+    /// PJRT bridge test downcasts to reach device-buffer APIs).
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// A loaded entry point with its IO contract — the unit the trainer,
+/// evaluator and streaming coordinator execute.
+pub struct Module {
+    pub spec: ArtifactSpec,
+    exec: Box<dyn Executable>,
+}
+
+impl Module {
+    pub fn from_exec(exec: Box<dyn Executable>) -> Module {
+        Module { spec: exec.spec().clone(), exec }
+    }
+
+    /// Execute with host values, validating the IO contract first.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, expected {}",
+                self.spec.file,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (v, s) in inputs.iter().zip(&self.spec.inputs) {
+            v.check_spec(s)
+                .with_context(|| format!("artifact {}", self.spec.file))?;
+        }
+        self.exec.execute(inputs)
+    }
+}
+
+/// The backend-polymorphic runtime facade. Construction picks a
+/// backend; everything downstream is engine-agnostic.
+pub struct Runtime {
+    /// Snapshot of the backend's manifest (kept on the facade so call
+    /// sites can browse models without going through the trait object).
+    pub manifest: Manifest,
+    backend: Box<dyn Backend>,
+}
+
+impl Runtime {
+    /// Wrap an explicit backend.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Runtime {
+        Runtime { manifest: backend.manifest().clone(), backend }
+    }
+
+    /// The always-available pure-Rust reference backend.
+    pub fn reference() -> Runtime {
+        Runtime::from_backend(Box::new(super::reference::RefBackend::new()))
+    }
+
+    /// The PJRT backend over an AOT artifacts directory.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Runtime> {
+        let rt = super::client::PjrtRuntime::new(artifacts_dir)?;
+        Ok(Runtime::from_backend(Box::new(rt)))
+    }
+
+    /// Auto-select a backend: honours `PSM_BACKEND`, else picks PJRT
+    /// when it is compiled in *and* `artifacts_dir` holds a manifest,
+    /// else the reference backend.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let choice = std::env::var("PSM_BACKEND").unwrap_or_default();
+        match choice.as_str() {
+            "reference" | "ref" => Ok(Runtime::reference()),
+            "pjrt" => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Runtime::pjrt(artifacts_dir)
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    bail!(
+                        "PSM_BACKEND=pjrt but psm was built without the \
+                         `pjrt` cargo feature (artifacts dir {:?}); \
+                         rebuild with `--features pjrt`",
+                        artifacts_dir
+                    )
+                }
+            }
+            "" | "auto" => {
+                #[cfg(feature = "pjrt")]
+                {
+                    if artifacts_dir.join("manifest.json").exists() {
+                        // Fall back to the reference backend if PJRT
+                        // cannot come up (e.g. the compile-only stub is
+                        // linked); only an explicit PSM_BACKEND=pjrt
+                        // turns that into a hard error.
+                        match Runtime::pjrt(artifacts_dir) {
+                            Ok(rt) => return Ok(rt),
+                            Err(e) => crate::log_warn!(
+                                "pjrt backend unavailable ({e:#}); \
+                                 falling back to the reference backend"
+                            ),
+                        }
+                    }
+                }
+                log_info!(
+                    "no AOT artifacts at {artifacts_dir:?} (or pjrt not \
+                     compiled in); using the pure-rust reference backend"
+                );
+                Ok(Runtime::reference())
+            }
+            other => bail!(
+                "unknown PSM_BACKEND {other:?} (expected reference|pjrt|auto)"
+            ),
+        }
+    }
+
+    /// Which backend this runtime runs on ("reference" | "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.manifest.model(name)
+    }
+
+    /// Load (compile-once where applicable) an entry point of a model.
+    pub fn load(&self, model: &str, entry: &str) -> Result<Module> {
+        self.backend.load(model, entry)
+    }
+
+    /// Downcast access to the concrete PJRT backend (device-buffer APIs
+    /// for the bridge test).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt_runtime(&self) -> Option<&super::client::PjrtRuntime> {
+        self.backend.as_any().downcast_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_backend_selected_without_artifacts() {
+        let rt = Runtime::new(Path::new("definitely-missing-artifacts-dir"))
+            .unwrap();
+        assert_eq!(rt.backend_name(), "reference");
+        assert!(!rt.manifest.models.is_empty());
+    }
+
+    #[test]
+    fn module_validates_inputs() {
+        let rt = Runtime::reference();
+        let enc = rt.load("psm_s5", "enc").unwrap();
+        // Wrong arity.
+        assert!(enc.run(&[]).is_err());
+        // Unknown model / entry.
+        assert!(rt.load("nope", "enc").is_err());
+        assert!(rt.load("psm_s5", "nope").is_err());
+    }
+}

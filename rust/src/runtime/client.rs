@@ -1,12 +1,19 @@
-//! PJRT client wrapper: loads HLO-text artifacts, compiles once, caches
-//! executables, and provides typed execution over [`HostValue`]s or
-//! device-resident [`xla::PjRtBuffer`]s.
+//! The PJRT backend (`--features pjrt`): loads HLO-text artifacts,
+//! compiles once, caches executables, and provides typed execution over
+//! [`HostValue`]s or device-resident [`xla::PjRtBuffer`]s.
 //!
 //! Adapted from the /opt/xla-example/load_hlo reference: HLO *text* is
 //! the interchange format (`HloModuleProto::from_text_file` reassigns
 //! the 64-bit instruction ids jax >= 0.5 emits, which xla_extension
 //! 0.5.1 would otherwise reject).
+//!
+//! [`PjrtRuntime`] implements [`Backend`], so everything above the
+//! runtime layer stays engine-agnostic; the device-buffer API
+//! ([`PjrtModule::run_buffers`]) remains available for zero-host-copy
+//! serving paths and the bridge integration test, reachable via
+//! [`super::backend::Runtime::pjrt_runtime`].
 
+use std::any::Any;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
@@ -15,20 +22,27 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
+use super::backend::{Backend, Executable, Module};
 use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
 use super::value::HostValue;
 use crate::log_info;
 
 /// A compiled entry point plus its IO contract.
-pub struct Module {
+pub struct PjrtModule {
     pub spec: ArtifactSpec,
     exe: Rc<PjRtLoadedExecutable>,
 }
 
-impl Module {
+impl PjrtModule {
     /// Execute with host values (uploads inputs, downloads all outputs).
     pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
         self.check_inputs(inputs)?;
+        self.run_unchecked(inputs)
+    }
+
+    /// `run` minus the spec validation — the [`Executable`] entry point,
+    /// whose inputs the facade `Module::run` has already validated.
+    fn run_unchecked(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
         let literals: Vec<Literal> = inputs
             .iter()
             .map(|v| v.to_literal())
@@ -53,7 +67,7 @@ impl Module {
         Ok(std::mem::take(&mut result[0]))
     }
 
-    /// Download and untuple the outputs of [`Module::run_buffers`].
+    /// Download and untuple the outputs of [`PjrtModule::run_buffers`].
     pub fn buffers_to_host(&self, bufs: &[PjRtBuffer]) -> Result<Vec<HostValue>> {
         if self.spec.tuple_output {
             let mut lit = bufs[0].to_literal_sync()?;
@@ -89,8 +103,8 @@ impl Module {
             .collect()
     }
 
-    /// Like [`Module::run`] but returns raw literals without untupling —
-    /// used by the training loop to round-trip state cheaply.
+    /// Like [`PjrtModule::run`] but returns raw literals without
+    /// untupling — used to round-trip state cheaply.
     pub fn run_literals(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
@@ -126,20 +140,30 @@ impl Module {
     }
 }
 
+impl Executable for PjrtModule {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        self.run_unchecked(inputs)
+    }
+}
+
 /// The PJRT runtime: CPU client + manifest + executable cache.
 ///
-/// PJRT objects are not `Send`; a `Runtime` lives on one thread (the
-/// coordinator routes work *to* it over channels — see
+/// PJRT objects are not `Send`; a `PjrtRuntime` lives on one thread
+/// (the coordinator routes work *to* it over channels — see
 /// [`crate::coordinator::server`]).
-pub struct Runtime {
+pub struct PjrtRuntime {
     pub client: PjRtClient,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
 }
 
-impl Runtime {
+impl PjrtRuntime {
     /// Create a CPU runtime over an artifacts directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtRuntime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = PjRtClient::cpu()?;
         log_info!(
@@ -148,7 +172,7 @@ impl Runtime {
             client.device_count(),
             manifest.models.len()
         );
-        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(PjrtRuntime { client, manifest, cache: RefCell::new(HashMap::new()) })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
@@ -156,11 +180,11 @@ impl Runtime {
     }
 
     /// Load (compile-once, cached) an entry point of a model.
-    pub fn load(&self, model: &str, entry: &str) -> Result<Module> {
+    pub fn load_module(&self, model: &str, entry: &str) -> Result<PjrtModule> {
         let spec = self.manifest.model(model)?.artifact(entry)?.clone();
         let key = spec.file.clone();
         if let Some(exe) = self.cache.borrow().get(&key) {
-            return Ok(Module { spec, exe: exe.clone() });
+            return Ok(PjrtModule { spec, exe: exe.clone() });
         }
         let path = self.manifest.hlo_path(&spec);
         let t0 = std::time::Instant::now();
@@ -176,12 +200,30 @@ impl Runtime {
             t0.elapsed().as_secs_f64()
         );
         self.cache.borrow_mut().insert(key, exe.clone());
-        Ok(Module { spec, exe })
+        Ok(PjrtModule { spec, exe })
     }
 
     /// Upload a host value to the device.
     pub fn to_device(&self, v: &HostValue) -> Result<PjRtBuffer> {
         let lit = v.to_literal()?;
         Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+}
+
+impl Backend for PjrtRuntime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, model: &str, entry: &str) -> Result<Module> {
+        Ok(Module::from_exec(Box::new(self.load_module(model, entry)?)))
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
     }
 }

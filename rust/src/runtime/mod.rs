@@ -1,16 +1,30 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! The rust binary is self-contained once `make artifacts` has run —
-//! python never executes on the request path.
+//! The multi-backend runtime layer.
+//!
+//! [`backend::Runtime`] is the facade everything above this module
+//! programs against; it dispatches to one of two [`backend::Backend`]s:
+//!
+//! * [`reference`] — pure Rust (scan core + linear-attention model),
+//!   always available, the default on a clean machine.
+//! * [`client`] (behind the `pjrt` cargo feature) — loads the AOT
+//!   HLO-text artifacts produced by `python/compile/aot.py` and runs
+//!   them on the PJRT CPU client. Python never executes on the request
+//!   path; run `make artifacts` once to produce the directory.
+//!
+//! Selection: `PSM_BACKEND=reference|pjrt|auto` (auto prefers PJRT when
+//! compiled in and `artifacts/manifest.json` exists).
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 pub mod params;
+pub mod reference;
 pub mod value;
 
-pub use client::{Module, Runtime};
+pub use backend::{Backend, Executable, Module, Runtime};
 pub use manifest::{ArtifactSpec, DType, Manifest, ModelSpec, TensorSpec};
 pub use params::ParamStore;
+pub use reference::RefBackend;
 pub use value::HostValue;
 
 use std::path::PathBuf;

@@ -1,13 +1,15 @@
 //! Parameter storage: ordered named f32 buffers matching the manifest's
-//! tree_leaves layout, init-via-HLO, and an own-format binary checkpoint
-//! (no serde available offline).
+//! tree_leaves layout, init via the backend's `init` entry point, and an
+//! own-format binary checkpoint (no serde available offline). Checkpoints
+//! are backend-independent: a ParamStore trained on one backend loads
+//! and serves on the other as long as the manifest layouts agree.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::client::Runtime;
+use super::backend::Runtime;
 use super::manifest::ModelSpec;
 use super::value::HostValue;
 

@@ -1,0 +1,784 @@
+//! The pure-Rust **reference backend**: a complete, dependency-free
+//! implementation of the `psm` model contract (init / enc / agg / inf /
+//! fwd / train_step / train_block) built directly on the crate's scan
+//! core, so the coordinator, trainer and CLI run end-to-end on a clean
+//! machine with no Python artifacts and no PJRT.
+//!
+//! ## The model
+//!
+//! The reference PSM is the linear-attention row of Table 1 with a
+//! constant key feature (mean pooling): chunk states are within-chunk
+//! prefix sums of token embeddings, `Agg` is the (associative) "shift
+//! by the left block's final row" sum
+//!
+//! ```text
+//! Agg(l, r)[j] = l[c-1] + r[j]          identity e = 0
+//! ```
+//!
+//! and the readout normalises by a count channel (embedding channel 0
+//! is pinned to 1, so `h[0]` counts aggregated tokens) before a linear
+//! head. Training fits the head by softmax cross-entropy (a linear
+//! probe over frozen embeddings) with Adam — gradients are exact and
+//! the loss on a fixed batch falls monotonically, which is what the
+//! integration tests pin.
+//!
+//! Crucially the **forward pass is computed through [`OnlineScan`]**
+//! (the paper's Alg. 2 binary counter) over [`ChunkSumOp`], and the
+//! streaming coordinator drives the *same* `enc`/`agg`/`inf` kernels —
+//! so streaming and static logits agree bit-for-bit, giving tier-1
+//! coverage of the sequential-parallel duality across the whole serving
+//! stack, not just the scan layer.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::backend::{Backend, Executable, Module};
+use super::manifest::{ArtifactSpec, DType, Manifest, ModelSpec, TensorSpec};
+use super::value::HostValue;
+use crate::scan::traits::Aggregator;
+use crate::scan::OnlineScan;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+// Adam hyper-parameters for the linear-probe head.
+const LR: f32 = 0.1;
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+/// Hyper-shape of one built-in reference model.
+#[derive(Clone, Copy, Debug)]
+pub struct RefModelCfg {
+    pub vocab: usize,
+    pub d: usize,
+    pub chunk: usize,
+    /// Batch size of `fwd` / `train_step`.
+    pub batch: usize,
+    /// Sequence length of `fwd` / `train_step`.
+    pub seq: usize,
+    /// K of `train_block`.
+    pub block_k: usize,
+}
+
+/// The built-in registry: mirrors the model names the CLI, examples and
+/// data generators expect (vocab sizes match `data::{s5, corpus, mqar}`).
+const MODELS: &[(&str, RefModelCfg)] = &[
+    (
+        "psm_s5",
+        RefModelCfg { vocab: 122, d: 32, chunk: 1, batch: 8, seq: 32, block_k: 4 },
+    ),
+    (
+        "psm_lm_c16",
+        RefModelCfg { vocab: 256, d: 32, chunk: 16, batch: 8, seq: 32, block_k: 4 },
+    ),
+    (
+        "psm_mqar_c32",
+        RefModelCfg { vocab: 512, d: 48, chunk: 32, batch: 4, seq: 64, block_k: 2 },
+    ),
+];
+
+const N_PARAMS: usize = 4; // tok_emb, e_state, head, head_b
+
+// ---------------------------------------------------------------------------
+// Model math (shared verbatim by enc/agg/inf/fwd/train so the streaming
+// and static paths are bit-identical)
+// ---------------------------------------------------------------------------
+
+/// The chunk-state aggregator: states are `[c, d]` row-major buffers of
+/// within-span prefix sums; `Agg(l, r)[j] = l[c-1] + r[j]`.
+pub struct ChunkSumOp {
+    pub c: usize,
+    pub d: usize,
+}
+
+impl Aggregator for ChunkSumOp {
+    type State = Vec<f32>;
+
+    fn identity(&self) -> Vec<f32> {
+        vec![0.0; self.c * self.d]
+    }
+
+    fn agg(&self, l: &Vec<f32>, r: &Vec<f32>) -> Vec<f32> {
+        let (c, d) = (self.c, self.d);
+        let tail = &l[(c - 1) * d..c * d];
+        let mut out = Vec::with_capacity(c * d);
+        for j in 0..c {
+            for f in 0..d {
+                out.push(tail[f] + r[j * d + f]);
+            }
+        }
+        out
+    }
+
+    fn claims_associative(&self) -> bool {
+        true
+    }
+}
+
+/// Embedding row for `tok` with channel 0 pinned to 1.0 (count channel).
+fn aug_embed(cfg: &RefModelCfg, tok_emb: &[f32], tok: i32, out: &mut [f32]) {
+    let t = (tok.max(0) as usize).min(cfg.vocab - 1);
+    out.copy_from_slice(&tok_emb[t * cfg.d..(t + 1) * cfg.d]);
+    out[0] = 1.0;
+}
+
+/// `enc`: within-chunk prefix sums of augmented embeddings, `[c, d]`.
+fn enc_chunk(cfg: &RefModelCfg, tok_emb: &[f32], toks: &[i32]) -> Vec<f32> {
+    let (c, d) = (cfg.chunk, cfg.d);
+    debug_assert_eq!(toks.len(), c);
+    let mut y = vec![0.0f32; c * d];
+    let mut row = vec![0.0f32; d];
+    for j in 0..c {
+        aug_embed(cfg, tok_emb, toks[j], &mut row);
+        for f in 0..d {
+            let prev = if j == 0 { 0.0 } else { y[(j - 1) * d + f] };
+            y[j * d + f] = prev + row[f];
+        }
+    }
+    y
+}
+
+/// `inf` for one position: normalise by the count channel, apply the
+/// linear head.
+fn logits_row(
+    cfg: &RefModelCfg,
+    head: &[f32],
+    head_b: &[f32],
+    h: &[f32],
+    out: &mut [f32],
+) {
+    let (d, v) = (cfg.d, cfg.vocab);
+    let denom = h[0].max(1.0);
+    out.copy_from_slice(head_b);
+    for f in 0..d {
+        let phi = h[f] / denom;
+        if phi == 0.0 {
+            continue;
+        }
+        let row = &head[f * v..(f + 1) * v];
+        for (o, w) in out.iter_mut().zip(row) {
+            *o += phi * w;
+        }
+    }
+}
+
+/// Per-position pre-normalisation hidden states for one sequence,
+/// computed through the binary-counter scan over completed chunks —
+/// exactly the chunked-streaming semantics of the coordinator.
+fn forward_hidden(
+    cfg: &RefModelCfg,
+    tok_emb: &[f32],
+    toks: &[i32],
+) -> Vec<Vec<f32>> {
+    let (c, d) = (cfg.chunk, cfg.d);
+    let op = ChunkSumOp { c, d };
+    let mut scan = OnlineScan::new(&op);
+    let mut prefix_tail = vec![0.0f32; d];
+    let mut out = Vec::with_capacity(toks.len());
+    let mut pos = 0;
+    while pos < toks.len() {
+        let end = (pos + c).min(toks.len());
+        let mut chunk_toks = toks[pos..end].to_vec();
+        chunk_toks.resize(c, 0);
+        let y = enc_chunk(cfg, tok_emb, &chunk_toks);
+        for j in 0..(end - pos) {
+            let mut h = vec![0.0f32; d];
+            for f in 0..d {
+                h[f] = prefix_tail[f] + y[j * d + f];
+            }
+            out.push(h);
+        }
+        if end - pos == c {
+            scan.push(y);
+            let p = scan.prefix();
+            prefix_tail.copy_from_slice(&p[(c - 1) * d..c * d]);
+        }
+        pos = end;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Manifest construction
+// ---------------------------------------------------------------------------
+
+fn tensor(name: &str, dtype: DType, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), dtype, shape: shape.to_vec() }
+}
+
+fn param_layout(cfg: &RefModelCfg) -> Vec<(String, Vec<usize>)> {
+    vec![
+        ("tok_emb".to_string(), vec![cfg.vocab, cfg.d]),
+        ("e_state".to_string(), vec![cfg.chunk, cfg.d]),
+        ("head".to_string(), vec![cfg.d, cfg.vocab]),
+        ("head_b".to_string(), vec![cfg.vocab]),
+    ]
+}
+
+fn param_tensors(cfg: &RefModelCfg) -> Vec<TensorSpec> {
+    param_layout(cfg)
+        .into_iter()
+        .map(|(n, s)| tensor(&n, DType::F32, &s))
+        .collect()
+}
+
+fn artifact(
+    model: &str,
+    entry: &str,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+) -> ArtifactSpec {
+    ArtifactSpec {
+        file: format!("builtin://{model}/{entry}"),
+        tuple_output: outputs.len() > 1,
+        inputs,
+        outputs,
+    }
+}
+
+/// Full train-state input list: params, adam m, adam v, step, batch.
+fn train_inputs(cfg: &RefModelCfg, batch_shape: &[usize]) -> Vec<TensorSpec> {
+    let mut inputs = param_tensors(cfg);
+    for prefix in ["m", "v"] {
+        for (n, s) in param_layout(cfg) {
+            inputs.push(tensor(&format!("{prefix}_{n}"), DType::F32, &s));
+        }
+    }
+    inputs.push(tensor("step", DType::S32, &[]));
+    inputs.push(tensor("tokens", DType::S32, batch_shape));
+    inputs.push(tensor("labels", DType::S32, batch_shape));
+    inputs.push(tensor("mask", DType::F32, batch_shape));
+    inputs
+}
+
+fn train_outputs(cfg: &RefModelCfg, loss_shape: &[usize]) -> Vec<TensorSpec> {
+    let mut outputs = vec![tensor("loss", DType::F32, loss_shape)];
+    outputs.extend(param_tensors(cfg));
+    for prefix in ["m", "v"] {
+        for (n, s) in param_layout(cfg) {
+            outputs.push(tensor(&format!("{prefix}_{n}"), DType::F32, &s));
+        }
+    }
+    outputs.push(tensor("step", DType::S32, &[]));
+    outputs
+}
+
+fn model_spec(name: &str, cfg: &RefModelCfg) -> ModelSpec {
+    let (c, d, v) = (cfg.chunk, cfg.d, cfg.vocab);
+    let (b, n, k) = (cfg.batch, cfg.seq, cfg.block_k);
+    let mut artifacts = BTreeMap::new();
+    artifacts.insert(
+        "init".to_string(),
+        artifact(name, "init",
+                 vec![tensor("seed", DType::S32, &[])],
+                 param_tensors(cfg)),
+    );
+    let with_params = |extra: Vec<TensorSpec>| {
+        let mut inputs = param_tensors(cfg);
+        inputs.extend(extra);
+        inputs
+    };
+    artifacts.insert(
+        "enc".to_string(),
+        artifact(name, "enc",
+                 with_params(vec![tensor("tokens", DType::S32, &[1, c])]),
+                 vec![tensor("x", DType::F32, &[1, c, d])]),
+    );
+    artifacts.insert(
+        "agg".to_string(),
+        artifact(name, "agg",
+                 with_params(vec![
+                     tensor("left", DType::F32, &[1, c, d]),
+                     tensor("right", DType::F32, &[1, c, d]),
+                 ]),
+                 vec![tensor("state", DType::F32, &[1, c, d])]),
+    );
+    artifacts.insert(
+        "inf".to_string(),
+        artifact(name, "inf",
+                 with_params(vec![
+                     tensor("prefix", DType::F32, &[1, c, d]),
+                     tensor("x", DType::F32, &[1, c, d]),
+                 ]),
+                 vec![tensor("logits", DType::F32, &[1, c, v])]),
+    );
+    artifacts.insert(
+        "fwd".to_string(),
+        artifact(name, "fwd",
+                 with_params(vec![tensor("tokens", DType::S32, &[b, n])]),
+                 vec![tensor("logits", DType::F32, &[b, n, v])]),
+    );
+    artifacts.insert(
+        "train_step".to_string(),
+        artifact(name, "train_step",
+                 train_inputs(cfg, &[b, n]),
+                 train_outputs(cfg, &[])),
+    );
+    artifacts.insert(
+        "train_block".to_string(),
+        artifact(name, "train_block",
+                 train_inputs(cfg, &[k, b, n]),
+                 train_outputs(cfg, &[k])),
+    );
+    let config = Json::parse(&format!(
+        "{{\"vocab\": {v}, \"d\": {d}, \"chunk\": {c}}}"
+    ))
+    .expect("builtin config json");
+    ModelSpec {
+        name: name.to_string(),
+        kind: "psm".to_string(),
+        config,
+        params: param_layout(cfg),
+        artifacts,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend + executables
+// ---------------------------------------------------------------------------
+
+/// The pure-Rust backend over the built-in model registry.
+pub struct RefBackend {
+    manifest: Manifest,
+    configs: BTreeMap<String, RefModelCfg>,
+}
+
+impl Default for RefBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        let mut models = BTreeMap::new();
+        let mut configs = BTreeMap::new();
+        for (name, cfg) in MODELS {
+            models.insert(name.to_string(), model_spec(name, cfg));
+            configs.insert(name.to_string(), *cfg);
+        }
+        RefBackend {
+            manifest: Manifest { dir: PathBuf::from("<builtin>"), models },
+            configs,
+        }
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, model: &str, entry: &str) -> Result<Module> {
+        let spec = self.manifest.model(model)?.artifact(entry)?.clone();
+        let cfg = *self
+            .configs
+            .get(model)
+            .expect("config exists for every manifest model");
+        let kind = match entry {
+            "init" => EntryKind::Init,
+            "enc" => EntryKind::Enc,
+            "agg" => EntryKind::Agg,
+            "inf" => EntryKind::Inf,
+            "fwd" => EntryKind::Fwd,
+            "train_step" => EntryKind::TrainStep,
+            "train_block" => EntryKind::TrainBlock,
+            other => bail!("reference backend: unknown entry {other:?}"),
+        };
+        Ok(Module::from_exec(Box::new(RefExec { cfg, kind, spec })))
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum EntryKind {
+    Init,
+    Enc,
+    Agg,
+    Inf,
+    Fwd,
+    TrainStep,
+    TrainBlock,
+}
+
+struct RefExec {
+    cfg: RefModelCfg,
+    kind: EntryKind,
+    spec: ArtifactSpec,
+}
+
+impl Executable for RefExec {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        match self.kind {
+            EntryKind::Init => self.run_init(inputs),
+            EntryKind::Enc => self.run_enc(inputs),
+            EntryKind::Agg => self.run_agg(inputs),
+            EntryKind::Inf => self.run_inf(inputs),
+            EntryKind::Fwd => self.run_fwd(inputs),
+            EntryKind::TrainStep => self.run_train(inputs, false),
+            EntryKind::TrainBlock => self.run_train(inputs, true),
+        }
+    }
+}
+
+impl RefExec {
+    fn run_init(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let cfg = &self.cfg;
+        let seed = inputs[0].as_s32()?[0];
+        let mut rng = Rng::new(seed as i64 as u64 ^ 0x5EED_CAFE);
+        let mut tok_emb = vec![0.0f32; cfg.vocab * cfg.d];
+        for x in tok_emb.iter_mut() {
+            *x = rng.normal() as f32 * 0.5;
+        }
+        // e_state MUST be the monoid identity (all-zero) for the
+        // streaming prefix fold to match the static scan; head starts
+        // at zero so the initial loss is exactly ln(vocab).
+        Ok(vec![
+            HostValue::f32(&[cfg.vocab, cfg.d], tok_emb),
+            HostValue::zeros_f32(&[cfg.chunk, cfg.d]),
+            HostValue::zeros_f32(&[cfg.d, cfg.vocab]),
+            HostValue::zeros_f32(&[cfg.vocab]),
+        ])
+    }
+
+    fn run_enc(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let cfg = &self.cfg;
+        let tok_emb = inputs[0].as_f32()?;
+        let toks = inputs[N_PARAMS].as_s32()?;
+        let y = enc_chunk(cfg, tok_emb, toks);
+        Ok(vec![HostValue::f32(&[1, cfg.chunk, cfg.d], y)])
+    }
+
+    fn run_agg(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let cfg = &self.cfg;
+        let op = ChunkSumOp { c: cfg.chunk, d: cfg.d };
+        let l = inputs[N_PARAMS].as_f32()?.to_vec();
+        let r = inputs[N_PARAMS + 1].as_f32()?.to_vec();
+        let out = op.agg(&l, &r);
+        Ok(vec![HostValue::f32(&[1, cfg.chunk, cfg.d], out)])
+    }
+
+    fn run_inf(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let cfg = &self.cfg;
+        let (c, d, v) = (cfg.chunk, cfg.d, cfg.vocab);
+        let head = inputs[2].as_f32()?;
+        let head_b = inputs[3].as_f32()?;
+        let prefix = inputs[N_PARAMS].as_f32()?;
+        let x = inputs[N_PARAMS + 1].as_f32()?;
+        let tail = &prefix[(c - 1) * d..c * d];
+        let mut logits = vec![0.0f32; c * v];
+        let mut h = vec![0.0f32; d];
+        for j in 0..c {
+            for f in 0..d {
+                h[f] = tail[f] + x[j * d + f];
+            }
+            logits_row(cfg, head, head_b, &h, &mut logits[j * v..(j + 1) * v]);
+        }
+        Ok(vec![HostValue::f32(&[1, c, v], logits)])
+    }
+
+    fn run_fwd(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let cfg = &self.cfg;
+        let (b, n, v) = (cfg.batch, cfg.seq, cfg.vocab);
+        let tok_emb = inputs[0].as_f32()?;
+        let head = inputs[2].as_f32()?;
+        let head_b = inputs[3].as_f32()?;
+        let toks = inputs[N_PARAMS].as_s32()?;
+        let mut logits = vec![0.0f32; b * n * v];
+        for bi in 0..b {
+            let row = &toks[bi * n..(bi + 1) * n];
+            let hs = forward_hidden(cfg, tok_emb, row);
+            for (t, h) in hs.iter().enumerate() {
+                let base = (bi * n + t) * v;
+                logits_row(cfg, head, head_b, h, &mut logits[base..base + v]);
+            }
+        }
+        Ok(vec![HostValue::f32(&[b, n, v], logits)])
+    }
+
+    /// One Adam step of the linear-probe head on one batch; returns the
+    /// masked mean cross-entropy.
+    fn step_batch(
+        &self,
+        params: &mut [Vec<f32>],
+        m: &mut [Vec<f32>],
+        v: &mut [Vec<f32>],
+        step: i32,
+        tokens: &[i32],
+        labels: &[i32],
+        mask: &[f32],
+    ) -> f32 {
+        let cfg = &self.cfg;
+        let (b, n, d, vs) = (cfg.batch, cfg.seq, cfg.d, cfg.vocab);
+        let msum: f32 = mask.iter().sum();
+        if msum <= 0.0 {
+            return 0.0;
+        }
+        let mut loss = 0.0f32;
+        let mut d_head = vec![0.0f32; d * vs];
+        let mut d_bias = vec![0.0f32; vs];
+        let mut row_logits = vec![0.0f32; vs];
+        for bi in 0..b {
+            let row = &tokens[bi * n..(bi + 1) * n];
+            let hs = forward_hidden(cfg, &params[0], row);
+            for t in 0..n {
+                let mi = mask[bi * n + t];
+                if mi <= 0.0 {
+                    continue;
+                }
+                let h = &hs[t];
+                let denom = h[0].max(1.0);
+                logits_row(cfg, &params[2], &params[3], h, &mut row_logits);
+                let mx = row_logits.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let lse = mx
+                    + row_logits.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln();
+                let lab =
+                    (labels[bi * n + t].max(0) as usize).min(vs - 1);
+                loss += mi * (lse - row_logits[lab]);
+                let w = mi / msum;
+                for vi in 0..vs {
+                    let p = (row_logits[vi] - lse).exp();
+                    let g = (p - if vi == lab { 1.0 } else { 0.0 }) * w;
+                    d_bias[vi] += g;
+                    for f in 0..d {
+                        d_head[f * vs + vi] += g * (h[f] / denom);
+                    }
+                }
+            }
+        }
+        let t = step + 1;
+        adam(&mut params[2], &d_head, &mut m[2], &mut v[2], t);
+        adam(&mut params[3], &d_bias, &mut m[3], &mut v[3], t);
+        loss / msum
+    }
+
+    fn run_train(&self, inputs: &[HostValue], block: bool) -> Result<Vec<HostValue>> {
+        let cfg = &self.cfg;
+        let mut params: Vec<Vec<f32>> = (0..N_PARAMS)
+            .map(|i| inputs[i].as_f32().map(<[f32]>::to_vec))
+            .collect::<Result<_>>()?;
+        let mut m: Vec<Vec<f32>> = (0..N_PARAMS)
+            .map(|i| inputs[N_PARAMS + i].as_f32().map(<[f32]>::to_vec))
+            .collect::<Result<_>>()?;
+        let mut v: Vec<Vec<f32>> = (0..N_PARAMS)
+            .map(|i| inputs[2 * N_PARAMS + i].as_f32().map(<[f32]>::to_vec))
+            .collect::<Result<_>>()?;
+        let mut step = inputs[3 * N_PARAMS].as_s32()?[0];
+        let tokens = inputs[3 * N_PARAMS + 1].as_s32()?;
+        let labels = inputs[3 * N_PARAMS + 2].as_s32()?;
+        let mask = inputs[3 * N_PARAMS + 3].as_f32()?;
+
+        let per = cfg.batch * cfg.seq;
+        let k = if block { cfg.block_k } else { 1 };
+        let mut losses = Vec::with_capacity(k);
+        for ki in 0..k {
+            let lo = ki * per;
+            let loss = self.step_batch(
+                &mut params,
+                &mut m,
+                &mut v,
+                step,
+                &tokens[lo..lo + per],
+                &labels[lo..lo + per],
+                &mask[lo..lo + per],
+            );
+            losses.push(loss);
+            step += 1;
+        }
+
+        let layout = param_layout(cfg);
+        let mut outs = Vec::with_capacity(2 + 3 * N_PARAMS);
+        if block {
+            outs.push(HostValue::f32(&[k], losses));
+        } else {
+            outs.push(HostValue::f32(&[], losses));
+        }
+        for (buf, (_, shape)) in params.into_iter().zip(&layout) {
+            outs.push(HostValue::f32(shape, buf));
+        }
+        for (buf, (_, shape)) in m.into_iter().zip(&layout) {
+            outs.push(HostValue::f32(shape, buf));
+        }
+        for (buf, (_, shape)) in v.into_iter().zip(&layout) {
+            outs.push(HostValue::f32(shape, buf));
+        }
+        outs.push(HostValue::scalar_s32(step));
+        Ok(outs)
+    }
+}
+
+/// In-place Adam update with bias correction.
+fn adam(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], t: i32) {
+    let bc1 = 1.0 - BETA1.powi(t);
+    let bc2 = 1.0 - BETA2.powi(t);
+    for i in 0..w.len() {
+        m[i] = BETA1 * m[i] + (1.0 - BETA1) * g[i];
+        v[i] = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        w[i] -= LR * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::{blelloch_scan, sequential_scan};
+
+    fn rand_state(rng: &mut Rng, c: usize, d: usize) -> Vec<f32> {
+        (0..c * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn chunk_sum_op_is_associative() {
+        // The backend's Agg must be a true monoid: Blelloch grouping ==
+        // left fold on random chunk states.
+        let (c, d) = (4, 3);
+        let op = ChunkSumOp { c, d };
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let xs: Vec<Vec<f32>> =
+                (0..n).map(|_| rand_state(&mut rng, c, d)).collect();
+            let b = blelloch_scan(&op, &xs);
+            let s = sequential_scan(&op, &xs);
+            for (t, (pb, ps)) in b.iter().zip(&s).enumerate() {
+                let err = pb
+                    .iter()
+                    .zip(ps)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(err < 1e-4, "n={n} t={t}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_contracts_parse() {
+        let be = RefBackend::new();
+        for (name, _) in MODELS {
+            let spec = be.manifest().model(name).unwrap();
+            assert_eq!(spec.kind, "psm");
+            assert_eq!(spec.n_params(), N_PARAMS);
+            for entry in
+                ["init", "enc", "agg", "inf", "fwd", "train_step", "train_block"]
+            {
+                let m = be.load(name, entry).unwrap();
+                assert_eq!(m.spec.file, format!("builtin://{name}/{entry}"));
+            }
+        }
+        assert!(be.load("psm_s5", "decode_64").is_err());
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let be = RefBackend::new();
+        let init = be.load("psm_s5", "init").unwrap();
+        let a = init.run(&[HostValue::scalar_s32(7)]).unwrap();
+        let b = init.run(&[HostValue::scalar_s32(7)]).unwrap();
+        let c = init.run(&[HostValue::scalar_s32(8)]).unwrap();
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+        assert_ne!(a[0].as_f32().unwrap(), c[0].as_f32().unwrap());
+        // e_state is the exact monoid identity.
+        assert!(a[1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fwd_is_finite_and_shaped() {
+        let be = RefBackend::new();
+        let cfg = be.configs["psm_lm_c16"];
+        let init = be.load("psm_lm_c16", "init").unwrap();
+        let params = init.run(&[HostValue::scalar_s32(3)]).unwrap();
+        let fwd = be.load("psm_lm_c16", "fwd").unwrap();
+        let mut inputs = params;
+        let toks: Vec<i32> = (0..cfg.batch * cfg.seq)
+            .map(|i| (i % cfg.vocab) as i32)
+            .collect();
+        inputs.push(HostValue::s32(&[cfg.batch, cfg.seq], toks));
+        let outs = fwd.run(&inputs).unwrap();
+        assert_eq!(outs[0].shape(), &[cfg.batch, cfg.seq, cfg.vocab][..]);
+        assert!(outs[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let be = RefBackend::new();
+        let cfg = be.configs["psm_s5"];
+        let init = be.load("psm_s5", "init").unwrap();
+        let ts = be.load("psm_s5", "train_step").unwrap();
+        let mut state = init.run(&[HostValue::scalar_s32(1)]).unwrap();
+        let zeros: Vec<HostValue> = state
+            .iter()
+            .map(|p| HostValue::zeros_f32(p.shape()))
+            .collect();
+        state.extend(zeros.clone());
+        state.extend(zeros);
+        state.push(HostValue::scalar_s32(0));
+        let n = cfg.batch * cfg.seq;
+        let tokens =
+            HostValue::s32(&[cfg.batch, cfg.seq],
+                           (0..n).map(|i| (i % 50) as i32).collect());
+        let labels = HostValue::s32(&[cfg.batch, cfg.seq], vec![1; n]);
+        let mask = HostValue::f32(&[cfg.batch, cfg.seq], vec![1.0; n]);
+        let mut losses = Vec::new();
+        for _ in 0..10 {
+            let mut inputs = state.clone();
+            inputs.push(tokens.clone());
+            inputs.push(labels.clone());
+            inputs.push(mask.clone());
+            let outs = ts.run(&inputs).unwrap();
+            losses.push(outs[0].as_f32().unwrap()[0]);
+            state = outs[1..].to_vec();
+        }
+        // Head starts at zero => first loss is exactly ln(vocab).
+        assert!((losses[0] - (cfg.vocab as f32).ln()).abs() < 1e-3,
+                "losses[0] = {}", losses[0]);
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(losses[9] < losses[0] * 0.9, "{losses:?}");
+        // Step counter advanced inside the executable.
+        assert_eq!(state.last().unwrap().as_s32().unwrap()[0], 10);
+    }
+
+    #[test]
+    fn train_block_matches_repeated_steps() {
+        let be = RefBackend::new();
+        let cfg = be.configs["psm_s5"];
+        let init = be.load("psm_s5", "init").unwrap();
+        let tb = be.load("psm_s5", "train_block").unwrap();
+        let mut state = init.run(&[HostValue::scalar_s32(2)]).unwrap();
+        let zeros: Vec<HostValue> = state
+            .iter()
+            .map(|p| HostValue::zeros_f32(p.shape()))
+            .collect();
+        state.extend(zeros.clone());
+        state.extend(zeros);
+        state.push(HostValue::scalar_s32(0));
+        let k = cfg.block_k;
+        let n = k * cfg.batch * cfg.seq;
+        let mut inputs = state;
+        inputs.push(HostValue::s32(&[k, cfg.batch, cfg.seq],
+                                   vec![3; n]));
+        inputs.push(HostValue::s32(&[k, cfg.batch, cfg.seq],
+                                   vec![1; n]));
+        inputs.push(HostValue::f32(&[k, cfg.batch, cfg.seq],
+                                   vec![1.0; n]));
+        let outs = tb.run(&inputs).unwrap();
+        let losses = outs[0].as_f32().unwrap();
+        assert_eq!(losses.len(), k);
+        assert!(losses[k - 1] < losses[0], "{losses:?}");
+        assert_eq!(outs.last().unwrap().as_s32().unwrap()[0], k as i32);
+    }
+}

@@ -1,6 +1,9 @@
-//! Host-side tensor values and conversion to/from PJRT [`xla::Literal`]s.
+//! Host-side tensor values — the currency of the [`super::backend`]
+//! layer. Conversions to/from PJRT literals are compiled only under the
+//! `pjrt` feature; the reference backend operates on these directly.
 
 use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
 use xla::Literal;
 
 use super::manifest::{DType, TensorSpec};
@@ -79,6 +82,11 @@ impl HostValue {
         Ok(())
     }
 
+}
+
+/// PJRT literal conversions (only meaningful with the `pjrt` backend).
+#[cfg(feature = "pjrt")]
+impl HostValue {
     /// Convert to a PJRT literal (host copy).
     pub fn to_literal(&self) -> Result<Literal> {
         let dims: Vec<i64> =
@@ -122,7 +130,13 @@ impl HostValue {
 mod tests {
     use super::*;
 
+    // The literal round-trip tests require the *real* xla crate (the
+    // vendored stub errors at runtime), so they are compiled with the
+    // pjrt feature but marked #[ignore]; run them with
+    // `cargo test --features pjrt -- --ignored` against a real build.
+    #[cfg(feature = "pjrt")]
     #[test]
+    #[ignore = "requires the real xla crate, not the vendored stub"]
     fn roundtrip_f32() {
         let v = HostValue::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let lit = v.to_literal().unwrap();
@@ -135,7 +149,9 @@ mod tests {
         assert_eq!(back, v);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
+    #[ignore = "requires the real xla crate, not the vendored stub"]
     fn roundtrip_scalar_s32() {
         let v = HostValue::scalar_s32(42);
         let lit = v.to_literal().unwrap();

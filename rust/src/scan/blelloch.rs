@@ -41,12 +41,21 @@ pub fn blelloch_scan<A: Aggregator>(
         pref[2 * v] = pref[v].clone();
         pref[2 * v + 1] = op.agg(&pref[v], &tree[2 * v]);
     }
-    pref[r..r + n].to_vec()
+    // Move (not clone) the leaf prefixes out.
+    pref.truncate(r + n);
+    pref.split_off(r)
 }
 
 /// Parallel Blelloch scan: same values as [`blelloch_scan`], with each
 /// tree *level* executed across `workers` threads — Θ(log n) parallel
 /// steps of Θ(n) total work, the paper's training-circuit shape.
+///
+/// Allocation-lean execution: both sweeps write results **in place**
+/// into the (single) tree/prefix buffers through
+/// [`pool::parallel_fill`], so no per-level `Vec` is allocated; levels
+/// smaller than `4 * workers` nodes run inline, since spawning scoped
+/// workers costs more than a handful of `Agg` calls (`cargo bench
+/// --bench scan_hotpath` measures the sequential-vs-parallel ratio).
 pub fn blelloch_scan_parallel<A>(
     op: &A,
     items: &[A::State],
@@ -61,44 +70,67 @@ where
         return Vec::new();
     }
     let r = n.next_power_of_two();
+    let workers = workers.max(1);
+    let par_min = 4 * workers;
+
     let mut tree: Vec<A::State> = Vec::with_capacity(2 * r);
     tree.resize(2 * r, op.identity());
     for (i, x) in items.iter().enumerate() {
         tree[r + i] = x.clone();
     }
-    // Upsweep level by level: nodes [2^k, 2^{k+1}) are independent.
-    let mut level_start = r / 2;
-    while level_start >= 1 {
-        let level = level_start..(2 * level_start);
-        let parents: Vec<A::State> =
-            pool::parallel_map(level.len(), workers, |i| {
-                let v = level_start + i;
-                op.agg(&tree[2 * v], &tree[2 * v + 1])
+
+    // Upsweep: parents [k, 2k) read children [2k, 4k) — disjoint slices
+    // of the same buffer, split at 2k.
+    let mut level = r / 2;
+    while level >= 1 {
+        let (upper, lower) = tree.split_at_mut(2 * level);
+        let parents = &mut upper[level..];
+        let children: &[A::State] = lower;
+        if workers == 1 || level < par_min {
+            for (i, parent) in parents.iter_mut().enumerate() {
+                *parent = op.agg(&children[2 * i], &children[2 * i + 1]);
+            }
+        } else {
+            pool::parallel_fill(parents, workers, |i| {
+                op.agg(&children[2 * i], &children[2 * i + 1])
             });
-        for (i, p) in parents.into_iter().enumerate() {
-            tree[level_start + i] = p;
         }
-        let _ = level;
-        level_start /= 2;
+        level /= 2;
     }
-    // Downsweep level by level.
+
+    // Downsweep: children [2k, 4k) read parents [k, 2k) plus the frozen
+    // upsweep tree; again a single split borrow, written in place.
     let mut pref: Vec<A::State> = Vec::with_capacity(2 * r);
     pref.resize(2 * r, op.identity());
-    let mut level_start = 1;
-    while level_start < r {
-        let children: Vec<(A::State, A::State)> =
-            pool::parallel_map(level_start, workers, |i| {
-                let v = level_start + i;
-                (pref[v].clone(), op.agg(&pref[v], &tree[2 * v]))
+    let mut level = 1;
+    while level < r {
+        let (upper, lower) = pref.split_at_mut(2 * level);
+        let parents = &upper[level..];
+        let children = &mut lower[..2 * level];
+        let tree_ref = &tree;
+        if workers == 1 || children.len() < par_min {
+            for (j, child) in children.iter_mut().enumerate() {
+                let v = level + j / 2;
+                *child = if j % 2 == 0 {
+                    parents[j / 2].clone()
+                } else {
+                    op.agg(&parents[j / 2], &tree_ref[2 * v])
+                };
+            }
+        } else {
+            pool::parallel_fill(children, workers, |j| {
+                let v = level + j / 2;
+                if j % 2 == 0 {
+                    parents[j / 2].clone()
+                } else {
+                    op.agg(&parents[j / 2], &tree_ref[2 * v])
+                }
             });
-        for (i, (even, odd)) in children.into_iter().enumerate() {
-            let v = level_start + i;
-            pref[2 * v] = even;
-            pref[2 * v + 1] = odd;
         }
-        level_start *= 2;
+        level *= 2;
     }
-    pref[r..r + n].to_vec()
+    pref.truncate(r + n);
+    pref.split_off(r)
 }
 
 #[cfg(test)]

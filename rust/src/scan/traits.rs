@@ -29,8 +29,11 @@ pub trait Aggregator {
 }
 
 /// Wrapper that counts `agg` invocations — used by the complexity bench
-/// to verify the paper's "amortised ~2 Agg calls per element" claim and
-/// the `O(log n)` memory bound empirically.
+/// to verify the paper's amortised-work claim (≈1 carry merge per
+/// element as counted here; the paper's "~2 Agg calls" additionally
+/// counts the leaf placement, which is a plain store in this
+/// implementation — see [`super::counter`] module docs) and the
+/// `O(log n)` memory bound empirically.
 pub struct CountingAgg<A> {
     inner: A,
     calls: Cell<u64>,

@@ -47,6 +47,41 @@ where
     });
 }
 
+/// Fill `dst[i] = f(i)` in parallel, writing straight into the caller's
+/// buffer — the zero-allocation sibling of [`parallel_map`]. The
+/// Blelloch levels ([`crate::scan::blelloch`]) call this once per tree
+/// level so no per-level `Vec` is churned.
+pub fn parallel_fill<T, F>(dst: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let n = dst.len();
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        for (i, slot) in dst.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return;
+    }
+    struct Slots<T>(*mut T);
+    // SAFETY: each index is claimed by exactly one worker (parallel_for
+    // hands out every i once), so writes are disjoint; the scope joins
+    // all workers before the caller can observe `dst` again. Assignment
+    // drops the old (initialised) value in place.
+    unsafe impl<T: Send> Sync for Slots<T> {}
+
+    let slots = Slots(dst.as_mut_ptr());
+    let slots_ref = &slots;
+    parallel_for(n, workers, |i| {
+        let v = f(i);
+        unsafe { *slots_ref.0.add(i) = v };
+    });
+}
+
 /// Map `f` over `0..n` in parallel, collecting results in index order.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
@@ -103,5 +138,22 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);
         }
+    }
+
+    #[test]
+    fn fill_writes_every_slot_and_drops_old_values() {
+        // Strings verify both index coverage and that overwriting the
+        // pre-existing (heap-owning) values is drop-safe.
+        let mut dst: Vec<String> = (0..200).map(|_| "old".to_string()).collect();
+        parallel_fill(&mut dst, 8, |i| format!("new-{i}"));
+        for (i, v) in dst.iter().enumerate() {
+            assert_eq!(v, &format!("new-{i}"));
+        }
+        // Empty and single-worker paths.
+        let mut empty: Vec<u8> = Vec::new();
+        parallel_fill(&mut empty, 4, |_| 1);
+        let mut one = vec![0usize; 10];
+        parallel_fill(&mut one, 1, |i| i + 1);
+        assert_eq!(one, (1..=10).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,184 @@
+//! End-to-end on the pure-Rust reference backend — runs in tier-1 CI on
+//! a clean machine (no Python artifacts, no PJRT):
+//!
+//! * train through the `Trainer` driver (train_block path) and watch
+//!   the loss fall on a fixed batch,
+//! * check the sequential-parallel duality at the *serving* level: the
+//!   streaming coordinator (binary-counter over `agg`) reproduces the
+//!   static `fwd` logits position for position, for chunk = 1 and
+//!   chunk = 16 models,
+//! * round-trip a checkpoint and serve from it,
+//! * drive the server's executor loop through its request channel.
+//!
+//! harness = false; exits non-zero when any check fails.
+
+use psm::coordinator::server::{executor_loop, Request};
+use psm::coordinator::PsmSession;
+use psm::data::s5;
+use psm::runtime::{ParamStore, Runtime};
+use psm::train::eval::Evaluator;
+use psm::train::Trainer;
+use psm::util::prng::Rng;
+
+fn main() {
+    let rt = Runtime::reference();
+    assert_eq!(rt.backend_name(), "reference");
+
+    let mut failed = 0;
+    let mut run = |name: &str, f: &dyn Fn()| {
+        let t0 = std::time::Instant::now();
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+            .is_ok();
+        println!(
+            "test reference_e2e::{name} ... {} ({:.1}s)",
+            if ok { "ok" } else { "FAILED" },
+            t0.elapsed().as_secs_f64()
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("stream_matches_fwd_chunk1", &|| stream_matches_fwd(&rt, "psm_s5"));
+    run("stream_matches_fwd_chunk16", &|| {
+        stream_matches_fwd(&rt, "psm_lm_c16")
+    });
+    run("session_memory_bound_chunked", &|| {
+        session_memory_bound_chunked(&rt)
+    });
+    run("train_loss_falls_and_checkpoints", &|| {
+        train_loss_falls_and_checkpoints(&rt)
+    });
+    run("executor_loop_serves_requests", &|| {
+        executor_loop_serves_requests(&rt)
+    });
+
+    if failed > 0 {
+        eprintln!("{failed} reference_e2e tests failed");
+        std::process::exit(1);
+    }
+}
+
+/// Thm 3.5 at the serving level: the streaming session and the static
+/// `fwd` entry point share the enc/agg/inf kernels and the binary-
+/// counter parenthesisation, so their logits agree to float tolerance.
+fn stream_matches_fwd(rt: &Runtime, model: &str) {
+    let params = ParamStore::init(rt, model, 3).unwrap();
+    let ev = Evaluator::new(rt, model, "fwd").unwrap();
+    let (bsz, seq, vocab) = (ev.batch, ev.seq_len, {
+        let spec = rt.model(model).unwrap();
+        spec.cfg_usize("vocab").unwrap()
+    });
+
+    // A batch of in-range tokens (any values work — the check is about
+    // the computation graph, not the task).
+    let mut rng = Rng::new(17);
+    let tokens: Vec<i32> = (0..bsz * seq)
+        .map(|_| rng.range(0, vocab.min(100)) as i32)
+        .collect();
+    let mut inputs = params.to_values();
+    inputs.push(psm::runtime::HostValue::s32(&[bsz, seq], tokens.clone()));
+    let fwd = rt.load(model, "fwd").unwrap();
+    let static_logits = fwd.run(&inputs).unwrap()[0].as_f32().unwrap().to_vec();
+
+    let mut sess = PsmSession::new(rt, model, &params).unwrap();
+    let row0 = &tokens[..seq];
+    let stream = sess.logits_stream(row0).unwrap();
+    for (t, row) in stream.iter().enumerate() {
+        let base = t * vocab; // batch row 0
+        let stat = &static_logits[base..base + vocab];
+        let max_err = row
+            .iter()
+            .zip(stat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_err <= 1e-5,
+            "{model}: stream vs static logits diverge at t={t}: {max_err}"
+        );
+    }
+
+    // Cor 3.6 on the session: occupied roots == popcount(chunks).
+    let chunks = sess.chunk_count();
+    assert_eq!(sess.occupied_roots() as u32, chunks.count_ones());
+}
+
+/// Chunked session over many chunks: popcount memory bound and the
+/// amortised agg-call budget (carry ~1 + fold <= log2) per chunk.
+fn session_memory_bound_chunked(rt: &Runtime) {
+    let model = "psm_lm_c16";
+    let params = ParamStore::init(rt, model, 9).unwrap();
+    let mut sess = PsmSession::new(rt, model, &params).unwrap();
+    for t in 0..(16 * 21 + 5) {
+        let logits = sess.push_token((t % 200) as i32).unwrap();
+        assert_eq!(logits.len(), sess.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(
+            sess.occupied_roots() as u32,
+            sess.chunk_count().count_ones()
+        );
+    }
+    assert_eq!(sess.chunk_count(), 21);
+    let per_chunk = sess.metrics.agg_calls_per_chunk(sess.chunk);
+    assert!(per_chunk < 6.0, "agg calls/chunk {per_chunk}");
+    sess.reset().unwrap();
+    assert_eq!(sess.chunk_count(), 0);
+    assert_eq!(sess.occupied_roots(), 0);
+}
+
+/// Full training driver on the reference backend: fixed-batch loss must
+/// fall from the exact max-entropy start; checkpoint round-trips into a
+/// serving session.
+fn train_loss_falls_and_checkpoints(rt: &Runtime) {
+    let model = "psm_s5";
+    let mut trainer = Trainer::new(rt, model, 1).unwrap();
+    let (bsz, seq) = trainer.batch_shape();
+    assert!(trainer.block_k() >= 2, "train_block registered");
+    let mut rng = Rng::new(99);
+    let fixed = s5::batch(&mut rng, bsz, 8, seq);
+    trainer.run(24, || fixed.clone()).unwrap();
+    assert_eq!(trainer.step_count(), 24);
+    let first = trainer.losses[0];
+    let last = *trainer.losses.last().unwrap();
+    assert!(first.is_finite() && last.is_finite());
+    // Head starts at zero => first loss is exactly ln(vocab).
+    assert!((first - (s5::VOCAB as f32).ln()).abs() < 1e-3, "first={first}");
+    assert!(last < first, "loss should fall on a fixed batch: \
+                           {first} -> {last}");
+
+    // Checkpoint round trip drives a fresh session.
+    let params = trainer.params().unwrap();
+    let path = std::env::temp_dir().join("psm_reference_e2e_ckpt.bin");
+    params.save(&path).unwrap();
+    let spec = rt.model(model).unwrap().clone();
+    let back = ParamStore::load(&spec, &path).unwrap();
+    let mut sess = PsmSession::new(rt, model, &back).unwrap();
+    let logits = sess.push_token(1).unwrap();
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+/// The server's executor loop, driven directly through its channel (no
+/// TCP): generate, stats, shutdown.
+fn executor_loop_serves_requests(rt: &Runtime) {
+    let model = "psm_s5";
+    let params = ParamStore::init(rt, model, 42).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (gen_tx, gen_rx) = std::sync::mpsc::channel();
+    let (stats_tx, stats_rx) = std::sync::mpsc::channel();
+    tx.send(Request::Generate {
+        session: 0,
+        prompt: vec![1, 2, 3],
+        n: 4,
+        reply: gen_tx,
+    })
+    .unwrap();
+    tx.send(Request::Stats { reply: stats_tx }).unwrap();
+    tx.send(Request::Shutdown).unwrap();
+    executor_loop(rt, model, &params, rx).unwrap();
+
+    let out = gen_rx.recv().unwrap().unwrap();
+    assert_eq!(out.len(), 4);
+    let (tokens, sessions) = stats_rx.recv().unwrap();
+    assert_eq!(tokens, 7); // 3 prompt + 4 generated
+    assert_eq!(sessions, 1);
+}

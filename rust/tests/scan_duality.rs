@@ -29,6 +29,7 @@ fn main() {
     };
 
     run("thm35_numeric_random_lengths", thm35_numeric_random_lengths);
+    run("thm35_exhaustive_sweep_1_to_256", thm35_exhaustive_sweep_1_to_256);
     run("thm35_structural_to_512", thm35_structural_to_512);
     run("cor36_memory_popcount", cor36_memory_popcount);
     run("amortised_work_constant", amortised_work_constant);
@@ -67,6 +68,32 @@ fn thm35_numeric_random_lengths() {
             Ok(())
         },
     );
+}
+
+/// Exhaustive sweep: for EVERY n in 1..=256, with the non-associative
+/// HalfAddOp, the three implementations agree at every prefix —
+/// `OnlineScan::prefix` == `blelloch_scan` == `blelloch_scan_parallel`.
+/// Equality is exact (`==` on f64): identical parenthesisation means
+/// identical floating-point operations, not merely close values. This
+/// pins both Thm 3.5 and the in-place parallel execution (including its
+/// small-level inline cutoff) across every padding shape.
+fn thm35_exhaustive_sweep_1_to_256() {
+    let op = HalfAddOp;
+    let mut rng = Rng::new(0x5EED);
+    for n in 1usize..=256 {
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let static_pref = blelloch_scan(&op, &xs);
+        for workers in [1usize, 4, 8] {
+            let par = blelloch_scan_parallel(&op, &xs, workers);
+            assert_eq!(static_pref, par,
+                       "parallel({workers}) differs at n={n}");
+        }
+        let mut online = OnlineScan::new(&op);
+        for (t, x) in xs.iter().enumerate() {
+            assert_eq!(online.prefix(), static_pref[t], "n={n} t={t}");
+            online.push(*x);
+        }
+    }
 }
 
 /// Thm 3.5 structurally: identical expression trees at every prefix for
