@@ -11,8 +11,12 @@ build:
 test:
 	cargo build --release && cargo test -q
 
+# Perf trajectory: each bench writes its machine-readable artifact
+# (BENCH_scan.json / BENCH_latency.json) to the workspace root
+# (PSM_BENCH_DIR overrides).
 bench:
 	cargo bench --bench scan_hotpath
+	cargo bench --bench fig6_latency
 
 # AOT-lower every model entry point to HLO text + manifest.json for the
 # PJRT backend. Requires a python environment with jax (build-time only;

@@ -1,45 +1,210 @@
 //! L3 hot-path microbenchmarks (the §Perf working set): pure-rust scan
 //! throughput — sequential vs Blelloch vs parallel Blelloch vs online —
-//! over the affine monoid at realistic state sizes, plus the symbolic
-//! overhead of the counter itself.
+//! over the affine monoid at realistic state sizes, the symbolic
+//! overhead of the counter itself, and the headline before/after of the
+//! allocation-free scan core: the `ChunkSumOp` (c=32, d=48) online
+//! scan, owned-`agg` path (the pre-PR behaviour: one heap allocation
+//! per merge and per prefix fold step) versus the in-place
+//! `agg_into` + arena path.
 //!
-//! Run: `cargo bench --bench scan_hotpath`
+//! A counting global allocator measures allocs/elem directly; results
+//! are written to `BENCH_scan.json` (ns/elem, allocs/elem,
+//! before/after, speedup) so the repo's perf trajectory is
+//! machine-readable.
+//!
+//! Run: `cargo bench --bench scan_hotpath` (or `make bench`).
 
 use psm::affine::families::gla::Gla;
 use psm::affine::{AffineOp, Family};
-use psm::bench::{black_box, Bencher, Table};
+use psm::bench::{alloc_count, black_box, Bencher, CountingAlloc, Table};
+use psm::runtime::reference::ChunkSumOp;
+use psm::scan::traits::ops::AddOp;
+use psm::scan::traits::Aggregator;
 use psm::scan::{
     blelloch_scan, blelloch_scan_parallel, sequential_scan, OnlineScan,
 };
-use psm::scan::traits::ops::AddOp;
 use psm::util::prng::Rng;
 
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// The pre-PR `ChunkSumOp`: owned `agg` only (element-pushed `Vec`
+/// build, no `agg_into` override), so every merge and every prefix
+/// fold step heap-allocates — the baseline this PR removes.
+struct OwnedChunkSumOp {
+    c: usize,
+    d: usize,
+}
+
+impl Aggregator for OwnedChunkSumOp {
+    type State = Vec<f32>;
+
+    fn identity(&self) -> Vec<f32> {
+        vec![0.0; self.c * self.d]
+    }
+
+    fn agg(&self, l: &Vec<f32>, r: &Vec<f32>) -> Vec<f32> {
+        let (c, d) = (self.c, self.d);
+        let tail = &l[(c - 1) * d..c * d];
+        let mut out = Vec::with_capacity(c * d);
+        for j in 0..c {
+            for f in 0..d {
+                out.push(tail[f] + r[j * d + f]);
+            }
+        }
+        out
+    }
+
+    fn claims_associative(&self) -> bool {
+        true
+    }
+}
+
+struct PathStats {
+    ns_per_elem: f64,
+    allocs_per_elem: f64,
+}
+
 fn main() {
-    let bench = Bencher::quick();
-    println!("# scan hot-path microbenchmarks\n");
+    // `--quick` (CI smoke) trims warmup/iteration budgets; the default
+    // run takes fuller samples for the recorded perf trajectory.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bencher::quick() } else { Bencher::default() };
+    println!(
+        "# scan hot-path microbenchmarks ({} mode)\n",
+        if quick { "quick" } else { "full" }
+    );
+
+    // --- headline: ChunkSumOp (c=32, d=48) online scan, owned vs
+    // in-place (the reference backend's real chunk shape)
+    let (c, d, n) = (32usize, 48usize, 512usize);
+    let mut rng = Rng::new(0xA11C);
+    let chunks: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..c * d).map(|_| rng.normal() as f32).collect())
+        .collect();
+
+    let owned_op = OwnedChunkSumOp { c, d };
+    let r_before = bench.run("owned", || {
+        let mut s = OnlineScan::new(&owned_op);
+        for ch in &chunks {
+            s.push(ch.clone());
+            black_box(s.prefix());
+        }
+    });
+    // Alloc count for one steady pass.
+    let before_allocs = {
+        let a0 = alloc_count();
+        let mut s = OnlineScan::new(&owned_op);
+        for ch in &chunks {
+            s.push(ch.clone());
+            black_box(s.prefix());
+        }
+        (alloc_count() - a0) as f64 / n as f64
+    };
+    let before_final = {
+        let mut s = OnlineScan::new(&owned_op);
+        for ch in &chunks {
+            s.push(ch.clone());
+        }
+        s.prefix()
+    };
+
+    let op = ChunkSumOp { c, d };
+    let mut arena: Vec<Vec<f32>> = Vec::new();
+    let mut pbuf: Vec<f32> = Vec::new();
+    let run_inplace = |arena: &mut Vec<Vec<f32>>, pbuf: &mut Vec<f32>| {
+        let mut s = OnlineScan::with_arena(&op, std::mem::take(arena));
+        for ch in &chunks {
+            let mut y = s.take_buffer();
+            y.resize(c * d, 0.0);
+            y.copy_from_slice(ch);
+            s.push(y);
+            s.prefix_into(pbuf);
+            black_box(&*pbuf);
+        }
+        *arena = s.into_arena();
+    };
+    // Warm the arena once so the timed passes are steady-state.
+    run_inplace(&mut arena, &mut pbuf);
+    let r_after = bench.run("in-place", || {
+        run_inplace(&mut arena, &mut pbuf);
+    });
+    let after_allocs = {
+        let a0 = alloc_count();
+        run_inplace(&mut arena, &mut pbuf);
+        (alloc_count() - a0) as f64 / n as f64
+    };
+    // Bit-exactness of the in-place path against the owned fold.
+    {
+        let mut s = OnlineScan::with_arena(&op, std::mem::take(&mut arena));
+        for ch in &chunks {
+            let mut y = s.take_buffer();
+            y.resize(c * d, 0.0);
+            y.copy_from_slice(ch);
+            s.push(y);
+        }
+        s.prefix_into(&mut pbuf);
+        assert_eq!(
+            before_final, pbuf,
+            "in-place scan diverged from the owned path"
+        );
+        arena = s.into_arena();
+    }
+    drop(arena);
+
+    let before = PathStats {
+        ns_per_elem: r_before.mean_ns / n as f64,
+        allocs_per_elem: before_allocs,
+    };
+    let after = PathStats {
+        ns_per_elem: r_after.mean_ns / n as f64,
+        allocs_per_elem: after_allocs,
+    };
+    let speedup = before.ns_per_elem / after.ns_per_elem;
+
+    println!("## ChunkSumOp online scan (c={c}, d={d}, n={n})");
+    let mut table = Table::new(&["path", "ns/elem", "allocs/elem"]);
+    table.row(&[
+        "owned agg (pre-PR)".into(),
+        format!("{:.0}", before.ns_per_elem),
+        format!("{:.2}", before.allocs_per_elem),
+    ]);
+    table.row(&[
+        "agg_into + arena".into(),
+        format!("{:.0}", after.ns_per_elem),
+        format!("{:.2}", after.allocs_per_elem),
+    ]);
+    table.print();
+    println!("speedup: {speedup:.2}x\n");
 
     // --- raw counter overhead (i64 add: measures the data structure,
     // not the operator)
     let mut table = Table::new(&[
         "n", "online push+fold (ns/elem)", "blelloch (ns/elem)",
     ]);
+    let mut counter_rows = Vec::new();
     for n in [1 << 10, 1 << 13, 1 << 16] {
         let xs: Vec<i64> = (0..n as i64).collect();
         let r1 = bench.run("online", || {
             let op = AddOp;
             let mut s = OnlineScan::new(&op);
+            let mut p = 0i64;
             for &x in &xs {
                 s.push(x);
-                black_box(s.prefix());
+                s.prefix_into(&mut p);
+                black_box(p);
             }
         });
         let r2 = bench.run("blelloch", || {
             black_box(blelloch_scan(&AddOp, &xs));
         });
+        let (online_ns, blelloch_ns) =
+            (r1.mean_ns / n as f64, r2.mean_ns / n as f64);
+        counter_rows.push((n, online_ns, blelloch_ns));
         table.row(&[
             n.to_string(),
-            format!("{:.1}", r1.mean_ns / n as f64),
-            format!("{:.1}", r2.mean_ns / n as f64),
+            format!("{online_ns:.1}"),
+            format!("{blelloch_ns:.1}"),
         ]);
     }
     table.print();
@@ -80,5 +245,42 @@ fn main() {
         ]);
     }
     table.print();
+
+    // --- machine-readable artifact: the repo's perf trajectory
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"scan_hotpath\",\n");
+    json.push_str("  \"chunk_sum_online\": {\n");
+    json.push_str(&format!(
+        "    \"c\": {c}, \"d\": {d}, \"n\": {n},\n"
+    ));
+    json.push_str(&format!(
+        "    \"before\": {{\"ns_per_elem\": {:.1}, \
+         \"allocs_per_elem\": {:.2}}},\n",
+        before.ns_per_elem, before.allocs_per_elem
+    ));
+    json.push_str(&format!(
+        "    \"after\": {{\"ns_per_elem\": {:.1}, \
+         \"allocs_per_elem\": {:.2}}},\n",
+        after.ns_per_elem, after.allocs_per_elem
+    ));
+    json.push_str(&format!("    \"speedup\": {speedup:.2}\n"));
+    json.push_str("  },\n");
+    json.push_str("  \"counter_overhead_i64\": [\n");
+    for (i, (n, online_ns, blelloch_ns)) in
+        counter_rows.iter().enumerate()
+    {
+        let sep = if i + 1 == counter_rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"n\": {n}, \"online_ns_per_elem\": {online_ns:.1}, \
+             \"blelloch_ns_per_elem\": {blelloch_ns:.1}}}{sep}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = psm::bench::artifact_path("BENCH_scan.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\ncould not write {}: {e}", path.display()),
+    }
     println!("\nscan_hotpath OK");
 }

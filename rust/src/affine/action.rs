@@ -69,6 +69,31 @@ impl Action {
             Action::RightMul(m) => s.matmul(m),
         }
     }
+
+    /// `E ▷ s` written into `out`, reusing its storage — the arithmetic
+    /// mirrors [`Action::apply`] operation for operation, so results
+    /// are bit-identical while the scan's recycled state slabs absorb
+    /// the work.
+    pub fn apply_into(&self, s: &Tensor, out: &mut Tensor) {
+        match self {
+            Action::Identity => out.copy_from(s),
+            Action::Scalar(a) => {
+                let a = *a;
+                out.fill_map(s, |x| x * a);
+            }
+            Action::ColDiag(d) => {
+                assert_eq!(d.len(), s.shape()[1]);
+                let n = d.len();
+                out.fill_map_indexed(s, |i, x| x * d[i % n]);
+            }
+            Action::Elem(t) => {
+                assert_eq!(s.shape(), t.shape(), "shape mismatch");
+                let td = t.data();
+                out.fill_map_indexed(s, |i, x| x * td[i]);
+            }
+            Action::RightMul(m) => s.matmul_into(m, out),
+        }
+    }
 }
 
 /// A point of `R x M`: the scan element `(E_t, f_t)`.
@@ -110,6 +135,21 @@ impl Aggregator for AffineOp {
             right.e.compose(&left.e),
             right.f.add(&right.e.apply(&left.f)),
         )
+    }
+
+    /// In-place merge: the large `[p, d]` state `f` is computed inside
+    /// `out.f`'s recycled buffer (`E_r ▷ f_l` via [`Action::apply_into`],
+    /// then `f_r +` in place, addend order preserved). Only the small
+    /// action composition still builds a fresh `Action`.
+    fn agg_into(
+        &self,
+        left: &AffinePair,
+        right: &AffinePair,
+        out: &mut AffinePair,
+    ) {
+        out.e = right.e.compose(&left.e);
+        right.e.apply_into(&left.f, &mut out.f);
+        out.f.radd_assign(&right.f);
     }
 
     fn claims_associative(&self) -> bool {
@@ -171,6 +211,34 @@ mod tests {
         let stepwise2 = earlier.apply(&later.apply(&s));
         let composed2 = earlier.compose(&later).apply(&s);
         assert!(composed2.max_abs_diff(&stepwise2) < 1e-5);
+    }
+
+    #[test]
+    fn agg_into_matches_owned_agg_for_every_action() {
+        let mut rng = Rng::new(5);
+        let d = 3;
+        let op = AffineOp { state_shape: [d, d] };
+        for case in 0..25 {
+            let mut mk = |rng: &mut Rng| {
+                let t = rand_tensor(rng, &[d, d]);
+                let e = match case % 5 {
+                    0 => Action::Identity,
+                    1 => Action::Scalar(rng.normal() as f32),
+                    2 => Action::ColDiag(rand_vec(rng, d)),
+                    3 => Action::Elem(t.clone()),
+                    _ => Action::RightMul(t.clone()),
+                };
+                AffinePair::new(e, rand_tensor(rng, &[d, d]))
+            };
+            let l = mk(&mut rng);
+            let r = mk(&mut rng);
+            let owned = op.agg(&l, &r);
+            let mut out = op.identity();
+            op.agg_into(&l, &r, &mut out);
+            // Bit-identical, not merely close: the in-place kernels
+            // mirror the owned arithmetic exactly.
+            assert_eq!(owned.f.max_abs_diff(&out.f), 0.0, "case {case}");
+        }
     }
 
     #[test]

@@ -5,9 +5,67 @@
 //! figure/table reproductions. Results can also be dumped as JSON for
 //! EXPERIMENTS.md.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{percentile, Summary};
+
+// ---------------------------------------------------------------------------
+// Counting allocator (allocs/elem measurements)
+// ---------------------------------------------------------------------------
+
+/// A `#[global_allocator]` that counts every heap allocation
+/// (`alloc` + `realloc`; deallocations are free). Shared by the
+/// `scan_hotpath` bench and the `alloc_free` test so both measure the
+/// same definition of "allocation". Each binary declares it:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static GLOBAL: psm::bench::CountingAlloc = psm::bench::CountingAlloc;
+/// ```
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations observed so far (monotonic; diff around a region).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Where bench artifacts (`BENCH_*.json`) are written: the workspace
+/// root (one level above this crate), since cargo runs bench binaries
+/// with cwd at the *package* root, not the invoking directory.
+/// `PSM_BENCH_DIR` overrides.
+pub fn artifact_path(name: &str) -> std::path::PathBuf {
+    match std::env::var_os("PSM_BENCH_DIR") {
+        Some(d) => std::path::PathBuf::from(d).join(name),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join(name),
+    }
+}
 
 /// One measured benchmark.
 #[derive(Clone, Debug)]

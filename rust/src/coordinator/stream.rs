@@ -15,6 +15,16 @@
 //! Memory: ⌈log₂(t/c+1)⌉ · c·d floats of state — the paper's
 //! O(c log(n/c)) bound (Eq. C2) — versus O(n) for a KV cache.
 //!
+//! **Input staging.** Each entry point's input vector (parameters +
+//! trailing operand slots) is built once at session construction and
+//! reused for every call: the token slot is restaged in place through
+//! [`HostValue::as_s32_mut`], state operands are moved (not cloned)
+//! into their slots where ownership allows, and the cached prefix
+//! lives directly in the `inf` input slot so it is restaged only at
+//! chunk boundaries. Steady-state tokens therefore stage no state
+//! clones at all, instead of re-cloning every parameter tensor per
+//! call.
+//!
 //! States cross the module boundary as [`HostValue`]s; whether they
 //! stage through device memory is the backend's concern (the PJRT
 //! backend uploads/downloads inside [`crate::runtime::Module::run`],
@@ -48,25 +58,6 @@ impl SessionMetrics {
     }
 }
 
-/// One `Agg` invocation (free function so callers can hold disjoint
-/// borrows of the session's fields).
-fn agg_call(
-    agg: &Module,
-    params: &[HostValue],
-    metrics: &mut SessionMetrics,
-    left: &HostValue,
-    right: &HostValue,
-) -> Result<HostValue> {
-    let t0 = std::time::Instant::now();
-    let mut inputs = params.to_vec();
-    inputs.push(left.clone());
-    inputs.push(right.clone());
-    let mut out = agg.run(&inputs)?;
-    metrics.agg_calls += 1;
-    metrics.agg_s += t0.elapsed().as_secs_f64();
-    Ok(out.remove(0))
-}
-
 /// A single streaming Transformer-PSM inference session. Owns its
 /// loaded modules and states outright, so it does not borrow the
 /// runtime after construction.
@@ -74,15 +65,19 @@ pub struct PsmSession {
     enc: Module,
     agg: Module,
     inf: Module,
-    params: Vec<HostValue>,
+    /// Number of parameter tensors at the head of every input vector.
+    n_params: usize,
+    /// Staged input vectors (params + trailing operand slots), reused
+    /// across calls so parameter tensors are never re-cloned.
+    enc_inputs: Vec<HostValue>,
+    inf_inputs: Vec<HostValue>,
+    agg_inputs: Vec<HostValue>,
     /// Learnable identity state e, broadcast to [1, c, d].
     identity: HostValue,
     /// Binary-counter roots: roots[k] = aggregate of 2^k recent chunks.
     roots: Vec<Option<HostValue>>,
     /// Completed chunks so far.
     chunk_count: u64,
-    /// Cached prefix state (recomputed on chunk completion).
-    prefix: HostValue,
     /// Current partial chunk of raw tokens.
     buf: Vec<i32>,
     pub chunk: usize,
@@ -107,22 +102,37 @@ impl PsmSession {
         let vocab = spec.cfg_usize("vocab")?;
 
         let param_values = params.to_values();
+        let n_params = param_values.len();
 
         // Identity e = e_state[None] (learnable param).
         let (eshape, edata) = params.get("e_state")?;
         assert_eq!(eshape, &[chunk, d]);
         let identity = HostValue::f32(&[1, chunk, d], edata.to_vec());
-        let prefix = identity.clone();
+
+        // Build each entry point's staged input vector once; the
+        // trailing operand slots are overwritten per call. The cached
+        // prefix state lives directly in `inf_inputs[n_params]` and is
+        // restaged only at chunk boundaries.
+        let mut enc_inputs = param_values.clone();
+        enc_inputs.push(HostValue::s32(&[1, chunk], vec![0; chunk]));
+        let mut inf_inputs = param_values.clone();
+        inf_inputs.push(identity.clone());
+        inf_inputs.push(identity.clone());
+        let mut agg_inputs = param_values;
+        agg_inputs.push(identity.clone());
+        agg_inputs.push(identity.clone());
 
         Ok(PsmSession {
             enc,
             agg,
             inf,
-            params: param_values,
+            n_params,
+            enc_inputs,
+            inf_inputs,
+            agg_inputs,
             identity,
             roots: Vec::new(),
             chunk_count: 0,
-            prefix,
             buf: Vec::with_capacity(chunk),
             chunk,
             d,
@@ -131,16 +141,31 @@ impl PsmSession {
         })
     }
 
-    fn run_enc(&mut self, tokens: &[i32]) -> Result<HostValue> {
+    /// Encode the current (padded) partial chunk, restaging the token
+    /// slot in place.
+    fn run_enc(&mut self) -> Result<HostValue> {
         let t0 = std::time::Instant::now();
-        let mut padded = tokens.to_vec();
-        padded.resize(self.chunk, 0);
-        let tok = HostValue::s32(&[1, self.chunk], padded);
-        let mut inputs = self.params.clone();
-        inputs.push(tok);
-        let mut out = self.enc.run(&inputs)?;
+        let slot = self.enc_inputs[self.n_params].as_s32_mut()?;
+        let len = self.buf.len().min(slot.len());
+        slot[..len].copy_from_slice(&self.buf[..len]);
+        slot[len..].fill(0);
+        let mut out = self.enc.run(&self.enc_inputs)?;
         self.metrics.enc_calls += 1;
         self.metrics.enc_s += t0.elapsed().as_secs_f64();
+        Ok(out.remove(0))
+    }
+
+    /// One `Agg` invocation through the staged input vector. `left` and
+    /// `right` are moved into their slots — no state clone.
+    fn agg_call(&mut self, left: HostValue, right: HostValue)
+        -> Result<HostValue> {
+        let t0 = std::time::Instant::now();
+        let np = self.n_params;
+        self.agg_inputs[np] = left;
+        self.agg_inputs[np + 1] = right;
+        let mut out = self.agg.run(&self.agg_inputs)?;
+        self.metrics.agg_calls += 1;
+        self.metrics.agg_s += t0.elapsed().as_secs_f64();
         Ok(out.remove(0))
     }
 
@@ -156,9 +181,9 @@ impl PsmSession {
                 Some(root) => {
                     // Merge two complete blocks of size 2^k (left block
                     // is the older one — argument order matters for
-                    // non-associative Agg).
-                    carry = agg_call(&self.agg, &self.params,
-                                     &mut self.metrics, &root, &carry)?;
+                    // non-associative Agg). Both operands are owned
+                    // here, so they move into the staged slots.
+                    carry = self.agg_call(root, carry)?;
                     k += 1;
                 }
                 None => {
@@ -172,14 +197,20 @@ impl PsmSession {
         // Recompute the cached prefix: MSB -> LSB fold starting from the
         // learned identity e — exactly the static downsweep's grouping
         // (Thm 3.5), so serving reproduces the training parenthesisation.
+        // The result is staged straight into the `inf` input slot; it
+        // stays valid until the next chunk completes.
         let mut p: Option<HostValue> = None;
-        for root in self.roots.iter().rev().flatten() {
-            let left = p.as_ref().unwrap_or(&self.identity);
-            let merged = agg_call(&self.agg, &self.params,
-                                  &mut self.metrics, left, root)?;
-            p = Some(merged);
+        for ki in (0..self.roots.len()).rev() {
+            let Some(root) = self.roots[ki].clone() else {
+                continue;
+            };
+            let left = match p.take() {
+                Some(prev) => prev,
+                None => self.identity.clone(),
+            };
+            p = Some(self.agg_call(left, root)?);
         }
-        self.prefix = match p {
+        self.inf_inputs[self.n_params] = match p {
             Some(b) => b,
             None => self.identity.clone(),
         };
@@ -193,24 +224,29 @@ impl PsmSession {
         self.metrics.tokens += 1;
 
         // Encode the (padded) partial chunk and run Inf on the cached
-        // prefix. Under the causal mask the pad positions cannot affect
-        // position len-1, so the partial-chunk logits are exact.
-        let xe = self.run_enc(&self.buf.clone())?;
+        // prefix (already staged in its input slot — it only changes at
+        // chunk boundaries). Under the causal mask the pad positions
+        // cannot affect position len-1, so the partial-chunk logits are
+        // exact.
+        let xe = self.run_enc()?;
+        let np = self.n_params;
         let t0 = std::time::Instant::now();
-        let mut inputs = self.params.clone();
-        inputs.push(self.prefix.clone());
-        inputs.push(xe.clone());
-        let out = self.inf.run(&inputs)?;
+        self.inf_inputs[np + 1] = xe;
+        let out = self.inf.run(&self.inf_inputs)?;
         self.metrics.inf_calls += 1;
         self.metrics.inf_s += t0.elapsed().as_secs_f64();
 
         let logits = out[0].as_f32()?;
         let pos = self.buf.len() - 1;
-        let row = &logits[pos * self.vocab..(pos + 1) * self.vocab];
-        let result = row.to_vec();
+        let result = logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec();
 
-        // Chunk completion: insert into the counter.
+        // Chunk completion: insert into the counter, reclaiming the
+        // encoding from its staged slot (no clone).
         if self.buf.len() == self.chunk {
+            let xe = std::mem::replace(
+                &mut self.inf_inputs[np + 1],
+                HostValue::scalar_s32(0),
+            );
             self.push_chunk(xe)?;
             self.buf.clear();
         }
@@ -253,12 +289,14 @@ impl PsmSession {
         self.chunk_count
     }
 
-    /// Reset the stream (parameters stay loaded).
+    /// Reset the stream (parameters stay loaded; the staged prefix
+    /// slot goes back to the learned identity, other slots are
+    /// overwritten before their next use).
     pub fn reset(&mut self) -> Result<()> {
         self.roots.clear();
         self.chunk_count = 0;
         self.buf.clear();
-        self.prefix = self.identity.clone();
+        self.inf_inputs[self.n_params] = self.identity.clone();
         self.metrics = SessionMetrics::default();
         Ok(())
     }

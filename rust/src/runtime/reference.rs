@@ -28,10 +28,29 @@
 //! so streaming and static logits agree bit-for-bit, giving tier-1
 //! coverage of the sequential-parallel duality across the whole serving
 //! stack, not just the scan layer.
+//!
+//! ## Arena / ownership discipline
+//!
+//! The hot path is allocation-free on the steady state. Every batched
+//! entry point draws a [`SeqWorkspace`] from the executable's recycled
+//! pool (one per pool worker; rows are dispatched over
+//! [`pool::parallel_chunks`] / [`pool::parallel_update`]) and returns
+//! it afterwards, so scratch lives across `execute` calls. Within one
+//! sequence, chunk state slabs cycle through the [`OnlineScan`] arena:
+//! the encoder fills a buffer obtained from
+//! [`OnlineScan::take_buffer`], `push` carry-merges recycle freed roots
+//! in place via [`ChunkSumOp::agg_slices`], and the prefix fold reuses
+//! the workspace's prefix buffer through `prefix_into`. Hidden states
+//! land in one flat `[seq, d]` row-major slab instead of a
+//! `Vec<Vec<f32>>`. The only per-call allocations left are the output
+//! `HostValue`s the contract requires. `rust/tests/alloc_free.rs`
+//! pins the scan-side zero-allocation property with a counting
+//! allocator.
 
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
@@ -41,6 +60,7 @@ use super::value::HostValue;
 use crate::scan::traits::Aggregator;
 use crate::scan::OnlineScan;
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::util::prng::Rng;
 
 // Adam hyper-parameters for the linear-probe head.
@@ -94,6 +114,27 @@ pub struct ChunkSumOp {
     pub d: usize,
 }
 
+impl ChunkSumOp {
+    /// The raw merge kernel shared by every entry path (`agg`,
+    /// `agg_into`, the `run_agg` executable): `out[j] = l[c-1] + r[j]`
+    /// rowwise over flat `[c, d]` slabs — no allocation, straight-line
+    /// slice arithmetic the compiler can vectorise.
+    pub fn agg_slices(&self, l: &[f32], r: &[f32], out: &mut [f32]) {
+        let (c, d) = (self.c, self.d);
+        debug_assert_eq!(l.len(), c * d);
+        debug_assert_eq!(r.len(), c * d);
+        debug_assert_eq!(out.len(), c * d);
+        let tail = &l[(c - 1) * d..c * d];
+        for (out_row, r_row) in
+            out.chunks_exact_mut(d).zip(r.chunks_exact(d))
+        {
+            for ((o, &t), &rv) in out_row.iter_mut().zip(tail).zip(r_row) {
+                *o = t + rv;
+            }
+        }
+    }
+}
+
 impl Aggregator for ChunkSumOp {
     type State = Vec<f32>;
 
@@ -102,15 +143,19 @@ impl Aggregator for ChunkSumOp {
     }
 
     fn agg(&self, l: &Vec<f32>, r: &Vec<f32>) -> Vec<f32> {
-        let (c, d) = (self.c, self.d);
-        let tail = &l[(c - 1) * d..c * d];
-        let mut out = Vec::with_capacity(c * d);
-        for j in 0..c {
-            for f in 0..d {
-                out.push(tail[f] + r[j * d + f]);
-            }
-        }
+        let mut out = vec![0.0f32; self.c * self.d];
+        self.agg_slices(l, r, &mut out);
         out
+    }
+
+    fn agg_into(&self, l: &Vec<f32>, r: &Vec<f32>, out: &mut Vec<f32>) {
+        out.resize(self.c * self.d, 0.0);
+        self.agg_slices(l, r, out);
+    }
+
+    fn identity_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.c * self.d, 0.0);
     }
 
     fn claims_associative(&self) -> bool {
@@ -118,27 +163,27 @@ impl Aggregator for ChunkSumOp {
     }
 }
 
-/// Embedding row for `tok` with channel 0 pinned to 1.0 (count channel).
-fn aug_embed(cfg: &RefModelCfg, tok_emb: &[f32], tok: i32, out: &mut [f32]) {
-    let t = (tok.max(0) as usize).min(cfg.vocab - 1);
-    out.copy_from_slice(&tok_emb[t * cfg.d..(t + 1) * cfg.d]);
-    out[0] = 1.0;
-}
-
-/// `enc`: within-chunk prefix sums of augmented embeddings, `[c, d]`.
-fn enc_chunk(cfg: &RefModelCfg, tok_emb: &[f32], toks: &[i32]) -> Vec<f32> {
+/// `enc`: within-chunk prefix sums of augmented embeddings (channel 0
+/// pinned to 1.0 — the count channel), written into caller-provided
+/// scratch `y` (`[c, d]` row-major). Allocation-free.
+fn enc_chunk_into(
+    cfg: &RefModelCfg,
+    tok_emb: &[f32],
+    toks: &[i32],
+    y: &mut [f32],
+) {
     let (c, d) = (cfg.chunk, cfg.d);
     debug_assert_eq!(toks.len(), c);
-    let mut y = vec![0.0f32; c * d];
-    let mut row = vec![0.0f32; d];
+    debug_assert_eq!(y.len(), c * d);
     for j in 0..c {
-        aug_embed(cfg, tok_emb, toks[j], &mut row);
+        let t = (toks[j].max(0) as usize).min(cfg.vocab - 1);
+        let emb = &tok_emb[t * d..(t + 1) * d];
         for f in 0..d {
+            let aug = if f == 0 { 1.0 } else { emb[f] };
             let prev = if j == 0 { 0.0 } else { y[(j - 1) * d + f] };
-            y[j * d + f] = prev + row[f];
+            y[j * d + f] = prev + aug;
         }
     }
-    y
 }
 
 /// `inf` for one position: normalise by the count channel, apply the
@@ -165,40 +210,77 @@ fn logits_row(
     }
 }
 
+/// Reusable per-sequence scratch. One instance serves one pool worker
+/// at a time; instances live in the executable's recycle pool across
+/// `execute` calls, so the steady state allocates nothing.
+#[derive(Default)]
+struct SeqWorkspace {
+    /// Recycled `[c, d]` chunk-state slabs (the [`OnlineScan`] arena).
+    arena: Vec<Vec<f32>>,
+    /// Prefix fold output, `[c, d]`.
+    prefix: Vec<f32>,
+    /// Final row of the running prefix, `[d]`.
+    prefix_tail: Vec<f32>,
+    /// Padded chunk tokens, `[c]`.
+    chunk_toks: Vec<i32>,
+    /// Flat per-position hidden states, `[seq, d]` row-major.
+    hidden: Vec<f32>,
+    /// Softmax scratch, `[vocab]`.
+    row_logits: Vec<f32>,
+    /// Gradient accumulators (train path): `[d, vocab]` and `[vocab]`.
+    d_head: Vec<f32>,
+    d_bias: Vec<f32>,
+    /// Partial loss (train path).
+    loss: f32,
+}
+
 /// Per-position pre-normalisation hidden states for one sequence,
-/// computed through the binary-counter scan over completed chunks —
-/// exactly the chunked-streaming semantics of the coordinator.
-fn forward_hidden(
+/// written flat into `out` (`[toks.len(), d]` row-major), computed
+/// through the binary-counter scan over completed chunks — exactly the
+/// chunked-streaming semantics of the coordinator. All scratch comes
+/// from `ws`; with a warm workspace this performs zero heap
+/// allocations.
+fn forward_hidden_into(
     cfg: &RefModelCfg,
     tok_emb: &[f32],
     toks: &[i32],
-) -> Vec<Vec<f32>> {
+    ws: &mut SeqWorkspace,
+    out: &mut [f32],
+) {
     let (c, d) = (cfg.chunk, cfg.d);
+    debug_assert_eq!(out.len(), toks.len() * d);
     let op = ChunkSumOp { c, d };
-    let mut scan = OnlineScan::new(&op);
-    let mut prefix_tail = vec![0.0f32; d];
-    let mut out = Vec::with_capacity(toks.len());
+    let mut scan =
+        OnlineScan::with_arena(&op, std::mem::take(&mut ws.arena));
+    ws.prefix_tail.clear();
+    ws.prefix_tail.resize(d, 0.0);
+    ws.chunk_toks.clear();
+    ws.chunk_toks.resize(c, 0);
     let mut pos = 0;
     while pos < toks.len() {
         let end = (pos + c).min(toks.len());
-        let mut chunk_toks = toks[pos..end].to_vec();
-        chunk_toks.resize(c, 0);
-        let y = enc_chunk(cfg, tok_emb, &chunk_toks);
+        ws.chunk_toks[..end - pos].copy_from_slice(&toks[pos..end]);
+        ws.chunk_toks[end - pos..].fill(0);
+        let mut y = scan.take_buffer();
+        y.resize(c * d, 0.0);
+        enc_chunk_into(cfg, tok_emb, &ws.chunk_toks, &mut y);
         for j in 0..(end - pos) {
-            let mut h = vec![0.0f32; d];
-            for f in 0..d {
-                h[f] = prefix_tail[f] + y[j * d + f];
+            let row = &mut out[(pos + j) * d..(pos + j + 1) * d];
+            for (f, slot) in row.iter_mut().enumerate() {
+                *slot = ws.prefix_tail[f] + y[j * d + f];
             }
-            out.push(h);
         }
         if end - pos == c {
             scan.push(y);
-            let p = scan.prefix();
-            prefix_tail.copy_from_slice(&p[(c - 1) * d..c * d]);
+            scan.prefix_into(&mut ws.prefix);
+            ws.prefix_tail
+                .copy_from_slice(&ws.prefix[(c - 1) * d..c * d]);
+        } else {
+            scan.recycle(y);
         }
         pos = end;
     }
-    out
+    ws.arena = scan.into_arena();
 }
 
 // ---------------------------------------------------------------------------
@@ -392,7 +474,12 @@ impl Backend for RefBackend {
             "train_block" => EntryKind::TrainBlock,
             other => bail!("reference backend: unknown entry {other:?}"),
         };
-        Ok(Module::from_exec(Box::new(RefExec { cfg, kind, spec })))
+        Ok(Module::from_exec(Box::new(RefExec {
+            cfg,
+            kind,
+            spec,
+            workspaces: Mutex::new(Vec::new()),
+        })))
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -415,6 +502,9 @@ struct RefExec {
     cfg: RefModelCfg,
     kind: EntryKind,
     spec: ArtifactSpec,
+    /// Recycled per-sequence workspaces, shared across `execute` calls
+    /// and handed out to pool workers during batched entry points.
+    workspaces: Mutex<Vec<SeqWorkspace>>,
 }
 
 impl Executable for RefExec {
@@ -455,20 +545,37 @@ impl RefExec {
         ])
     }
 
+    /// Pop `n` warm workspaces off the recycle pool (cold `Default`s on
+    /// first use).
+    fn take_workspaces(&self, n: usize) -> Vec<SeqWorkspace> {
+        let mut pool = self.workspaces.lock().unwrap();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(pool.pop().unwrap_or_default());
+        }
+        out
+    }
+
+    fn return_workspaces(&self, wss: Vec<SeqWorkspace>) {
+        self.workspaces.lock().unwrap().extend(wss);
+    }
+
     fn run_enc(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
         let cfg = &self.cfg;
         let tok_emb = inputs[0].as_f32()?;
         let toks = inputs[N_PARAMS].as_s32()?;
-        let y = enc_chunk(cfg, tok_emb, toks);
+        let mut y = vec![0.0f32; cfg.chunk * cfg.d];
+        enc_chunk_into(cfg, tok_emb, toks, &mut y);
         Ok(vec![HostValue::f32(&[1, cfg.chunk, cfg.d], y)])
     }
 
     fn run_agg(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
         let cfg = &self.cfg;
         let op = ChunkSumOp { c: cfg.chunk, d: cfg.d };
-        let l = inputs[N_PARAMS].as_f32()?.to_vec();
-        let r = inputs[N_PARAMS + 1].as_f32()?.to_vec();
-        let out = op.agg(&l, &r);
+        let l = inputs[N_PARAMS].as_f32()?;
+        let r = inputs[N_PARAMS + 1].as_f32()?;
+        let mut out = vec![0.0f32; cfg.chunk * cfg.d];
+        op.agg_slices(l, r, &mut out);
         Ok(vec![HostValue::f32(&[1, cfg.chunk, cfg.d], out)])
     }
 
@@ -493,25 +600,49 @@ impl RefExec {
 
     fn run_fwd(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
         let cfg = &self.cfg;
-        let (b, n, v) = (cfg.batch, cfg.seq, cfg.vocab);
+        let (b, n, v, d) = (cfg.batch, cfg.seq, cfg.vocab, cfg.d);
         let tok_emb = inputs[0].as_f32()?;
         let head = inputs[2].as_f32()?;
         let head_b = inputs[3].as_f32()?;
         let toks = inputs[N_PARAMS].as_s32()?;
+        // One flat [b, n, v] output; batch rows are dispatched over the
+        // thread pool as disjoint windows, each worker drawing a warm
+        // workspace from the recycle pool. Rows are independent, so the
+        // result is bit-identical to the sequential loop.
         let mut logits = vec![0.0f32; b * n * v];
-        for bi in 0..b {
+        let workers = pool::default_workers().min(b);
+        let ws_pool = &self.workspaces;
+        pool::parallel_chunks(&mut logits, n * v, workers, |bi, out_row| {
+            let mut ws =
+                ws_pool.lock().unwrap().pop().unwrap_or_default();
+            let mut hidden = std::mem::take(&mut ws.hidden);
+            hidden.clear();
+            hidden.resize(n * d, 0.0);
             let row = &toks[bi * n..(bi + 1) * n];
-            let hs = forward_hidden(cfg, tok_emb, row);
-            for (t, h) in hs.iter().enumerate() {
-                let base = (bi * n + t) * v;
-                logits_row(cfg, head, head_b, h, &mut logits[base..base + v]);
+            forward_hidden_into(cfg, tok_emb, row, &mut ws, &mut hidden);
+            for (t, h) in hidden.chunks_exact(d).enumerate() {
+                logits_row(
+                    cfg,
+                    head,
+                    head_b,
+                    h,
+                    &mut out_row[t * v..(t + 1) * v],
+                );
             }
-        }
+            ws.hidden = hidden;
+            ws_pool.lock().unwrap().push(ws);
+        });
         Ok(vec![HostValue::f32(&[b, n, v], logits)])
     }
 
     /// One Adam step of the linear-probe head on one batch; returns the
-    /// masked mean cross-entropy.
+    /// masked mean cross-entropy. Batch rows are dispatched over the
+    /// thread pool, each row accumulating gradients into its *own*
+    /// recycled workspace; per-row partials are then reduced in row
+    /// order. The summation order is therefore a pure function of the
+    /// batch — independent of thread scheduling AND of the host's core
+    /// count, so a seed reproduces bit-identical training on any
+    /// machine.
     fn step_batch(
         &self,
         params: &mut [Vec<f32>],
@@ -528,41 +659,80 @@ impl RefExec {
         if msum <= 0.0 {
             return 0.0;
         }
-        let mut loss = 0.0f32;
-        let mut d_head = vec![0.0f32; d * vs];
-        let mut d_bias = vec![0.0f32; vs];
-        let mut row_logits = vec![0.0f32; vs];
-        for bi in 0..b {
-            let row = &tokens[bi * n..(bi + 1) * n];
-            let hs = forward_hidden(cfg, &params[0], row);
-            for t in 0..n {
-                let mi = mask[bi * n + t];
-                if mi <= 0.0 {
-                    continue;
-                }
-                let h = &hs[t];
-                let denom = h[0].max(1.0);
-                logits_row(cfg, &params[2], &params[3], h, &mut row_logits);
-                let mx = row_logits.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-                let lse = mx
-                    + row_logits.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln();
-                let lab =
-                    (labels[bi * n + t].max(0) as usize).min(vs - 1);
-                loss += mi * (lse - row_logits[lab]);
-                let w = mi / msum;
-                for vi in 0..vs {
-                    let p = (row_logits[vi] - lse).exp();
-                    let g = (p - if vi == lab { 1.0 } else { 0.0 }) * w;
-                    d_bias[vi] += g;
-                    for f in 0..d {
-                        d_head[f * vs + vi] += g * (h[f] / denom);
+        let workers = pool::default_workers().min(b);
+        let mut wss = self.take_workspaces(b);
+        for ws in wss.iter_mut() {
+            ws.d_head.clear();
+            ws.d_head.resize(d * vs, 0.0);
+            ws.d_bias.clear();
+            ws.d_bias.resize(vs, 0.0);
+            ws.loss = 0.0;
+        }
+        {
+            let tok_emb: &[f32] = &params[0];
+            let head: &[f32] = &params[2];
+            let head_b: &[f32] = &params[3];
+            pool::parallel_update(&mut wss, workers, |bi, ws| {
+                let mut hidden = std::mem::take(&mut ws.hidden);
+                hidden.clear();
+                hidden.resize(n * d, 0.0);
+                let mut row_logits = std::mem::take(&mut ws.row_logits);
+                row_logits.clear();
+                row_logits.resize(vs, 0.0);
+                let row = &tokens[bi * n..(bi + 1) * n];
+                forward_hidden_into(cfg, tok_emb, row, ws, &mut hidden);
+                for t in 0..n {
+                    let mi = mask[bi * n + t];
+                    if mi <= 0.0 {
+                        continue;
+                    }
+                    let h = &hidden[t * d..(t + 1) * d];
+                    let denom = h[0].max(1.0);
+                    logits_row(cfg, head, head_b, h, &mut row_logits);
+                    let mx = row_logits
+                        .iter()
+                        .fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                    let lse = mx
+                        + row_logits
+                            .iter()
+                            .map(|&x| (x - mx).exp())
+                            .sum::<f32>()
+                            .ln();
+                    let lab =
+                        (labels[bi * n + t].max(0) as usize).min(vs - 1);
+                    ws.loss += mi * (lse - row_logits[lab]);
+                    let wgt = mi / msum;
+                    for vi in 0..vs {
+                        let p = (row_logits[vi] - lse).exp();
+                        let g =
+                            (p - if vi == lab { 1.0 } else { 0.0 }) * wgt;
+                        ws.d_bias[vi] += g;
+                        for f in 0..d {
+                            ws.d_head[f * vs + vi] += g * (h[f] / denom);
+                        }
                     }
                 }
-            }
+                ws.hidden = hidden;
+                ws.row_logits = row_logits;
+            });
         }
+        // Reduction in fixed row order into wss[0] (machine-independent).
+        let (first, rest) = wss.split_at_mut(1);
+        let acc = &mut first[0];
+        for ws in rest.iter() {
+            for (a, &g) in acc.d_head.iter_mut().zip(&ws.d_head) {
+                *a += g;
+            }
+            for (a, &g) in acc.d_bias.iter_mut().zip(&ws.d_bias) {
+                *a += g;
+            }
+            acc.loss += ws.loss;
+        }
+        let loss = acc.loss;
         let t = step + 1;
-        adam(&mut params[2], &d_head, &mut m[2], &mut v[2], t);
-        adam(&mut params[3], &d_bias, &mut m[3], &mut v[3], t);
+        adam(&mut params[2], &acc.d_head, &mut m[2], &mut v[2], t);
+        adam(&mut params[3], &acc.d_bias, &mut m[3], &mut v[3], t);
+        self.return_workspaces(wss);
         loss / msum
     }
 
@@ -663,6 +833,26 @@ mod tests {
                     .fold(0.0f32, f32::max);
                 assert!(err < 1e-4, "n={n} t={t}: {err}");
             }
+        }
+    }
+
+    #[test]
+    fn chunk_agg_into_bit_identical_to_owned() {
+        let (c, d) = (8, 5);
+        let op = ChunkSumOp { c, d };
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let a = rand_state(&mut rng, c, d);
+            let b = rand_state(&mut rng, c, d);
+            let owned = op.agg(&a, &b);
+            // In-place into a recycled (dirty, differently-sized)
+            // buffer must produce exactly the same bits.
+            let mut out = vec![f32::NAN; 3];
+            op.agg_into(&a, &b, &mut out);
+            assert_eq!(owned, out);
+            let mut id = vec![f32::NAN; c * d + 7];
+            op.identity_into(&mut id);
+            assert_eq!(id, op.identity());
         }
     }
 

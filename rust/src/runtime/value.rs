@@ -67,6 +67,24 @@ impl HostValue {
         }
     }
 
+    /// Mutable view of an f32 value's data (shape unchanged) — lets
+    /// callers restage an input slot in place instead of rebuilding a
+    /// fresh `HostValue` per call.
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    /// Mutable view of an s32 value's data (shape unchanged).
+    pub fn as_s32_mut(&mut self) -> Result<&mut [i32]> {
+        match self {
+            HostValue::S32 { data, .. } => Ok(data),
+            _ => bail!("expected s32 value"),
+        }
+    }
+
     /// Validate against an artifact IO spec.
     pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
         if self.dtype() != spec.dtype || self.shape() != &spec.shape[..] {

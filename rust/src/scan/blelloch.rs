@@ -15,6 +15,11 @@ use crate::util::pool;
 
 /// Exclusive Blelloch prefixes of `items`: `out[t] = x_0 Agg ... Agg
 /// x_{t-1}` under π_Blelloch, `out[0] = e`. Sequential execution.
+///
+/// Both sweeps run **in place** over two preallocated state slabs (the
+/// heap-layout tree and the prefix buffer): every merge goes through
+/// [`Aggregator::agg_into`] writing straight into the destination node,
+/// so beyond the slabs themselves no per-node temporaries are heaped.
 pub fn blelloch_scan<A: Aggregator>(
     op: &A,
     items: &[A::State],
@@ -28,18 +33,21 @@ pub fn blelloch_scan<A: Aggregator>(
     let mut tree: Vec<A::State> = Vec::with_capacity(2 * r);
     tree.resize(2 * r, op.identity());
     for (i, x) in items.iter().enumerate() {
-        tree[r + i] = x.clone();
+        tree[r + i].clone_from(x);
     }
-    // Upsweep (reduction), bottom-up.
+    // Upsweep (reduction), bottom-up: parent v reads children 2v, 2v+1,
+    // which live past the split point 2v — a disjoint borrow.
     for v in (1..r).rev() {
-        tree[v] = op.agg(&tree[2 * v], &tree[2 * v + 1]);
+        let (head, tail) = tree.split_at_mut(2 * v);
+        op.agg_into(&tail[0], &tail[1], &mut head[v]);
     }
-    // Downsweep (prefix propagation), top-down.
+    // Downsweep (prefix propagation), top-down, same split discipline.
     let mut pref: Vec<A::State> = Vec::with_capacity(2 * r);
     pref.resize(2 * r, op.identity());
     for v in 1..r {
-        pref[2 * v] = pref[v].clone();
-        pref[2 * v + 1] = op.agg(&pref[v], &tree[2 * v]);
+        let (head, tail) = pref.split_at_mut(2 * v);
+        tail[0].clone_from(&head[v]);
+        op.agg_into(&head[v], &tree[2 * v], &mut tail[1]);
     }
     // Move (not clone) the leaf prefixes out.
     pref.truncate(r + n);
@@ -50,9 +58,10 @@ pub fn blelloch_scan<A: Aggregator>(
 /// tree *level* executed across `workers` threads — Θ(log n) parallel
 /// steps of Θ(n) total work, the paper's training-circuit shape.
 ///
-/// Allocation-lean execution: both sweeps write results **in place**
-/// into the (single) tree/prefix buffers through
-/// [`pool::parallel_fill`], so no per-level `Vec` is allocated; levels
+/// Allocation-free execution on the steady state: both sweeps mutate
+/// the (single) tree/prefix slabs **in place** through
+/// [`pool::parallel_update`] + [`Aggregator::agg_into`], so neither a
+/// per-level `Vec` nor a per-node temporary is allocated; levels
 /// smaller than `4 * workers` nodes run inline, since spawning scoped
 /// workers costs more than a handful of `Agg` calls (`cargo bench
 /// --bench scan_hotpath` measures the sequential-vs-parallel ratio).
@@ -76,11 +85,12 @@ where
     let mut tree: Vec<A::State> = Vec::with_capacity(2 * r);
     tree.resize(2 * r, op.identity());
     for (i, x) in items.iter().enumerate() {
-        tree[r + i] = x.clone();
+        tree[r + i].clone_from(x);
     }
 
     // Upsweep: parents [k, 2k) read children [2k, 4k) — disjoint slices
-    // of the same buffer, split at 2k.
+    // of the same buffer, split at 2k; merges write into the parent
+    // slot where it lives.
     let mut level = r / 2;
     while level >= 1 {
         let (upper, lower) = tree.split_at_mut(2 * level);
@@ -88,11 +98,11 @@ where
         let children: &[A::State] = lower;
         if workers == 1 || level < par_min {
             for (i, parent) in parents.iter_mut().enumerate() {
-                *parent = op.agg(&children[2 * i], &children[2 * i + 1]);
+                op.agg_into(&children[2 * i], &children[2 * i + 1], parent);
             }
         } else {
-            pool::parallel_fill(parents, workers, |i| {
-                op.agg(&children[2 * i], &children[2 * i + 1])
+            pool::parallel_update(parents, workers, |i, parent| {
+                op.agg_into(&children[2 * i], &children[2 * i + 1], parent);
             });
         }
         level /= 2;
@@ -111,19 +121,19 @@ where
         if workers == 1 || children.len() < par_min {
             for (j, child) in children.iter_mut().enumerate() {
                 let v = level + j / 2;
-                *child = if j % 2 == 0 {
-                    parents[j / 2].clone()
+                if j % 2 == 0 {
+                    child.clone_from(&parents[j / 2]);
                 } else {
-                    op.agg(&parents[j / 2], &tree_ref[2 * v])
-                };
+                    op.agg_into(&parents[j / 2], &tree_ref[2 * v], child);
+                }
             }
         } else {
-            pool::parallel_fill(children, workers, |j| {
+            pool::parallel_update(children, workers, |j, child| {
                 let v = level + j / 2;
                 if j % 2 == 0 {
-                    parents[j / 2].clone()
+                    child.clone_from(&parents[j / 2]);
                 } else {
-                    op.agg(&parents[j / 2], &tree_ref[2 * v])
+                    op.agg_into(&parents[j / 2], &tree_ref[2 * v], child);
                 }
             });
         }

@@ -18,6 +18,23 @@
 //! accounting boundary differently. (Prefix folds via
 //! [`OnlineScan::prefix`] cost up to one `Agg` per occupied root and
 //! are billed to the caller, not to `push`.)
+//!
+//! **Arena / ownership discipline.** The scan owns a recycle arena of
+//! state buffers. Every buffer the carry chain frees (the two merged
+//! roots) goes back into the arena, and every buffer the chain needs
+//! (the merge output) comes out of it, so after a short warmup `push`
+//! performs **zero heap allocations** — all merges run through
+//! [`super::traits::Aggregator::agg_into`] over recycled slabs.
+//! Callers can participate in the same discipline: draw the next
+//! element's buffer from [`OnlineScan::take_buffer`], fill it, and hand
+//! it back via [`OnlineScan::push`] (or [`OnlineScan::recycle`] if the
+//! element is abandoned); fold the prefix with
+//! [`OnlineScan::prefix_into`] to reuse the caller's output buffer and
+//! the arena's scratch. A finished scan surrenders every live buffer
+//! through [`OnlineScan::into_arena`] so the next sequence (e.g. the
+//! next batch row in [`crate::runtime::reference`]) starts warm.
+//! `rust/tests/alloc_free.rs` pins the zero-allocation steady state
+//! with a counting global allocator.
 
 use super::traits::Aggregator;
 
@@ -28,11 +45,20 @@ pub struct OnlineScan<'a, A: Aggregator> {
     /// k-th bit of `count` is set (Prop. E.1 invariant).
     roots: Vec<Option<A::State>>,
     count: u64,
+    /// Recycled state buffers: merge outputs are drawn from here and
+    /// freed roots land here, so steady-state pushes never allocate.
+    arena: Vec<A::State>,
 }
 
 impl<'a, A: Aggregator> OnlineScan<'a, A> {
     pub fn new(op: &'a A) -> Self {
-        OnlineScan { op, roots: Vec::new(), count: 0 }
+        Self::with_arena(op, Vec::new())
+    }
+
+    /// Start a scan pre-warmed with recycled buffers (typically the
+    /// [`OnlineScan::into_arena`] of a previous sequence's scan).
+    pub fn with_arena(op: &'a A, arena: Vec<A::State>) -> Self {
+        OnlineScan { op, roots: Vec::new(), count: 0, arena }
     }
 
     /// Number of elements inserted so far.
@@ -49,6 +75,24 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
         self.roots.iter().filter(|r| r.is_some()).count()
     }
 
+    /// Number of idle buffers in the recycle arena.
+    pub fn free_buffers(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Take a recycled state buffer (or allocate one on a cold arena).
+    /// Fill it with the next element and give it back to
+    /// [`OnlineScan::push`] — this closes the allocation-free loop for
+    /// callers producing elements in place.
+    pub fn take_buffer(&mut self) -> A::State {
+        self.arena.pop().unwrap_or_else(|| self.op.new_state())
+    }
+
+    /// Return an unused buffer to the arena.
+    pub fn recycle(&mut self, s: A::State) {
+        self.arena.push(s);
+    }
+
     /// Insert the next element (binary-carry merge chain).
     pub fn push(&mut self, x: A::State) {
         let mut carry = x;
@@ -61,8 +105,16 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
                 Some(root) => {
                     // Merge two complete blocks of size 2^k (left block
                     // is the older one — argument order matters for
-                    // non-associative Agg).
-                    carry = self.op.agg(&root, &carry);
+                    // non-associative Agg). The output slab comes from
+                    // the arena; both consumed blocks go back into it.
+                    let mut out = self
+                        .arena
+                        .pop()
+                        .unwrap_or_else(|| self.op.new_state());
+                    self.op.agg_into(&root, &carry, &mut out);
+                    self.arena.push(root);
+                    let spent = std::mem::replace(&mut carry, out);
+                    self.arena.push(spent);
                     k += 1;
                 }
                 None => {
@@ -78,19 +130,48 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
     /// under π_Blelloch. (Equivalently: the exclusive prefix `P_count`
     /// of the static scan — call before pushing the next element.)
     ///
-    /// Cost: one `Agg` per occupied root (≤ ⌈log2(count+1)⌉).
+    /// Cost: one `Agg` per occupied root (≤ ⌈log2(count+1)⌉). Allocates
+    /// the returned state (and one scratch); the hot path is
+    /// [`OnlineScan::prefix_into`].
     pub fn prefix(&self) -> A::State {
         let mut p = self.op.identity();
+        let mut tmp = self.op.new_state();
         for root in self.roots.iter().rev().flatten() {
-            p = self.op.agg(&p, root);
+            self.op.agg_into(&p, root, &mut tmp);
+            std::mem::swap(&mut p, &mut tmp);
         }
         p
     }
 
-    /// Reset to the empty stream.
+    /// Allocation-free [`OnlineScan::prefix`]: folds into the caller's
+    /// buffer, ping-ponging against one arena scratch slab. Bit-identical
+    /// to `prefix()` — same fold order, same `agg_into` kernels.
+    pub fn prefix_into(&mut self, out: &mut A::State) {
+        self.op.identity_into(out);
+        let mut tmp = self.arena.pop().unwrap_or_else(|| self.op.new_state());
+        for root in self.roots.iter().rev().flatten() {
+            self.op.agg_into(out, root, &mut tmp);
+            std::mem::swap(out, &mut tmp);
+        }
+        self.arena.push(tmp);
+    }
+
+    /// Reset to the empty stream, recycling every root buffer into the
+    /// arena (capacity is retained for the next sequence).
     pub fn clear(&mut self) {
-        self.roots.clear();
+        while let Some(slot) = self.roots.pop() {
+            if let Some(s) = slot {
+                self.arena.push(s);
+            }
+        }
         self.count = 0;
+    }
+
+    /// Tear the scan down, recovering all live buffers (roots + idle
+    /// arena) for a later [`OnlineScan::with_arena`].
+    pub fn into_arena(mut self) -> Vec<A::State> {
+        self.clear();
+        self.arena
     }
 }
 
@@ -127,6 +208,48 @@ mod tests {
             assert_eq!(online.prefix(), seq[t], "t={t}");
             online.push(x.clone());
         }
+    }
+
+    /// `prefix_into` is bit-identical to the owned `prefix` fold.
+    #[test]
+    fn prefix_into_matches_prefix() {
+        let op = HalfAddOp;
+        let mut online = OnlineScan::new(&op);
+        let mut buf = 0.0f64;
+        for t in 0..200u64 {
+            online.push(((t * 31) % 17) as f64 * 0.25);
+            let owned = online.prefix();
+            online.prefix_into(&mut buf);
+            assert!(owned == buf, "t={t}: {owned} vs {buf}");
+        }
+    }
+
+    /// The arena conserves buffers: every root freed by a carry chain
+    /// is recycled, and `into_arena` recovers all of them.
+    #[test]
+    fn arena_recycles_buffers() {
+        let op = ConcatOp;
+        let mut online = OnlineScan::new(&op);
+        for i in 0..64 {
+            let mut buf = online.take_buffer();
+            buf.clear();
+            buf.push_str(&format!("{i},"));
+            online.push(buf);
+        }
+        // 64 = 2^6 pushes leave exactly one root; carry chains freed
+        // buffers into the arena along the way.
+        assert_eq!(online.occupied_roots(), 1);
+        assert!(online.free_buffers() > 0);
+        let arena = online.into_arena();
+        // Roots were recovered too.
+        assert!(!arena.is_empty());
+        // A new scan warm-started from the arena reuses those buffers.
+        let mut warm = OnlineScan::with_arena(&op, arena);
+        let before = warm.free_buffers();
+        let b = warm.take_buffer();
+        assert_eq!(warm.free_buffers(), before - 1);
+        warm.recycle(b);
+        assert_eq!(warm.free_buffers(), before);
     }
 
     /// Cor 3.6: at most ⌈log2(t+1)⌉ roots live after t+1 inserts.

@@ -3,7 +3,9 @@
 //! * [`traits::Aggregator`] — a binary operator with identity over an
 //!   arbitrary state type. **No associativity is assumed**; for the
 //!   affine family ([`crate::affine`]) associativity is a *verified
-//!   property*, not an axiom.
+//!   property*, not an axiom. The in-place entry points (`agg_into`,
+//!   `identity_into`, `new_state`) let every scan below run
+//!   allocation-free over recycled state slabs.
 //! * [`sequential`] — the left-to-right reference recurrence.
 //! * [`blelloch`] — Alg. 1: the static upsweep/downsweep scan used at
 //!   training time (sequential and thread-pool parallel execution).

@@ -9,27 +9,36 @@ use super::traits::Aggregator;
 
 /// Exclusive left-fold prefixes: `out[t] = x_0 agg x_1 agg ... agg
 /// x_{t-1}` (left-nested), with `out[0] = e`. Returns `n` prefixes.
+///
+/// The accumulator ping-pongs between two preallocated states through
+/// [`Aggregator::agg_into`]; the only per-element allocation is the
+/// returned prefix clone itself.
 pub fn sequential_scan<A: Aggregator>(
     op: &A,
     items: &[A::State],
 ) -> Vec<A::State> {
     let mut out = Vec::with_capacity(items.len());
     let mut acc = op.identity();
+    let mut next = op.new_state();
     for x in items {
         out.push(acc.clone());
-        acc = op.agg(&acc, x);
+        op.agg_into(&acc, x, &mut next);
+        std::mem::swap(&mut acc, &mut next);
     }
     out
 }
 
 /// Inclusive left-fold: the final accumulated value over all items.
+/// Allocation-free beyond the two accumulator states.
 pub fn sequential_fold<A: Aggregator>(
     op: &A,
     items: &[A::State],
 ) -> A::State {
     let mut acc = op.identity();
+    let mut next = op.new_state();
     for x in items {
-        acc = op.agg(&acc, x);
+        op.agg_into(&acc, x, &mut next);
+        std::mem::swap(&mut acc, &mut next);
     }
     acc
 }

@@ -20,6 +20,39 @@ pub trait Aggregator {
     /// `Agg(left, right)`. Order matters for non-associative operators.
     fn agg(&self, left: &Self::State, right: &Self::State) -> Self::State;
 
+    /// In-place `Agg`: write `Agg(left, right)` into `out`, reusing
+    /// `out`'s existing buffers where the state type allows it. This is
+    /// the hot-path entry: every scan variant in [`crate::scan`] drives
+    /// its merges through `agg_into` so that a recycled state slab (see
+    /// [`super::counter::OnlineScan`]'s arena) makes the steady state
+    /// allocation-free.
+    ///
+    /// `out` never aliases `left` or `right` (guaranteed by `&mut`).
+    /// The default falls back to the owned [`Aggregator::agg`];
+    /// implementations overriding this MUST produce bit-identical
+    /// results to `agg` — the duality tests pin that equivalence.
+    fn agg_into(
+        &self,
+        left: &Self::State,
+        right: &Self::State,
+        out: &mut Self::State,
+    ) {
+        *out = self.agg(left, right);
+    }
+
+    /// Write the identity element into an existing state buffer
+    /// (buffer-reuse sibling of [`Aggregator::identity`]).
+    fn identity_into(&self, out: &mut Self::State) {
+        *out = self.identity();
+    }
+
+    /// Allocate a fresh state buffer suitable as `agg_into`'s `out`
+    /// argument. Arena owners call this only on cold starts; after
+    /// warmup every buffer comes back out of the recycle pool.
+    fn new_state(&self) -> Self::State {
+        self.identity()
+    }
+
     /// Documentation hint used by tests: whether the implementation
     /// *claims* associativity (the affine family). Tests *verify* the
     /// claim on random inputs rather than trusting it.
@@ -65,6 +98,24 @@ impl<A: Aggregator> Aggregator for CountingAgg<A> {
         self.inner.agg(left, right)
     }
 
+    fn agg_into(
+        &self,
+        left: &Self::State,
+        right: &Self::State,
+        out: &mut Self::State,
+    ) {
+        self.calls.set(self.calls.get() + 1);
+        self.inner.agg_into(left, right, out);
+    }
+
+    fn identity_into(&self, out: &mut Self::State) {
+        self.inner.identity_into(out);
+    }
+
+    fn new_state(&self) -> Self::State {
+        self.inner.new_state()
+    }
+
     fn claims_associative(&self) -> bool {
         self.inner.claims_associative()
     }
@@ -88,6 +139,10 @@ pub mod ops {
             l + r
         }
 
+        fn agg_into(&self, l: &i64, r: &i64, out: &mut i64) {
+            *out = l + r;
+        }
+
         fn claims_associative(&self) -> bool {
             true
         }
@@ -105,9 +160,23 @@ pub mod ops {
         }
 
         fn agg(&self, l: &String, r: &String) -> String {
-            let mut s = l.clone();
+            // Single exact-size allocation (no grow-on-push churn); the
+            // allocation-free path is `agg_into` below.
+            let mut s = String::with_capacity(l.len() + r.len());
+            s.push_str(l);
             s.push_str(r);
             s
+        }
+
+        fn agg_into(&self, l: &String, r: &String, out: &mut String) {
+            out.clear();
+            out.reserve(l.len() + r.len());
+            out.push_str(l);
+            out.push_str(r);
+        }
+
+        fn identity_into(&self, out: &mut String) {
+            out.clear();
         }
 
         fn claims_associative(&self) -> bool {
@@ -148,6 +217,30 @@ mod tests {
         assert_eq!(c.calls(), 2);
         c.reset();
         assert_eq!(c.calls(), 0);
+    }
+
+    #[test]
+    fn counting_wrapper_counts_in_place_calls() {
+        let c = CountingAgg::new(ConcatOp);
+        let mut out = String::new();
+        c.agg_into(&"a".to_string(), &"b".to_string(), &mut out);
+        assert_eq!(out, "ab");
+        assert_eq!(c.calls(), 1);
+    }
+
+    #[test]
+    fn concat_agg_into_matches_owned_and_reuses_buffer() {
+        let op = ConcatOp;
+        let (l, r) = ("left-".to_string(), "right".to_string());
+        let owned = op.agg(&l, &r);
+        let mut out = String::with_capacity(64);
+        let ptr = out.as_ptr();
+        op.agg_into(&l, &r, &mut out);
+        assert_eq!(owned, out);
+        // The pre-reserved buffer was reused, not reallocated.
+        assert_eq!(ptr, out.as_ptr());
+        op.identity_into(&mut out);
+        assert_eq!(out, op.identity());
     }
 
     #[test]

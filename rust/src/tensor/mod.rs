@@ -124,29 +124,13 @@ impl Tensor {
 
     // ---- linear algebra (2-D) --------------------------------------------
 
-    /// Matrix product [m, k] x [k, n] -> [m, n].
+    /// Matrix product [m, k] x [k, n] -> [m, n]. Delegates to
+    /// [`Tensor::matmul_into`] so the owned and in-place paths share one
+    /// kernel (bit-exact by construction).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
-        assert_eq!(self.shape.len(), 2);
-        assert_eq!(other.shape.len(), 2);
-        let (m, k) = (self.shape[0], self.shape[1]);
-        let (k2, n) = (other.shape[0], other.shape[1]);
-        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
-        let mut out = vec![0.0f32; m * n];
-        // ikj loop order for cache-friendly access to `other`.
-        for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
-        Tensor::new(&[m, n], out)
+        let mut out = Tensor { shape: Vec::new(), data: Vec::new() };
+        self.matmul_into(other, &mut out);
+        out
     }
 
     pub fn transpose(&self) -> Tensor {
@@ -198,6 +182,75 @@ impl Tensor {
             }
         }
         Tensor::new(&self.shape, out)
+    }
+
+    // ---- in-place variants (buffer reuse for the scan hot path) ----------
+
+    /// Overwrite `self` with `src`'s contents, reusing storage.
+    pub fn copy_from(&mut self, src: &Tensor) {
+        self.shape.clone_from(&src.shape);
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
+
+    /// Overwrite `self` with `src` mapped through `f`, reusing storage
+    /// (in-place sibling of [`Tensor::map`]).
+    pub fn fill_map(&mut self, src: &Tensor, f: impl Fn(f32) -> f32) {
+        self.shape.clone_from(&src.shape);
+        self.data.clear();
+        self.data.extend(src.data.iter().map(|&x| f(x)));
+    }
+
+    /// Overwrite `self` with `src` mapped through `f(flat_index, x)` —
+    /// one fused pass for index-dependent gates (column/elementwise
+    /// scaling) instead of copy-then-scale.
+    pub fn fill_map_indexed(
+        &mut self,
+        src: &Tensor,
+        f: impl Fn(usize, f32) -> f32,
+    ) {
+        self.shape.clone_from(&src.shape);
+        self.data.clear();
+        self.data
+            .extend(src.data.iter().enumerate().map(|(i, &x)| f(i, x)));
+    }
+
+    /// `self = other + self`, elementwise in place. The addend order
+    /// matches `other.add(&self)` so results are bit-identical to the
+    /// owned path.
+    pub fn radd_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = b + *a;
+        }
+    }
+
+    /// Matrix product `self · other` written into `out`, reusing its
+    /// storage — the single matmul kernel ([`Tensor::matmul`] delegates
+    /// here), ikj loop order for cache-friendly access to `other`.
+    pub fn matmul_into(&self, other: &Tensor, out: &mut Tensor) {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(other.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        out.shape.clear();
+        out.shape.extend_from_slice(&[m, n]);
+        out.data.clear();
+        out.data.resize(m * n, 0.0);
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
     }
 
     /// Max |a - b| over elements.

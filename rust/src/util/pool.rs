@@ -47,38 +47,62 @@ where
     });
 }
 
-/// Fill `dst[i] = f(i)` in parallel, writing straight into the caller's
-/// buffer — the zero-allocation sibling of [`parallel_map`]. The
-/// Blelloch levels ([`crate::scan::blelloch`]) call this once per tree
-/// level so no per-level `Vec` is churned.
-pub fn parallel_fill<T, F>(dst: &mut [T], workers: usize, f: F)
+/// Run `f(i, &mut dst[i])` for every slot in parallel — the in-place
+/// sibling of [`parallel_map`] for callers whose update kernels write
+/// *into* existing state (e.g. `Aggregator::agg_into` over the Blelloch
+/// level slabs): no value is moved, no old value is dropped, the slot
+/// is mutated where it lives.
+pub fn parallel_update<T, F>(dst: &mut [T], workers: usize, f: F)
 where
     T: Send,
-    F: Fn(usize) -> T + Sync,
+    F: Fn(usize, &mut T) + Sync,
 {
-    let n = dst.len();
+    // Exactly parallel_chunks with windows of one slot — one unsafe
+    // dispatch primitive to audit instead of two.
+    parallel_chunks(dst, 1, workers, |i, window| f(i, &mut window[0]));
+}
+
+/// Split `dst` into consecutive `chunk`-sized windows and run
+/// `f(i, window_i)` across the thread pool. `dst.len()` must be a
+/// multiple of `chunk`. Used to dispatch batch rows over disjoint
+/// slices of one flat output buffer (e.g. `[b, n, v]` logits) without
+/// any per-row allocation.
+pub fn parallel_chunks<T, F>(dst: &mut [T], chunk: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "parallel_chunks: chunk must be positive");
+    assert_eq!(
+        dst.len() % chunk,
+        0,
+        "parallel_chunks: len {} not a multiple of chunk {chunk}",
+        dst.len()
+    );
+    let n = dst.len() / chunk;
     if n == 0 {
         return;
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        for (i, slot) in dst.iter_mut().enumerate() {
-            *slot = f(i);
+        for (i, window) in dst.chunks_mut(chunk).enumerate() {
+            f(i, window);
         }
         return;
     }
     struct Slots<T>(*mut T);
-    // SAFETY: each index is claimed by exactly one worker (parallel_for
-    // hands out every i once), so writes are disjoint; the scope joins
-    // all workers before the caller can observe `dst` again. Assignment
-    // drops the old (initialised) value in place.
+    // SAFETY: window i covers [i*chunk, (i+1)*chunk) and each i is
+    // handed out exactly once, so the &mut windows are disjoint; the
+    // scope joins all workers before the caller sees `dst` again.
     unsafe impl<T: Send> Sync for Slots<T> {}
 
     let slots = Slots(dst.as_mut_ptr());
     let slots_ref = &slots;
     parallel_for(n, workers, |i| {
-        let v = f(i);
-        unsafe { *slots_ref.0.add(i) = v };
+        let window = unsafe {
+            std::slice::from_raw_parts_mut(slots_ref.0.add(i * chunk), chunk)
+        };
+        f(i, window);
     });
 }
 
@@ -141,19 +165,48 @@ mod tests {
     }
 
     #[test]
-    fn fill_writes_every_slot_and_drops_old_values() {
+    fn update_mutates_in_place() {
+        let mut dst: Vec<u64> = (0..500).map(|i| i as u64).collect();
+        parallel_update(&mut dst, 8, |i, slot| {
+            *slot += 2 * i as u64;
+        });
+        for (i, v) in dst.iter().enumerate() {
+            assert_eq!(*v, 3 * i as u64);
+        }
+        // Single-worker and empty paths.
+        let mut one = vec![1u64; 7];
+        parallel_update(&mut one, 1, |i, slot| *slot = i as u64);
+        assert_eq!(one, (0..7).collect::<Vec<_>>());
+        let mut empty: Vec<u64> = Vec::new();
+        parallel_update(&mut empty, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn chunks_cover_disjoint_windows() {
+        let mut dst = vec![0usize; 12 * 16];
+        parallel_chunks(&mut dst, 16, 5, |i, window| {
+            assert_eq!(window.len(), 16);
+            for v in window.iter_mut() {
+                *v = i + 1;
+            }
+        });
+        for (j, v) in dst.iter().enumerate() {
+            assert_eq!(*v, j / 16 + 1);
+        }
+        // Single-worker path.
+        let mut small = vec![0usize; 3 * 4];
+        parallel_chunks(&mut small, 4, 1, |i, w| w.fill(i));
+        assert_eq!(&small[8..], &[2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn update_overwrites_heap_values_drop_safely() {
         // Strings verify both index coverage and that overwriting the
         // pre-existing (heap-owning) values is drop-safe.
         let mut dst: Vec<String> = (0..200).map(|_| "old".to_string()).collect();
-        parallel_fill(&mut dst, 8, |i| format!("new-{i}"));
+        parallel_update(&mut dst, 8, |i, slot| *slot = format!("new-{i}"));
         for (i, v) in dst.iter().enumerate() {
             assert_eq!(v, &format!("new-{i}"));
         }
-        // Empty and single-worker paths.
-        let mut empty: Vec<u8> = Vec::new();
-        parallel_fill(&mut empty, 4, |_| 1);
-        let mut one = vec![0usize; 10];
-        parallel_fill(&mut one, 1, |i| i + 1);
-        assert_eq!(one, (1..=10).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,146 @@
+//! Allocation-behaviour pins for the scan core (harness = false; exits
+//! non-zero on failure):
+//!
+//! * A counting global allocator proves that `OnlineScan::push` +
+//!   `prefix_into` over [`ChunkSumOp`] perform **zero heap
+//!   allocations** in steady state — after one warmup pass, the arena
+//!   and roots vector have reached their high-water marks and every
+//!   buffer the carry chain or prefix fold needs comes out of the
+//!   recycle pool.
+//! * The in-place (`agg_into` + arena + `prefix_into`) and owned
+//!   (`agg` + `prefix`) paths are **bit-identical**, against each other
+//!   and against the static Blelloch scan.
+
+use psm::bench::{alloc_count as allocs, CountingAlloc};
+use psm::runtime::reference::ChunkSumOp;
+use psm::scan::traits::ops::ConcatOp;
+use psm::scan::traits::Aggregator;
+use psm::scan::{blelloch_scan, OnlineScan};
+use psm::util::prng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let mut failed = 0;
+    let mut run = |name: &str, f: fn()| {
+        let ok = std::panic::catch_unwind(f).is_ok();
+        println!(
+            "test alloc_free::{name} ... {}",
+            if ok { "ok" } else { "FAILED" }
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("steady_state_scan_is_allocation_free",
+        steady_state_scan_is_allocation_free);
+    run("in_place_vs_owned_bit_identical",
+        in_place_vs_owned_bit_identical);
+    run("concat_in_place_matches_owned", concat_in_place_matches_owned);
+
+    if failed > 0 {
+        eprintln!("{failed} alloc_free tests failed");
+        std::process::exit(1);
+    }
+    println!("test result: ok.");
+}
+
+/// Fill a chunk-state slab deterministically without allocating.
+fn fill(y: &mut [f32], t: u64) {
+    for (i, v) in y.iter_mut().enumerate() {
+        *v = ((t as usize * 31 + i * 7) % 13) as f32 * 0.5;
+    }
+}
+
+/// The headline pin: after one warmup pass over the full trajectory,
+/// re-running the identical push + prefix_into trajectory performs
+/// ZERO heap allocations — the arena high-water mark covers every
+/// take_buffer, carry merge and prefix scratch demand.
+fn steady_state_scan_is_allocation_free() {
+    let (c, d) = (32usize, 48usize);
+    let op = ChunkSumOp { c, d };
+    let n = 2048u64;
+    let mut scan = OnlineScan::new(&op);
+    let mut pbuf: Vec<f32> = Vec::with_capacity(c * d);
+
+    // Warmup: drive the counter through the whole trajectory once so
+    // the arena, the roots vector and the prefix buffer all reach
+    // their high-water marks.
+    for t in 0..n {
+        let mut y = scan.take_buffer();
+        y.resize(c * d, 0.0);
+        fill(&mut y, t);
+        scan.push(y);
+        scan.prefix_into(&mut pbuf);
+    }
+    // clear() recycles every root into the arena (capacities kept).
+    scan.clear();
+    assert!(scan.free_buffers() > 0);
+
+    // Steady state: same trajectory, zero allocations.
+    let a0 = allocs();
+    for t in 0..n {
+        let mut y = scan.take_buffer();
+        y.resize(c * d, 0.0);
+        fill(&mut y, t);
+        scan.push(y);
+        scan.prefix_into(&mut pbuf);
+    }
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta, 0,
+        "steady-state push/prefix performed {delta} heap allocations \
+         over {n} elements"
+    );
+    // The bound held while producing real values.
+    assert!(pbuf.iter().all(|x| x.is_finite()));
+}
+
+/// In-place and owned scan paths produce bit-identical prefixes, and
+/// both equal the static Blelloch parenthesisation at every t.
+fn in_place_vs_owned_bit_identical() {
+    let (c, d) = (8usize, 6usize);
+    let op = ChunkSumOp { c, d };
+    let mut rng = Rng::new(0xBEEF);
+    let chunks: Vec<Vec<f32>> = (0..300)
+        .map(|_| (0..c * d).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let static_pref = blelloch_scan(&op, &chunks);
+
+    let mut owned = OnlineScan::new(&op);
+    let mut inplace = OnlineScan::new(&op);
+    let mut pbuf: Vec<f32> = Vec::new();
+    for (t, ch) in chunks.iter().enumerate() {
+        // Exclusive prefixes before pushing x_t (== static_pref[t]).
+        inplace.prefix_into(&mut pbuf);
+        assert_eq!(static_pref[t], pbuf, "in-place vs static at t={t}");
+        assert_eq!(owned.prefix(), pbuf, "owned vs in-place at t={t}");
+
+        owned.push(ch.clone());
+        let mut y = inplace.take_buffer();
+        y.resize(c * d, 0.0);
+        y.copy_from_slice(ch);
+        inplace.push(y);
+    }
+}
+
+/// The `ConcatOp` in-place merge (`agg_into` with `String` reuse) is
+/// value-identical to the owned path across a full online scan.
+fn concat_in_place_matches_owned() {
+    let op = ConcatOp;
+    let mut scan = OnlineScan::new(&op);
+    let mut expect = String::new();
+    let mut pbuf = String::new();
+    for i in 0..100 {
+        let piece = format!("<{i}>");
+        expect.push_str(&piece);
+        let mut y = scan.take_buffer();
+        op.identity_into(&mut y);
+        y.push_str(&piece);
+        scan.push(y);
+        scan.prefix_into(&mut pbuf);
+        assert_eq!(expect, pbuf, "i={i}");
+    }
+}
