@@ -3,7 +3,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench artifacts clean
+.PHONY: build test bench chaos artifacts clean
 
 build:
 	cargo build --release
@@ -17,6 +17,11 @@ test:
 bench:
 	cargo bench --bench scan_hotpath
 	cargo bench --bench fig6_latency
+
+# Fault-injection soak + recovery bench (writes BENCH_chaos.json).
+chaos:
+	cargo test -q --test chaos_soak
+	cargo bench --bench chaos
 
 # AOT-lower every model entry point to HLO text + manifest.json for the
 # PJRT backend. Requires a python environment with jax (build-time only;

@@ -1,0 +1,156 @@
+//! Chaos bench: serving latency and recovery accounting under
+//! deterministic fault injection, clean run vs faulted run on the same
+//! workload.
+//!
+//! Streams the same token sequence through a fault-free session and
+//! through a [`FaultBackend`]-wrapped one (transient errors, NaN
+//! corruption caught by output validation, latency spikes), then
+//! reports per-token latency (mean/p50/p99), the added latency of
+//! recovery, the injection/recovery counters, and whether the faulted
+//! stream stayed bit-identical to the clean one (it must — the
+//! prefix-scan replay is side-effect-free).
+//!
+//! Results go to `BENCH_chaos.json`. `--quick` shortens the stream for
+//! CI smoke runs.
+
+use psm::bench::Table;
+use psm::coordinator::{PsmSession, RetryPolicy};
+use psm::runtime::{FaultConfig, ParamStore, Runtime};
+use psm::util::stats::{percentile, Summary};
+
+struct Lat {
+    mean_ms: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+/// Stream `tokens` through `sess`, returning per-token latency stats
+/// and the logits stream for bit-exactness comparison.
+fn stream(
+    sess: &mut PsmSession,
+    tokens: &[i32],
+) -> (Lat, Vec<Vec<f32>>) {
+    let mut samples = Vec::with_capacity(tokens.len());
+    let mut s = Summary::new();
+    let mut logits = Vec::with_capacity(tokens.len());
+    for &t in tokens {
+        let t0 = std::time::Instant::now();
+        logits.push(sess.push_token(t).unwrap());
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        samples.push(ms);
+        s.add(ms);
+    }
+    (
+        Lat {
+            mean_ms: s.mean(),
+            p50_ms: percentile(&samples, 50.0),
+            p99_ms: percentile(&samples, 99.0),
+        },
+        logits,
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: usize = std::env::var("PSM_BENCH_TOKENS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 64 } else { 256 });
+    let model = "psm_s5";
+    let tokens: Vec<i32> = (0..n).map(|t| (t % 100) as i32).collect();
+
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 42).unwrap();
+    println!("# chaos bench — {model}, {n} tokens/phase\n");
+
+    // Phase 1: fault-free baseline.
+    let mut clean_sess = PsmSession::new(&rt, model, &params).unwrap();
+    let (clean, clean_logits) = stream(&mut clean_sess, &tokens);
+
+    // Phase 2: same workload under injection. Output validation turns
+    // the injected NaNs into retryable typed errors; the retry policy
+    // pays a small real backoff so the added latency is the honest cost
+    // of recovery.
+    let cfg = FaultConfig {
+        seed: 42,
+        transient_p: 0.02,
+        nan_p: 0.01,
+        delay_p: 0.05,
+        delay_ms: 2,
+    };
+    std::env::set_var("PSM_VALIDATE", "1");
+    let frt = Runtime::reference().with_faults(cfg);
+    let mut fault_sess = PsmSession::new(&frt, model, &params).unwrap();
+    std::env::remove_var("PSM_VALIDATE");
+    fault_sess.set_retry_policy(RetryPolicy {
+        max_attempts: 8,
+        base_backoff_ms: 1,
+        max_backoff_ms: 8,
+        retry_non_finite: true,
+    });
+    let (faulted, faulted_logits) = stream(&mut fault_sess, &tokens);
+
+    let bit_exact = clean_logits == faulted_logits;
+    let retries = fault_sess.metrics.retries;
+    let counts = frt.fault_backend().unwrap().counts();
+    let injected = counts.transient + counts.nan;
+    let added_mean = faulted.mean_ms - clean.mean_ms;
+
+    let mut table =
+        Table::new(&["phase", "mean ms/tok", "p50 ms/tok", "p99 ms/tok"]);
+    for (name, l) in [("clean", &clean), ("faulted", &faulted)] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", l.mean_ms),
+            format!("{:.4}", l.p50_ms),
+            format!("{:.4}", l.p99_ms),
+        ]);
+    }
+    table.print();
+    println!(
+        "\ninjected: {} transient, {} nan, {} delay over {} backend \
+         calls; {retries} replays; bit-exact: {bit_exact}",
+        counts.transient, counts.nan, counts.delay, counts.calls
+    );
+    println!("added latency: {added_mean:.4} ms/tok (mean)");
+
+    assert!(bit_exact, "faulted stream diverged from the clean one");
+    assert!(injected > 0, "fault schedule never fired — dead bench");
+    assert_eq!(
+        retries, injected,
+        "every injected fault must be recovered by exactly one replay"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"chaos\",\n  \"model\": \"{model}\", \
+         \"tokens\": {n}, \"quick\": {quick},\n  \"config\": \
+         {{\"seed\": {}, \"transient_p\": {}, \"nan_p\": {}, \
+         \"delay_p\": {}, \"delay_ms\": {}}},\n  \"clean\": \
+         {{\"mean_ms\": {:.4}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}}},\n  \
+         \"faulted\": {{\"mean_ms\": {:.4}, \"p50_ms\": {:.4}, \
+         \"p99_ms\": {:.4}}},\n  \"added_mean_ms\": {added_mean:.4},\n  \
+         \"injected\": {{\"calls\": {}, \"transient\": {}, \"nan\": {}, \
+         \"delay\": {}}},\n  \"recovered_replays\": {retries},\n  \
+         \"bit_exact\": {bit_exact}\n}}\n",
+        cfg.seed,
+        cfg.transient_p,
+        cfg.nan_p,
+        cfg.delay_p,
+        cfg.delay_ms,
+        clean.mean_ms,
+        clean.p50_ms,
+        clean.p99_ms,
+        faulted.mean_ms,
+        faulted.p50_ms,
+        faulted.p99_ms,
+        counts.calls,
+        counts.transient,
+        counts.nan,
+        counts.delay,
+    );
+    let path = psm::bench::artifact_path("BENCH_chaos.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\ncould not write {}: {e}", path.display()),
+    }
+}

@@ -8,12 +8,20 @@
 //!   recurrent-step sessions for the Fig. 6 latency comparison.
 //! * [`batcher`] — dynamic batching of concurrent sessions' Inf calls.
 //! * [`server`] — a TCP line-protocol front end; connection threads
-//!   route requests over channels to the single executor thread that
-//!   owns the (non-`Send`) PJRT runtime.
+//!   route requests over a *bounded* channel to the single executor
+//!   thread that owns the (non-`Send`) PJRT runtime. The executor
+//!   isolates per-session failures (quarantine + typed `ERR` replies),
+//!   sheds load when the queue or a request deadline overflows, and
+//!   garbage-collects idle sessions.
+//!
+//! Fault tolerance spans the layer: sessions retry retryable backend
+//! errors under [`stream::RetryPolicy`] (bit-exact replay — see the
+//! duality argument in [`stream`]'s docs) and poison themselves when
+//! state integrity is lost, rather than serving corrupt prefixes.
 
 pub mod baseline;
 pub mod batcher;
 pub mod server;
 pub mod stream;
 
-pub use stream::{PsmSession, SessionMetrics};
+pub use stream::{PsmSession, RetryPolicy, SessionMetrics};

@@ -2,31 +2,59 @@
 //!
 //! Backends need not be `Send` (PJRT objects are not), so the
 //! architecture is: N connection threads parse a line protocol and send
-//! [`Request`]s over an mpsc channel to the single *executor* thread
-//! that owns the [`Runtime`] and all sessions; responses return over
-//! per-request channels. This is the shape a real single-accelerator
-//! serving process takes (cf. the vLLM router): routing and IO scale
-//! out in threads, device work is serialised on the owner.
+//! [`Request`]s over a **bounded** mpsc channel to the single
+//! *executor* thread that owns the [`Runtime`] and all sessions;
+//! responses return over per-request channels. This is the shape a real
+//! single-accelerator serving process takes (cf. the vLLM router):
+//! routing and IO scale out in threads, device work is serialised on
+//! the owner.
 //!
 //! Protocol (one request per line):
 //!   GEN <n> <tok> <tok> ...   -> "OK <tok> <tok> ..." (greedy decode)
-//!   STATS                     -> "OK tokens=<n> sessions=<n>"
+//!   STATS                     -> "OK tokens=<n> sessions=<n> ..."
 //!   QUIT                      -> closes the connection
 //!
 //! Each connection gets its own streaming session (created lazily).
+//! Malformed requests (unparsable `n` or token) are rejected with
+//! `ERR bad request: ...` instead of being silently coerced.
+//!
+//! **Failure isolation.** The executor never dies on a per-session
+//! failure: session creation errors and generation errors answer `ERR`
+//! on that request only; device work runs under `catch_unwind` so a
+//! panicking kernel is converted into a typed
+//! [`PsmError::Fatal`](crate::runtime::PsmError) reply; sessions whose
+//! state integrity is lost are **quarantined** (subsequent requests get
+//! `session_poisoned` until the quarantine TTL expires and a fresh
+//! session can be created). Overload is shed, not queued unboundedly:
+//! the request channel is bounded (`PSM_QUEUE_CAP`, default 512) and
+//! every request carries a deadline (`PSM_DEADLINE_MS`, default 30000)
+//! checked before and during execution — blowing either answers
+//! `ERR overloaded: ...`. Idle sessions are garbage-collected after
+//! `PSM_SESSION_TTL_MS` (default 600000) on a `PSM_GC_TICK_MS` cadence,
+//! bounding memory under session-id churn.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::stream::PsmSession;
-use crate::log_info;
-use crate::runtime::{ParamStore, Runtime};
+use crate::runtime::{ParamStore, PsmError, Runtime};
+use crate::{log_info, log_warn};
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
 
 /// A request routed to the executor thread.
 pub enum Request {
@@ -35,45 +63,282 @@ pub enum Request {
         session: u64,
         prompt: Vec<i32>,
         n: usize,
+        /// Wall-clock budget; `None` = unbounded (library callers).
+        deadline: Option<Instant>,
         reply: mpsc::Sender<Result<Vec<i32>>>,
     },
-    /// Aggregate counters.
+    /// Aggregate counters (kept for callers that predate [`ExecStats`]).
     Stats { reply: mpsc::Sender<(u64, usize)> },
+    /// Full health snapshot.
+    Health { reply: mpsc::Sender<ExecStats> },
     /// Tear down a session.
     Close { session: u64 },
     /// Stop the executor loop.
     Shutdown,
 }
 
+/// Executor health counters, answered over [`Request::Health`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Tokens processed by successful generate calls.
+    pub tokens: u64,
+    /// Live sessions.
+    pub sessions: usize,
+    /// Sessions currently quarantined (poisoned, TTL pending).
+    pub quarantined: usize,
+    /// Requests answered with a non-overload error.
+    pub errors: u64,
+    /// Requests shed for overload (queue/deadline).
+    pub shed: u64,
+    /// Backend calls replayed after retryable faults (recovered),
+    /// summed over live and retired sessions.
+    pub retries: u64,
+    /// Panics caught and converted to error replies.
+    pub panics: u64,
+    /// Idle sessions reclaimed by the GC.
+    pub gc: u64,
+}
+
+/// A live session plus the bookkeeping the executor needs for GC.
+struct SessionSlot {
+    sess: PsmSession,
+    last_used: Instant,
+}
+
+/// Executor state that outlives individual sessions.
+struct Executor {
+    sessions: HashMap<u64, SessionSlot>,
+    /// Poisoned session ids and when they were quarantined. A request
+    /// for a quarantined id is refused until the TTL expires, after
+    /// which the id may be recreated fresh.
+    quarantine: HashMap<u64, Instant>,
+    ttl: Duration,
+    total_tokens: u64,
+    errors: u64,
+    shed: u64,
+    panics: u64,
+    gc_reclaimed: u64,
+    /// Retries accumulated by sessions that have since been retired
+    /// (closed, GC'd or quarantined).
+    retired_retries: u64,
+}
+
+impl Executor {
+    fn new(ttl: Duration) -> Executor {
+        Executor {
+            sessions: HashMap::new(),
+            quarantine: HashMap::new(),
+            ttl,
+            total_tokens: 0,
+            errors: 0,
+            shed: 0,
+            panics: 0,
+            gc_reclaimed: 0,
+            retired_retries: 0,
+        }
+    }
+
+    fn stats(&self) -> ExecStats {
+        let live_retries: u64 = self
+            .sessions
+            .values()
+            .map(|s| s.sess.metrics.retries)
+            .sum();
+        ExecStats {
+            tokens: self.total_tokens,
+            sessions: self.sessions.len(),
+            quarantined: self.quarantine.len(),
+            errors: self.errors,
+            shed: self.shed,
+            retries: self.retired_retries + live_retries,
+            panics: self.panics,
+            gc: self.gc_reclaimed,
+        }
+    }
+
+    /// Remove a session, keeping its recovered-retry count.
+    fn retire(&mut self, session: u64) {
+        if let Some(slot) = self.sessions.remove(&session) {
+            self.retired_retries += slot.sess.metrics.retries;
+        }
+    }
+
+    /// Reclaim idle sessions and expired quarantine entries.
+    fn gc(&mut self) {
+        let now = Instant::now();
+        let dead: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| now.duration_since(s.last_used) >= self.ttl)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in dead {
+            self.retire(id);
+            self.gc_reclaimed += 1;
+        }
+        let ttl = self.ttl;
+        self.quarantine
+            .retain(|_, &mut when| now.duration_since(when) < ttl);
+    }
+
+    /// One generate request, fully isolated: every failure mode answers
+    /// on `reply` and leaves the executor able to serve other sessions.
+    #[allow(clippy::too_many_arguments)]
+    fn generate(
+        &mut self,
+        rt: &Runtime,
+        model: &str,
+        params: &ParamStore,
+        session: u64,
+        prompt: &[i32],
+        n: usize,
+        deadline: Option<Instant>,
+        reply: &mpsc::Sender<Result<Vec<i32>>>,
+    ) {
+        if self.quarantine.contains_key(&session) {
+            self.errors += 1;
+            let _ = reply.send(Err(anyhow::Error::new(
+                PsmError::SessionPoisoned(format!(
+                    "session {session} is quarantined"
+                )),
+            )));
+            return;
+        }
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                self.shed += 1;
+                let _ = reply.send(Err(anyhow::Error::new(
+                    PsmError::Overloaded(format!(
+                        "deadline expired before session {session} started"
+                    )),
+                )));
+                return;
+            }
+        }
+
+        // Lazy creation through the entry API; a creation failure is a
+        // per-request error, never executor death.
+        let (result, poisoned) = {
+            let slot = match self.sessions.entry(session) {
+                Entry::Occupied(e) => e.into_mut(),
+                Entry::Vacant(v) => match PsmSession::new(rt, model, params)
+                {
+                    Ok(sess) => v.insert(SessionSlot {
+                        sess,
+                        last_used: Instant::now(),
+                    }),
+                    Err(e) => {
+                        self.errors += 1;
+                        let _ = reply.send(Err(e.context(format!(
+                            "creating session {session}"
+                        ))));
+                        return;
+                    }
+                },
+            };
+            slot.last_used = Instant::now();
+            // A panicking kernel must not take the executor (and every
+            // other session) down with it. `AssertUnwindSafe` is sound
+            // here because on unwind the slot is unconditionally
+            // retired below — its possibly-torn state is never observed
+            // again.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                slot.sess.generate_deadline(prompt, n, deadline)
+            }));
+            let poisoned = match &result {
+                Ok(_) => slot.sess.is_poisoned(),
+                Err(_) => true,
+            };
+            (result, poisoned)
+        };
+
+        match result {
+            Ok(Ok(out)) => {
+                self.total_tokens += (prompt.len() + n) as u64;
+                let _ = reply.send(Ok(out));
+            }
+            Ok(Err(e)) => {
+                if matches!(PsmError::of(&e), Some(PsmError::Overloaded(_)))
+                {
+                    self.shed += 1;
+                } else {
+                    self.errors += 1;
+                }
+                let _ = reply.send(Err(e));
+            }
+            Err(payload) => {
+                self.panics += 1;
+                self.errors += 1;
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                log_warn!("panic in session {session} (caught): {msg}");
+                let _ = reply.send(Err(anyhow::Error::new(
+                    PsmError::Fatal(format!(
+                        "panic in session {session}: {msg}"
+                    )),
+                )));
+            }
+        }
+        if poisoned {
+            log_warn!("quarantining poisoned session {session}");
+            self.retire(session);
+            self.quarantine.insert(session, Instant::now());
+        }
+    }
+}
+
 /// Executor: owns the runtime and all sessions; single-threaded device
-/// work loop.
+/// work loop. Per-session failures are isolated (see the module docs);
+/// the loop itself only exits on [`Request::Shutdown`] or when every
+/// sender is gone.
 pub fn executor_loop(
     rt: &Runtime,
     model: &str,
     params: &ParamStore,
     rx: mpsc::Receiver<Request>,
 ) -> Result<()> {
-    let mut sessions: HashMap<u64, PsmSession> = HashMap::new();
-    let mut total_tokens: u64 = 0;
-    for req in rx {
+    let gc_tick =
+        Duration::from_millis(env_u64("PSM_GC_TICK_MS", 500).max(1));
+    let ttl =
+        Duration::from_millis(env_u64("PSM_SESSION_TTL_MS", 600_000).max(1));
+    let mut ex = Executor::new(ttl);
+    let mut last_gc = Instant::now();
+    loop {
+        let req = match rx.recv_timeout(gc_tick) {
+            Ok(req) => req,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                ex.gc();
+                last_gc = Instant::now();
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
         match req {
-            Request::Generate { session, prompt, n, reply } => {
-                if !sessions.contains_key(&session) {
-                    sessions.insert(session,
-                                    PsmSession::new(rt, model, params)?);
-                }
-                let sess = sessions.get_mut(&session).unwrap();
-                let out = sess.generate(&prompt, n);
-                total_tokens += (prompt.len() + n) as u64;
-                let _ = reply.send(out);
+            Request::Generate { session, prompt, n, deadline, reply } => {
+                ex.generate(
+                    rt, model, params, session, &prompt, n, deadline,
+                    &reply,
+                );
             }
             Request::Stats { reply } => {
-                let _ = reply.send((total_tokens, sessions.len()));
+                let _ = reply.send((ex.total_tokens, ex.sessions.len()));
+            }
+            Request::Health { reply } => {
+                let _ = reply.send(ex.stats());
             }
             Request::Close { session } => {
-                sessions.remove(&session);
+                ex.retire(session);
             }
             Request::Shutdown => break,
+        }
+        // Under sustained load `recv_timeout` never times out, so also
+        // GC opportunistically between requests.
+        if last_gc.elapsed() >= gc_tick {
+            ex.gc();
+            last_gc = Instant::now();
         }
     }
     Ok(())
@@ -94,7 +359,11 @@ pub fn serve(
     listener.set_nonblocking(true)?;
     log_info!("serving {model} on {addr}");
 
-    let (tx, rx) = mpsc::channel::<Request>();
+    // Bounded queue: when connection threads outrun the executor the
+    // excess is shed at enqueue time ("ERR overloaded") instead of
+    // growing an unbounded backlog of doomed-to-miss-deadline work.
+    let cap = env_u64("PSM_QUEUE_CAP", 512).max(1) as usize;
+    let (tx, rx) = mpsc::sync_channel::<Request>(cap);
     let next_session = Arc::new(AtomicU64::new(0));
 
     // Acceptor thread: hands connections to per-connection threads.
@@ -129,7 +398,8 @@ pub fn serve(
                     }
                 }
             }
-            // Unblock the executor.
+            // Unblock the executor. Blocking send: shutdown must not be
+            // droppable even when the queue is full.
             let _ = tx.send(Request::Shutdown);
         })
     };
@@ -142,8 +412,10 @@ pub fn serve(
 fn handle_conn(
     stream: TcpStream,
     session: u64,
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
 ) -> Result<()> {
+    let deadline_ms = env_u64("PSM_DEADLINE_MS", 30_000);
+    let max_gen = env_u64("PSM_MAX_GEN", 4096) as usize;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -151,38 +423,193 @@ fn handle_conn(
         let mut parts = line.split_whitespace();
         match parts.next() {
             Some("GEN") => {
-                let n: usize = parts
-                    .next()
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(16);
-                let prompt: Vec<i32> = parts
-                    .filter_map(|s| s.parse().ok())
-                    .collect();
-                let (rtx, rrx) = mpsc::channel();
-                tx.send(Request::Generate { session, prompt, n, reply: rtx })
-                    .ok();
-                match rrx.recv() {
-                    Ok(Ok(tokens)) => {
-                        let body: Vec<String> =
-                            tokens.iter().map(|t| t.to_string()).collect();
-                        writeln!(writer, "OK {}", body.join(" "))?;
+                let toks: Vec<&str> = parts.collect();
+                // `GEN` alone keeps the historical default of 16; an
+                // *unparsable* n is rejected, not coerced.
+                let n: usize = match toks.first() {
+                    None => 16,
+                    Some(s) => match s.parse() {
+                        Ok(v) => v,
+                        Err(_) => {
+                            writeln!(
+                                writer,
+                                "ERR bad request: n {s:?} is not a number"
+                            )?;
+                            continue;
+                        }
+                    },
+                };
+                if n > max_gen {
+                    writeln!(
+                        writer,
+                        "ERR bad request: n {n} exceeds PSM_MAX_GEN \
+                         {max_gen}"
+                    )?;
+                    continue;
+                }
+                let mut prompt =
+                    Vec::with_capacity(toks.len().saturating_sub(1));
+                let mut bad = None;
+                for s in toks.get(1..).unwrap_or(&[]) {
+                    match s.parse::<i32>() {
+                        Ok(t) => prompt.push(t),
+                        Err(_) => {
+                            bad = Some(*s);
+                            break;
+                        }
                     }
-                    Ok(Err(e)) => writeln!(writer, "ERR {e}")?,
-                    Err(_) => writeln!(writer, "ERR executor gone")?,
+                }
+                if let Some(s) = bad {
+                    writeln!(
+                        writer,
+                        "ERR bad request: token {s:?} is not an i32"
+                    )?;
+                    continue;
+                }
+                let deadline = Some(
+                    Instant::now() + Duration::from_millis(deadline_ms),
+                );
+                let (rtx, rrx) = mpsc::channel();
+                let req = Request::Generate {
+                    session,
+                    prompt,
+                    n,
+                    deadline,
+                    reply: rtx,
+                };
+                match tx.try_send(req) {
+                    Ok(()) => match rrx.recv() {
+                        Ok(Ok(tokens)) => {
+                            let body: Vec<String> = tokens
+                                .iter()
+                                .map(|t| t.to_string())
+                                .collect();
+                            writeln!(writer, "OK {}", body.join(" "))?;
+                        }
+                        Ok(Err(e)) => writeln!(writer, "ERR {e:#}")?,
+                        Err(_) => writeln!(writer, "ERR executor gone")?,
+                    },
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        writeln!(
+                            writer,
+                            "ERR overloaded: request queue full"
+                        )?;
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        writeln!(writer, "ERR executor gone")?;
+                    }
                 }
             }
             Some("STATS") => {
                 let (rtx, rrx) = mpsc::channel();
-                tx.send(Request::Stats { reply: rtx }).ok();
-                if let Ok((tokens, sessions)) = rrx.recv() {
-                    writeln!(writer,
-                             "OK tokens={tokens} sessions={sessions}")?;
+                match tx.try_send(Request::Health { reply: rtx }) {
+                    Ok(()) => match rrx.recv() {
+                        Ok(s) => writeln!(
+                            writer,
+                            "OK tokens={} sessions={} quarantined={} \
+                             errors={} shed={} retries={} panics={} gc={}",
+                            s.tokens,
+                            s.sessions,
+                            s.quarantined,
+                            s.errors,
+                            s.shed,
+                            s.retries,
+                            s.panics,
+                            s.gc
+                        )?,
+                        Err(_) => writeln!(writer, "ERR executor gone")?,
+                    },
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        writeln!(
+                            writer,
+                            "ERR overloaded: request queue full"
+                        )?;
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        writeln!(writer, "ERR executor gone")?;
+                    }
                 }
             }
             Some("QUIT") | None => break,
             Some(other) => writeln!(writer, "ERR unknown command {other}")?,
         }
     }
-    let _ = tx.send(Request::Close { session });
+    // Best effort: if the queue is saturated the Close is dropped and
+    // the idle-session GC reclaims the session instead.
+    let _ = tx.try_send(Request::Close { session });
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The executor must answer ERR (not die) when asked to create a
+    /// session for an unknown model, and keep serving afterwards.
+    #[test]
+    fn executor_survives_session_creation_failure() {
+        let rt = Runtime::reference();
+        let params = ParamStore::init(&rt, "psm_s5", 3).unwrap();
+        let (tx, rx) = mpsc::sync_channel::<Request>(8);
+        let handle = std::thread::spawn(move || {
+            let rt = Runtime::reference();
+            executor_loop(&rt, "no_such_model", &params, rx).unwrap();
+        });
+
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request::Generate {
+            session: 0,
+            prompt: vec![1, 2],
+            n: 2,
+            deadline: None,
+            reply: rtx,
+        })
+        .unwrap();
+        let reply = rrx.recv().unwrap();
+        assert!(reply.is_err(), "unknown model must answer ERR");
+
+        // Still alive: health answers, with the error counted.
+        let (htx, hrx) = mpsc::channel();
+        tx.send(Request::Health { reply: htx }).unwrap();
+        let stats = hrx.recv().unwrap();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.sessions, 0);
+
+        tx.send(Request::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    /// An already-expired deadline is shed with a typed `overloaded`
+    /// error and does not create (or poison) a session.
+    #[test]
+    fn expired_deadline_is_shed() {
+        let rt = Runtime::reference();
+        let params = ParamStore::init(&rt, "psm_s5", 3).unwrap();
+        let (tx, rx) = mpsc::sync_channel::<Request>(8);
+        let handle = std::thread::spawn(move || {
+            let rt = Runtime::reference();
+            executor_loop(&rt, "psm_s5", &params, rx).unwrap();
+        });
+
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request::Generate {
+            session: 7,
+            prompt: vec![1],
+            n: 1,
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            reply: rtx,
+        })
+        .unwrap();
+        let err = rrx.recv().unwrap().unwrap_err();
+        assert_eq!(PsmError::code_of(&err), "overloaded");
+
+        let (htx, hrx) = mpsc::channel();
+        tx.send(Request::Health { reply: htx }).unwrap();
+        let stats = hrx.recv().unwrap();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.sessions, 0, "shed request must not open a session");
+
+        tx.send(Request::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
 }

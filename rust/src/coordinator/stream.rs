@@ -30,10 +30,141 @@
 //! backend uploads/downloads inside [`crate::runtime::Module::run`],
 //! the reference backend computes in place). `host_copy_s` is therefore
 //! folded into the per-phase timings rather than tracked separately.
+//!
+//! **Fault tolerance.** Every `enc`/`agg`/`inf` call runs through a
+//! bounded [`RetryPolicy`] (exponential backoff + deterministic
+//! jitter): [`crate::runtime::PsmError::Transient`] failures — and,
+//! policy-permitting, `NonFinite` ones — are replayed from the staged
+//! input slots. The replay is side-effect-free *because of* the
+//! sequential-parallel duality: counter roots and the cached prefix are
+//! only advanced after a call succeeds, so a retried call sees
+//! bit-identical inputs and produces bit-identical outputs. When the
+//! retry budget is exhausted (or a kernel panics through), the session
+//! is **poisoned**: its state may be mid-carry-chain and every
+//! subsequent call answers [`crate::runtime::PsmError::SessionPoisoned`]
+//! until [`PsmSession::reset`]. The executor quarantines poisoned
+//! sessions rather than letting them take the process down.
+
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{HostValue, Module, ParamStore, Runtime};
+use crate::runtime::{HostValue, Module, ParamStore, PsmError, Runtime};
+use crate::util::prng::Rng;
+
+/// Bounded-retry policy for backend calls: exponential backoff with
+/// jitter, driven by the session's seeded [`Rng`] so the whole schedule
+/// is deterministic under a fixed seed (asserted in the chaos tests).
+///
+/// Classification: `Transient` errors always qualify; `NonFinite`
+/// qualifies when `retry_non_finite` is set (the chaos harness injects
+/// NaNs that a replay clears; a *deterministic* NaN simply exhausts the
+/// budget and poisons the session). Everything else fails fast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before retry k is ~`base * 2^k`, jittered.
+    pub base_backoff_ms: u64,
+    /// Ceiling on any single backoff sleep.
+    pub max_backoff_ms: u64,
+    /// Whether `NonFinite` outputs are worth replaying.
+    pub retry_non_finite: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff_ms: 1,
+            max_backoff_ms: 50,
+            retry_non_finite: true,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Defaults overridable via `PSM_RETRY_MAX`, `PSM_RETRY_BASE_MS`,
+    /// `PSM_RETRY_MAX_MS`, `PSM_RETRY_NON_FINITE` (=0 disables).
+    /// Unparsable values fall back to the default.
+    pub fn from_env() -> RetryPolicy {
+        fn env_u64(key: &str) -> Option<u64> {
+            std::env::var(key).ok().and_then(|s| s.parse().ok())
+        }
+        let mut p = RetryPolicy::default();
+        if let Some(v) = env_u64("PSM_RETRY_MAX") {
+            p.max_attempts = (v as u32).max(1);
+        }
+        if let Some(v) = env_u64("PSM_RETRY_BASE_MS") {
+            p.base_backoff_ms = v;
+        }
+        if let Some(v) = env_u64("PSM_RETRY_MAX_MS") {
+            p.max_backoff_ms = v;
+        }
+        if let Some(v) = env_u64("PSM_RETRY_NON_FINITE") {
+            p.retry_non_finite = v != 0;
+        }
+        p
+    }
+
+    /// Backoff before retry number `attempt` (0-based): exponential
+    /// growth capped at `max_backoff_ms`, with "half jitter" — uniform
+    /// in `[cap/2, cap]` — drawn from `rng`. Pure in `(self, attempt,
+    /// rng state)`, so a fixed seed reproduces the schedule exactly.
+    pub fn backoff_ms(&self, attempt: u32, rng: &mut Rng) -> u64 {
+        let exp =
+            self.base_backoff_ms.saturating_mul(1u64 << attempt.min(20));
+        let cap = exp.min(self.max_backoff_ms);
+        let half = cap / 2;
+        half + rng.below(cap - half + 1)
+    }
+
+    fn qualifies(&self, err: &anyhow::Error) -> bool {
+        match PsmError::of(err) {
+            Some(PsmError::Transient(_)) => true,
+            Some(PsmError::NonFinite(_)) => self.retry_non_finite,
+            _ => false,
+        }
+    }
+}
+
+/// Run `module` with bounded retry per `policy`. Inputs are the staged
+/// slot vector, untouched by a failed call, so every attempt is an
+/// exact replay. Increments `*retries` once per replay that actually
+/// happens (so `retries` counts recovered faults when the final
+/// attempt succeeds).
+fn run_with_retry(
+    module: &Module,
+    inputs: &[HostValue],
+    policy: &RetryPolicy,
+    rng: &mut Rng,
+    retries: &mut u64,
+) -> Result<Vec<HostValue>> {
+    let mut attempt = 0u32;
+    loop {
+        match module.run(inputs) {
+            Ok(out) => return Ok(out),
+            Err(e) => {
+                if attempt + 1 >= policy.max_attempts
+                    || !policy.qualifies(&e)
+                {
+                    return Err(e);
+                }
+                let ms = policy.backoff_ms(attempt, rng);
+                if ms > 0 {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                attempt += 1;
+                *retries += 1;
+            }
+        }
+    }
+}
+
+/// Fixed seed for the session-local backoff RNG: retry schedules are
+/// part of observable behaviour (the chaos soak asserts on them), so
+/// they must not vary run to run.
+const BACKOFF_SEED: u64 = 0x5eed_5ca7_ab1e_0001;
 
 /// Instrumentation counters for the complexity experiments (Eq. C2).
 #[derive(Clone, Debug, Default)]
@@ -49,6 +180,9 @@ pub struct SessionMetrics {
     /// Retained for dashboard compatibility; host copies now happen
     /// inside the backend and are included in `enc_s`/`inf_s`/`agg_s`.
     pub host_copy_s: f64,
+    /// Backend calls that were replayed after a retryable failure
+    /// (recovered faults when the enclosing call ultimately succeeded).
+    pub retries: u64,
 }
 
 impl SessionMetrics {
@@ -84,6 +218,15 @@ pub struct PsmSession {
     pub d: usize,
     pub vocab: usize,
     pub metrics: SessionMetrics,
+    /// Bounded-retry policy applied to every backend call.
+    retry: RetryPolicy,
+    /// Session-local RNG for backoff jitter; fixed seed makes the
+    /// whole retry schedule deterministic.
+    rng: Rng,
+    /// Set when state integrity can no longer be guaranteed (retry
+    /// budget exhausted mid-update, or a non-finite argmax input).
+    /// Every call answers `SessionPoisoned` until [`PsmSession::reset`].
+    poisoned: Option<String>,
 }
 
 impl PsmSession {
@@ -138,7 +281,22 @@ impl PsmSession {
             d,
             vocab,
             metrics: SessionMetrics::default(),
+            retry: RetryPolicy::from_env(),
+            rng: Rng::new(BACKOFF_SEED),
+            poisoned: None,
         })
+    }
+
+    /// Override the retry policy (tests, or a caller that wants
+    /// fail-fast semantics: `max_attempts: 1`).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
+    }
+
+    /// Whether the session has been poisoned (state integrity lost);
+    /// the detail string explains why. Cleared by [`PsmSession::reset`].
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.is_some()
     }
 
     /// Encode the current (padded) partial chunk, restaging the token
@@ -149,7 +307,13 @@ impl PsmSession {
         let len = self.buf.len().min(slot.len());
         slot[..len].copy_from_slice(&self.buf[..len]);
         slot[len..].fill(0);
-        let mut out = self.enc.run(&self.enc_inputs)?;
+        let mut out = run_with_retry(
+            &self.enc,
+            &self.enc_inputs,
+            &self.retry,
+            &mut self.rng,
+            &mut self.metrics.retries,
+        )?;
         self.metrics.enc_calls += 1;
         self.metrics.enc_s += t0.elapsed().as_secs_f64();
         Ok(out.remove(0))
@@ -163,7 +327,13 @@ impl PsmSession {
         let np = self.n_params;
         self.agg_inputs[np] = left;
         self.agg_inputs[np + 1] = right;
-        let mut out = self.agg.run(&self.agg_inputs)?;
+        let mut out = run_with_retry(
+            &self.agg,
+            &self.agg_inputs,
+            &self.retry,
+            &mut self.rng,
+            &mut self.metrics.retries,
+        )?;
         self.metrics.agg_calls += 1;
         self.metrics.agg_s += t0.elapsed().as_secs_f64();
         Ok(out.remove(0))
@@ -219,7 +389,32 @@ impl PsmSession {
 
     /// Feed one token; returns the next-token logits (host, length
     /// `vocab`) predicted *after* this token.
+    ///
+    /// Failure semantics: retryable backend faults are replayed
+    /// transparently (see the module docs). An error that escapes the
+    /// retry budget **poisons** the session — the counter roots or
+    /// cached prefix may be mid-update — and this method answers
+    /// [`PsmError::SessionPoisoned`] from then on, until
+    /// [`PsmSession::reset`].
     pub fn push_token(&mut self, token: i32) -> Result<Vec<f32>> {
+        if let Some(why) = &self.poisoned {
+            return Err(anyhow::Error::new(PsmError::SessionPoisoned(
+                why.clone(),
+            )));
+        }
+        match self.push_token_inner(token) {
+            Ok(logits) => Ok(logits),
+            Err(e) => {
+                self.poisoned = Some(format!(
+                    "push_token failed at token {}: {e:#}",
+                    self.metrics.tokens
+                ));
+                Err(e)
+            }
+        }
+    }
+
+    fn push_token_inner(&mut self, token: i32) -> Result<Vec<f32>> {
         self.buf.push(token);
         self.metrics.tokens += 1;
 
@@ -232,7 +427,13 @@ impl PsmSession {
         let np = self.n_params;
         let t0 = std::time::Instant::now();
         self.inf_inputs[np + 1] = xe;
-        let out = self.inf.run(&self.inf_inputs)?;
+        let out = run_with_retry(
+            &self.inf,
+            &self.inf_inputs,
+            &self.retry,
+            &mut self.rng,
+            &mut self.metrics.retries,
+        )?;
         self.metrics.inf_calls += 1;
         self.metrics.inf_s += t0.elapsed().as_secs_f64();
 
@@ -265,18 +466,51 @@ impl PsmSession {
 
     /// Greedy-decode `n` tokens starting from `prompt`.
     pub fn generate(&mut self, prompt: &[i32], n: usize) -> Result<Vec<i32>> {
+        self.generate_deadline(prompt, n, None)
+    }
+
+    /// Greedy-decode with an optional wall-clock deadline, checked
+    /// before each token. Blowing the deadline returns a typed
+    /// [`PsmError::Overloaded`] but does **not** poison the session:
+    /// per-token state updates are atomic (a token either fully entered
+    /// the counter or was never pushed), so the stream remains valid
+    /// and the caller may continue or reset.
+    pub fn generate_deadline(
+        &mut self,
+        prompt: &[i32],
+        n: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<i32>> {
         let mut last = 0i32;
         for &t in prompt {
+            check_deadline(deadline, "prompt ingestion")?;
             let logits = self.push_token(t)?;
-            last = argmax(&logits) as i32;
+            last = self.argmax_checked(&logits)? as i32;
         }
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
+            check_deadline(deadline, "decode")?;
             out.push(last);
             let logits = self.push_token(last)?;
-            last = argmax(&logits) as i32;
+            last = self.argmax_checked(&logits)? as i32;
         }
         Ok(out)
+    }
+
+    /// Greedy argmax over logits; a non-finite winner means the state
+    /// that produced these logits is already contaminated (validation
+    /// was off or disabled), so the session is poisoned.
+    fn argmax_checked(&mut self, logits: &[f32]) -> Result<usize> {
+        match argmax(logits) {
+            Ok(i) => Ok(i),
+            Err(e) => {
+                self.poisoned = Some(format!(
+                    "non-finite logits at token {}: {e:#}",
+                    self.metrics.tokens
+                ));
+                Err(e)
+            }
+        }
     }
 
     /// Occupied counter roots (state footprint in chunks) — must
@@ -298,14 +532,101 @@ impl PsmSession {
         self.buf.clear();
         self.inf_inputs[self.n_params] = self.identity.clone();
         self.metrics = SessionMetrics::default();
+        self.poisoned = None;
         Ok(())
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
+/// Deadline pre-check: typed `Overloaded` (shed, not poison) when the
+/// budget is gone before the next unit of work starts.
+fn check_deadline(deadline: Option<Instant>, what: &str) -> Result<()> {
+    if let Some(d) = deadline {
+        if Instant::now() >= d {
+            return Err(anyhow::Error::new(PsmError::Overloaded(format!(
+                "deadline exceeded during {what}"
+            ))));
+        }
+    }
+    Ok(())
+}
+
+/// Greedy argmax with total ordering (`f32::total_cmp`), so a NaN in
+/// the logits cannot panic the executor thread. If the *winning* value
+/// is non-finite the logits carry no usable ranking and a typed
+/// [`PsmError::NonFinite`] is returned instead of an arbitrary token.
+/// (Under `total_cmp`, NaN with the sign bit clear orders above +Inf,
+/// so a NaN anywhere surfaces as the winner rather than being masked.)
+fn argmax(xs: &[f32]) -> Result<usize> {
+    let (i, &x) = xs
+        .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .ok_or_else(|| {
+            anyhow::Error::new(PsmError::InvalidInput(
+                "argmax over empty logits".into(),
+            ))
+        })?;
+    if !x.is_finite() {
+        return Err(anyhow::Error::new(PsmError::NonFinite(format!(
+            "argmax winner is {x} at index {i}"
+        ))));
+    }
+    Ok(i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_is_total_and_typed() {
+        assert_eq!(argmax(&[0.5, 2.0, -1.0]).unwrap(), 1);
+        // NaN anywhere must not panic; it wins under total_cmp and
+        // surfaces as a typed NonFinite error.
+        let e = argmax(&[0.5, f32::NAN, 3.0]).unwrap_err();
+        assert_eq!(PsmError::code_of(&e), "non_finite");
+        let e = argmax(&[f32::INFINITY, 1.0]).unwrap_err();
+        assert_eq!(PsmError::code_of(&e), "non_finite");
+        let e = argmax(&[]).unwrap_err();
+        assert_eq!(PsmError::code_of(&e), "invalid_input");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let p = RetryPolicy::default();
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for attempt in 0..6 {
+            let ms = p.backoff_ms(attempt, &mut a);
+            assert_eq!(ms, p.backoff_ms(attempt, &mut b));
+            let cap = (p.base_backoff_ms << attempt.min(20))
+                .min(p.max_backoff_ms);
+            assert!(ms >= cap / 2 && ms <= cap, "ms={ms} cap={cap}");
+        }
+    }
+
+    #[test]
+    fn retry_classification() {
+        let p = RetryPolicy::default();
+        let t = anyhow::Error::new(PsmError::Transient("x".into()));
+        let n = anyhow::Error::new(PsmError::NonFinite("x".into()));
+        let f = anyhow::Error::new(PsmError::Fatal("x".into()));
+        let untyped = anyhow::Error::msg("plain");
+        assert!(p.qualifies(&t));
+        assert!(p.qualifies(&n));
+        assert!(!p.qualifies(&f));
+        assert!(!p.qualifies(&untyped));
+        let strict = RetryPolicy { retry_non_finite: false, ..p };
+        assert!(!strict.qualifies(&n));
+    }
+
+    #[test]
+    fn deadline_check_sheds_with_typed_overloaded() {
+        assert!(check_deadline(None, "x").is_ok());
+        let future = Instant::now() + Duration::from_secs(60);
+        assert!(check_deadline(Some(future), "x").is_ok());
+        let past = Instant::now() - Duration::from_millis(1);
+        let e = check_deadline(Some(past), "decode").unwrap_err();
+        assert_eq!(PsmError::code_of(&e), "overloaded");
+    }
 }

@@ -20,6 +20,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::error::PsmError;
+use super::fault::{FaultBackend, FaultConfig};
 use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
 use super::value::HostValue;
 use crate::log_info;
@@ -58,14 +60,39 @@ pub trait Backend {
 pub struct Module {
     pub spec: ArtifactSpec,
     exec: Box<dyn Executable>,
+    /// Opt-in non-finite output validation (see [`Module::run`]).
+    /// Defaults from `PSM_VALIDATE=1` at load time.
+    validate_output: bool,
 }
 
 impl Module {
     pub fn from_exec(exec: Box<dyn Executable>) -> Module {
-        Module { spec: exec.spec().clone(), exec }
+        let validate_output = std::env::var("PSM_VALIDATE")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        Module { spec: exec.spec().clone(), exec, validate_output }
+    }
+
+    /// Toggle non-finite output validation for this module (overrides
+    /// the `PSM_VALIDATE` load-time default).
+    pub fn set_validate_output(&mut self, on: bool) {
+        self.validate_output = on;
+    }
+
+    /// Whether [`Module::run`] scans outputs for NaN/Inf.
+    pub fn validates_output(&self) -> bool {
+        self.validate_output
     }
 
     /// Execute with host values, validating the IO contract first.
+    ///
+    /// With output validation on (`PSM_VALIDATE=1` or
+    /// [`Module::set_validate_output`]), any NaN/Inf in an f32 output
+    /// is surfaced as a typed [`PsmError::NonFinite`] instead of
+    /// flowing downstream — the hot-path guard against corrupted
+    /// kernels (and the chaos harness's NaN injection). The scan is a
+    /// read-only pass over outputs the caller already owns, so it
+    /// allocates nothing and cannot perturb values.
     pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
@@ -79,7 +106,21 @@ impl Module {
             v.check_spec(s)
                 .with_context(|| format!("artifact {}", self.spec.file))?;
         }
-        self.exec.execute(inputs)
+        let outputs = self.exec.execute(inputs)?;
+        if self.validate_output {
+            for (i, out) in outputs.iter().enumerate() {
+                if let Some((at, x)) = out.first_non_finite() {
+                    return Err(anyhow::Error::new(PsmError::NonFinite(
+                        format!(
+                            "{}: output {i} has non-finite value {x} at \
+                             flat index {at}",
+                            self.spec.file
+                        ),
+                    )));
+                }
+            }
+        }
+        Ok(outputs)
     }
 }
 
@@ -112,8 +153,27 @@ impl Runtime {
 
     /// Auto-select a backend: honours `PSM_BACKEND`, else picks PJRT
     /// when it is compiled in *and* `artifacts_dir` holds a manifest,
-    /// else the reference backend.
+    /// else the reference backend. When `PSM_FAULTS` is set, the chosen
+    /// backend is wrapped in the chaos-injection [`FaultBackend`]
+    /// decorator (see [`super::fault`]).
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let rt = Runtime::select(artifacts_dir)?;
+        match FaultConfig::from_env()? {
+            Some(cfg) => Ok(rt.with_faults(cfg)),
+            None => Ok(rt),
+        }
+    }
+
+    /// Wrap this runtime's backend in the chaos-injection decorator.
+    pub fn with_faults(self, cfg: FaultConfig) -> Runtime {
+        crate::log_warn!(
+            "fault injection ACTIVE on the {} backend: {cfg:?}",
+            self.backend.name()
+        );
+        Runtime::from_backend(Box::new(FaultBackend::wrap(self.backend, cfg)))
+    }
+
+    fn select(artifacts_dir: &Path) -> Result<Runtime> {
         let choice = std::env::var("PSM_BACKEND").unwrap_or_default();
         match choice.as_str() {
             "reference" | "ref" => Ok(Runtime::reference()),
@@ -179,6 +239,13 @@ impl Runtime {
     /// for the bridge test).
     #[cfg(feature = "pjrt")]
     pub fn pjrt_runtime(&self) -> Option<&super::client::PjrtRuntime> {
+        self.backend.as_any().downcast_ref()
+    }
+
+    /// Downcast access to the chaos-injection decorator, when this
+    /// runtime was built with faults (injection counters for the chaos
+    /// bench and soak test).
+    pub fn fault_backend(&self) -> Option<&FaultBackend> {
         self.backend.as_any().downcast_ref()
     }
 }

@@ -1,0 +1,176 @@
+//! The typed error taxonomy for the serving stack.
+//!
+//! Every layer between the backend and the TCP front end distinguishes
+//! *retryable* failures (a transient backend hiccup, a possibly-cosmic
+//! non-finite output) from *fatal* ones (bad request, poisoned session
+//! state, genuine bugs). The taxonomy is deliberately small:
+//!
+//! | variant            | meaning                                | retry? |
+//! |--------------------|----------------------------------------|--------|
+//! | [`PsmError::Transient`]       | backend hiccup; replaying the call may succeed | yes |
+//! | [`PsmError::NonFinite`]       | a kernel produced NaN/Inf outputs      | policy |
+//! | [`PsmError::InvalidInput`]    | the request itself is malformed        | no  |
+//! | [`PsmError::SessionPoisoned`] | session state is unrecoverable; quarantine | no |
+//! | [`PsmError::Overloaded`]      | shed by admission control / deadline   | no (client may) |
+//! | [`PsmError::Fatal`]           | everything else                        | no  |
+//!
+//! `NonFinite` retryability is policy-owned (see
+//! [`crate::coordinator::stream::RetryPolicy`]): under fault injection
+//! or flaky hardware a NaN is transient, while a deterministic NaN will
+//! simply exhaust the retry budget and poison the session — the
+//! prefix-scan replay makes the retry itself side-effect-free either
+//! way (the binary-counter state is only advanced *after* a call
+//! succeeds, so re-running a failed `enc`/`agg`/`inf` from its staged
+//! inputs is bit-exact).
+//!
+//! ## `anyhow` interop
+//!
+//! `PsmError` implements `std::error::Error`, so `?` converts it into
+//! an [`anyhow::Error`] whose typed payload survives `.context(..)`
+//! wraps; [`PsmError::of`] recovers it at any layer. Errors that did
+//! not originate as a `PsmError` (I/O, spec mismatches, ...) classify
+//! as `Fatal` — unknown failures are never retried.
+
+use std::fmt;
+
+/// Typed failure classes for the runtime + coordinator. See the module
+/// docs for semantics. The payload string is a human-readable detail.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PsmError {
+    /// A transient backend failure: replaying the same call may succeed.
+    Transient(String),
+    /// The request itself is malformed (bad tokens, bad shapes, bad n).
+    InvalidInput(String),
+    /// A kernel produced NaN/Inf outputs.
+    NonFinite(String),
+    /// Session state is unrecoverable; the session must be quarantined.
+    SessionPoisoned(String),
+    /// Shed by admission control (full queue) or a missed deadline.
+    Overloaded(String),
+    /// Unclassified / unrecoverable failure.
+    Fatal(String),
+}
+
+impl PsmError {
+    /// Stable machine-readable class code (used in protocol `ERR`
+    /// replies, stats counters and bench artifacts).
+    pub fn code(&self) -> &'static str {
+        match self {
+            PsmError::Transient(_) => "transient",
+            PsmError::InvalidInput(_) => "invalid_input",
+            PsmError::NonFinite(_) => "non_finite",
+            PsmError::SessionPoisoned(_) => "session_poisoned",
+            PsmError::Overloaded(_) => "overloaded",
+            PsmError::Fatal(_) => "fatal",
+        }
+    }
+
+    /// The human-readable detail.
+    pub fn detail(&self) -> &str {
+        match self {
+            PsmError::Transient(m)
+            | PsmError::InvalidInput(m)
+            | PsmError::NonFinite(m)
+            | PsmError::SessionPoisoned(m)
+            | PsmError::Overloaded(m)
+            | PsmError::Fatal(m) => m,
+        }
+    }
+
+    /// Whether a bounded retry is ever worthwhile. `NonFinite` is
+    /// reported `false` here; the session's `RetryPolicy` may opt in.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, PsmError::Transient(_))
+    }
+
+    /// Recover the typed class from an `anyhow::Error`, if it carries
+    /// one (survives `.context(..)` wrapping).
+    pub fn of(err: &anyhow::Error) -> Option<&PsmError> {
+        err.downcast_ref::<PsmError>()
+    }
+
+    /// Class code of an arbitrary `anyhow::Error`; untyped errors are
+    /// conservatively `"fatal"`.
+    pub fn code_of(err: &anyhow::Error) -> &'static str {
+        PsmError::of(err).map_or("fatal", PsmError::code)
+    }
+}
+
+impl fmt::Display for PsmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code(), self.detail())
+    }
+}
+
+impl std::error::Error for PsmError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    fn as_anyhow(e: PsmError) -> anyhow::Error {
+        anyhow::Error::from(e)
+    }
+
+    #[test]
+    fn codes_are_stable() {
+        let cases = [
+            (PsmError::Transient("x".into()), "transient"),
+            (PsmError::InvalidInput("x".into()), "invalid_input"),
+            (PsmError::NonFinite("x".into()), "non_finite"),
+            (PsmError::SessionPoisoned("x".into()), "session_poisoned"),
+            (PsmError::Overloaded("x".into()), "overloaded"),
+            (PsmError::Fatal("x".into()), "fatal"),
+        ];
+        for (e, code) in cases {
+            assert_eq!(e.code(), code);
+            assert_eq!(format!("{e}"), format!("{code}: x"));
+        }
+    }
+
+    #[test]
+    fn only_transient_is_retryable_by_default() {
+        assert!(PsmError::Transient("t".into()).is_retryable());
+        for e in [
+            PsmError::InvalidInput("x".into()),
+            PsmError::NonFinite("x".into()),
+            PsmError::SessionPoisoned("x".into()),
+            PsmError::Overloaded("x".into()),
+            PsmError::Fatal("x".into()),
+        ] {
+            assert!(!e.is_retryable(), "{e}");
+        }
+    }
+
+    #[test]
+    fn survives_anyhow_conversion_and_context() {
+        let e = as_anyhow(PsmError::Transient("injected".into()))
+            .context("running agg")
+            .context("push_token");
+        let back = PsmError::of(&e).expect("typed payload preserved");
+        assert_eq!(back, &PsmError::Transient("injected".into()));
+        assert_eq!(PsmError::code_of(&e), "transient");
+        // Display of the anyhow wrapper leads with the outer context,
+        // the full chain still names the class.
+        assert_eq!(format!("{e}"), "push_token");
+        assert!(format!("{e:#}").contains("transient: injected"));
+    }
+
+    #[test]
+    fn question_mark_preserves_class() {
+        fn inner() -> anyhow::Result<()> {
+            Err(PsmError::Overloaded("queue full".into()))?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(PsmError::code_of(&e), "overloaded");
+    }
+
+    #[test]
+    fn untyped_errors_classify_fatal() {
+        let e = anyhow::anyhow!("some io mess");
+        assert!(PsmError::of(&e).is_none());
+        assert_eq!(PsmError::code_of(&e), "fatal");
+    }
+}

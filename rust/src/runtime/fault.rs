@@ -1,0 +1,405 @@
+//! Chaos-injection decorator over any [`Backend`] — the fault harness
+//! the rest of the serving stack is hardened against.
+//!
+//! [`FaultBackend::wrap`] wraps an inner backend; every [`Module`] it
+//! loads draws from a **seeded, deterministic** SplitMix64 schedule
+//! ([`crate::util::prng::Rng`]) and injects, per `execute` call:
+//!
+//! * **transient errors** (`transient_p`) — a typed
+//!   [`PsmError::Transient`] *instead of* running the inner kernel, the
+//!   shape of a flaky device/RPC;
+//! * **NaN corruption** (`nan_p`) — the inner kernel runs, then one f32
+//!   output element is overwritten with NaN at a schedule-chosen index,
+//!   the shape of silent numerical corruption (caught downstream by
+//!   [`Module::run`]'s opt-in validation or the decoder's argmax guard);
+//! * **latency spikes** (`delay_p`, `delay_ms`) — a sleep before the
+//!   call, the shape of device contention.
+//!
+//! Configuration comes from the `PSM_FAULTS` env knob, honoured by
+//! [`crate::runtime::Runtime::new`]:
+//!
+//! ```text
+//! PSM_FAULTS="seed:42,transient_p:0.05,nan_p:0.01,delay_p:0.05,delay_ms:2"
+//! ```
+//!
+//! ## Determinism
+//!
+//! Each loaded module owns its own generator, seeded from
+//! `(config seed, load index)`, and every call consumes a fixed number
+//! of draws whether or not a fault fires — so the fault schedule of a
+//! module is a pure function of the seed and that module's *own* call
+//! count, independent of thread interleaving and of what other modules
+//! do. Since the streaming coordinator only advances scan state after a
+//! call succeeds, a retried call replays bit-exactly, which is what
+//! lets the chaos soak test assert that every `OK` response under
+//! injection is bit-identical to a fault-free run.
+//!
+//! All injections are counted in [`FaultStats`] (shared across the
+//! modules of one wrap), which the chaos bench reads through
+//! [`crate::runtime::Runtime::fault_backend`] to report recovery rates.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{Backend, Executable, Module};
+use super::error::PsmError;
+use super::manifest::{ArtifactSpec, Manifest};
+use super::value::HostValue;
+use crate::util::prng::Rng;
+
+/// Fault-injection knobs. Probabilities are per `execute` call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the injection schedule.
+    pub seed: u64,
+    /// Probability of replacing a call with a `Transient` error.
+    pub transient_p: f64,
+    /// Probability of overwriting one f32 output element with NaN.
+    pub nan_p: f64,
+    /// Probability of sleeping `delay_ms` before the call.
+    pub delay_p: f64,
+    /// Injected latency spike size.
+    pub delay_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            transient_p: 0.0,
+            nan_p: 0.0,
+            delay_p: 0.0,
+            delay_ms: 2,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse the `PSM_FAULTS` comma-separated `key:value` spec. Unknown
+    /// keys and out-of-range probabilities are hard errors (a typo in a
+    /// chaos knob silently disabling injection would be its own bug).
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let mut cfg = FaultConfig::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part.split_once(':').with_context(|| {
+                format!("PSM_FAULTS entry {part:?}: expected key:value")
+            })?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "seed" => {
+                    cfg.seed = val
+                        .parse()
+                        .with_context(|| format!("PSM_FAULTS seed {val:?}"))?
+                }
+                "transient_p" => cfg.transient_p = parse_p(key, val)?,
+                "nan_p" => cfg.nan_p = parse_p(key, val)?,
+                "delay_p" => cfg.delay_p = parse_p(key, val)?,
+                "delay_ms" => {
+                    cfg.delay_ms = val.parse().with_context(|| {
+                        format!("PSM_FAULTS delay_ms {val:?}")
+                    })?
+                }
+                other => bail!(
+                    "PSM_FAULTS: unknown key {other:?} (expected seed, \
+                     transient_p, nan_p, delay_p, delay_ms)"
+                ),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The `PSM_FAULTS` env knob: `Ok(None)` when unset/empty, an error
+    /// when set but malformed.
+    pub fn from_env() -> Result<Option<FaultConfig>> {
+        match std::env::var("PSM_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultConfig::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Whether any injection can ever fire under this config.
+    pub fn any_faults(&self) -> bool {
+        self.transient_p > 0.0 || self.nan_p > 0.0 || self.delay_p > 0.0
+    }
+}
+
+fn parse_p(key: &str, val: &str) -> Result<f64> {
+    let p: f64 = val
+        .parse()
+        .with_context(|| format!("PSM_FAULTS {key} {val:?}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("PSM_FAULTS {key} = {p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+/// Injection counters, shared by every module loaded from one
+/// [`FaultBackend`]. Read with [`FaultStats::counts`].
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    calls: AtomicU64,
+    transient: AtomicU64,
+    nan: AtomicU64,
+    delay: AtomicU64,
+}
+
+/// A point-in-time snapshot of [`FaultStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub calls: u64,
+    pub transient: u64,
+    pub nan: u64,
+    pub delay: u64,
+}
+
+impl FaultStats {
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            calls: self.calls.load(Ordering::Relaxed),
+            transient: self.transient.load(Ordering::Relaxed),
+            nan: self.nan.load(Ordering::Relaxed),
+            delay: self.delay.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The chaos-injection [`Backend`] decorator. See the module docs.
+pub struct FaultBackend {
+    inner: Box<dyn Backend>,
+    cfg: FaultConfig,
+    stats: Arc<FaultStats>,
+    loads: AtomicU64,
+}
+
+impl FaultBackend {
+    pub fn wrap(inner: Box<dyn Backend>, cfg: FaultConfig) -> FaultBackend {
+        FaultBackend {
+            inner,
+            cfg,
+            stats: Arc::new(FaultStats::default()),
+            loads: AtomicU64::new(0),
+        }
+    }
+
+    /// Shared injection counters (clone survives the backend).
+    pub fn stats(&self) -> Arc<FaultStats> {
+        self.stats.clone()
+    }
+
+    /// Snapshot of the injection counters.
+    pub fn counts(&self) -> FaultCounts {
+        self.stats.counts()
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+}
+
+impl Backend for FaultBackend {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn load(&self, model: &str, entry: &str) -> Result<Module> {
+        let inner = self.inner.load(model, entry)?;
+        // Per-module schedule seed: a pure function of (config seed,
+        // load index), so the Nth module loaded sees the same fault
+        // sequence on every run regardless of interleaving elsewhere.
+        let idx = self.loads.fetch_add(1, Ordering::Relaxed);
+        let seed =
+            self.cfg.seed ^ (idx + 1).wrapping_mul(0xA076_1D64_78BD_642F);
+        let spec = inner.spec.clone();
+        Ok(Module::from_exec(Box::new(FaultExec {
+            inner,
+            spec,
+            cfg: self.cfg,
+            stats: self.stats.clone(),
+            rng: Mutex::new(Rng::new(seed)),
+        })))
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+struct FaultExec {
+    inner: Module,
+    spec: ArtifactSpec,
+    cfg: FaultConfig,
+    stats: Arc<FaultStats>,
+    rng: Mutex<Rng>,
+}
+
+impl Executable for FaultExec {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        // Draw the whole decision vector up front under one short lock.
+        // Every call consumes exactly four draws, fault or not, so the
+        // schedule stays aligned to the call index.
+        let (delay, transient, nan_at) = {
+            let mut rng = self.rng.lock().unwrap();
+            let delay = rng.bernoulli(self.cfg.delay_p);
+            let transient = rng.bernoulli(self.cfg.transient_p);
+            let nan = rng.bernoulli(self.cfg.nan_p);
+            let nan_pos = rng.next_u64();
+            (delay, transient, if nan { Some(nan_pos) } else { None })
+        };
+        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        if delay {
+            self.stats.delay.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(self.cfg.delay_ms));
+        }
+        if transient {
+            self.stats.transient.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(PsmError::Transient(format!(
+                "injected transient fault in {}",
+                self.spec.file
+            ))));
+        }
+        let mut outs = self.inner.run(inputs)?;
+        if let Some(pos) = nan_at {
+            if let Some(out) = outs
+                .iter_mut()
+                .find(|o| matches!(o, HostValue::F32 { .. }))
+            {
+                let data = out.as_f32_mut().expect("matched f32 variant");
+                if !data.is_empty() {
+                    let i = (pos % data.len() as u64) as usize;
+                    data[i] = f32::NAN;
+                    self.stats.nan.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::RefBackend;
+
+    fn enc_with_inputs(
+        cfg: FaultConfig,
+    ) -> (FaultBackend, Module, Vec<HostValue>) {
+        // Params come from a clean backend so the helper works even at
+        // transient_p = 1.0; `enc` is always the fault backend's first
+        // load (schedule index 0).
+        let clean = RefBackend::new();
+        let init = clean.load("psm_s5", "init").unwrap();
+        let mut inputs = init.run(&[HostValue::scalar_s32(1)]).unwrap();
+        inputs.push(HostValue::s32(&[1, 1], vec![3])); // chunk = 1
+        let be = FaultBackend::wrap(Box::new(RefBackend::new()), cfg);
+        let enc = be.load("psm_s5", "enc").unwrap();
+        (be, enc, inputs)
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let cfg = FaultConfig::parse(
+            "seed:42, transient_p:0.05, nan_p:0.01, delay_p:0.5, delay_ms:3",
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert!((cfg.transient_p - 0.05).abs() < 1e-12);
+        assert!((cfg.nan_p - 0.01).abs() < 1e-12);
+        assert!((cfg.delay_p - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.delay_ms, 3);
+        assert!(cfg.any_faults());
+        assert!(!FaultConfig::default().any_faults());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultConfig::parse("transient_p:1.5").is_err());
+        assert!(FaultConfig::parse("bogus_key:1").is_err());
+        assert!(FaultConfig::parse("seed:notanumber").is_err());
+        assert!(FaultConfig::parse("seed=42").is_err());
+    }
+
+    #[test]
+    fn transient_injection_is_typed_and_counted() {
+        let cfg = FaultConfig { transient_p: 1.0, ..Default::default() };
+        let (be, enc, inputs) = enc_with_inputs(cfg);
+        let err = enc.run(&inputs).unwrap_err();
+        assert_eq!(PsmError::code_of(&err), "transient");
+        assert!(err.to_string().contains("injected"));
+        assert_eq!(be.counts().transient, 1);
+        assert_eq!(be.counts().calls, 1);
+    }
+
+    #[test]
+    fn nan_injection_corrupts_one_output_element() {
+        let cfg = FaultConfig { nan_p: 1.0, ..Default::default() };
+        let (be, enc, inputs) = enc_with_inputs(cfg);
+        let outs = enc.run(&inputs).unwrap();
+        assert!(outs[0].first_non_finite().is_some());
+        assert!(be.counts().nan >= 1);
+    }
+
+    #[test]
+    fn schedule_is_seed_deterministic() {
+        let cfg = FaultConfig {
+            seed: 7,
+            transient_p: 0.3,
+            nan_p: 0.2,
+            ..Default::default()
+        };
+        let pattern = |cfg: FaultConfig| -> Vec<(bool, bool)> {
+            let (_be, enc, inputs) = enc_with_inputs(cfg);
+            (0..64)
+                .map(|_| match enc.run(&inputs) {
+                    Ok(outs) => (false, outs[0].first_non_finite().is_some()),
+                    Err(e) => {
+                        assert_eq!(PsmError::code_of(&e), "transient");
+                        (true, false)
+                    }
+                })
+                .collect()
+        };
+        let a = pattern(cfg);
+        let b = pattern(cfg);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&(t, _)| t), "transients fired");
+        assert!(a.iter().any(|&(_, n)| n), "nans fired");
+        assert!(a.iter().any(|&(t, n)| !t && !n), "clean calls exist");
+        // A different seed produces a different schedule.
+        let c = pattern(FaultConfig { seed: 8, ..cfg });
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn no_faults_passes_through_bit_exact() {
+        let (_be, enc, inputs) =
+            enc_with_inputs(FaultConfig { seed: 1, ..Default::default() });
+        let clean_be = RefBackend::new();
+        let clean_enc = clean_be.load("psm_s5", "enc").unwrap();
+        let a = enc.run(&inputs).unwrap();
+        let b = clean_enc.run(&inputs).unwrap();
+        assert_eq!(a[0], b[0]);
+    }
+
+    #[test]
+    fn parse_empty_spec_is_default() {
+        // (PSM_FAULTS itself is process-global env — not touched in
+        // unit tests; the chaos soak test covers the env path.)
+        assert_eq!(FaultConfig::parse("").unwrap(), FaultConfig::default());
+    }
+}

@@ -12,16 +12,27 @@
 //!
 //! Selection: `PSM_BACKEND=reference|pjrt|auto` (auto prefers PJRT when
 //! compiled in and `artifacts/manifest.json` exists).
+//!
+//! Robustness: [`error::PsmError`] is the typed failure taxonomy every
+//! layer classifies against, and [`fault`] is the chaos-injection
+//! decorator (`PSM_FAULTS=seed:...,transient_p:...`) that
+//! [`backend::Runtime::new`] wraps around whichever backend was
+//! selected — the harness the retry/quarantine/shedding machinery in
+//! [`crate::coordinator`] is tested under.
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod client;
+pub mod error;
+pub mod fault;
 pub mod manifest;
 pub mod params;
 pub mod reference;
 pub mod value;
 
 pub use backend::{Backend, Executable, Module, Runtime};
+pub use error::PsmError;
+pub use fault::{FaultBackend, FaultConfig, FaultCounts, FaultStats};
 pub use manifest::{ArtifactSpec, DType, Manifest, ModelSpec, TensorSpec};
 pub use params::ParamStore;
 pub use reference::RefBackend;

@@ -85,6 +85,21 @@ impl HostValue {
         }
     }
 
+    /// Index and value of the first non-finite (NaN/Inf) element, if
+    /// any. `S32` values are always finite. Used by the opt-in output
+    /// validation in [`crate::runtime::Module::run`] and by the chaos
+    /// harness to confirm an injected corruption.
+    pub fn first_non_finite(&self) -> Option<(usize, f32)> {
+        match self {
+            HostValue::F32 { data, .. } => data
+                .iter()
+                .enumerate()
+                .find(|(_, x)| !x.is_finite())
+                .map(|(i, &x)| (i, x)),
+            HostValue::S32 { .. } => None,
+        }
+    }
+
     /// Validate against an artifact IO spec.
     pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
         if self.dtype() != spec.dtype || self.shape() != &spec.shape[..] {
@@ -180,6 +195,18 @@ mod tests {
         };
         let back = HostValue::from_literal(&lit, &spec).unwrap();
         assert_eq!(back.as_s32().unwrap(), &[42]);
+    }
+
+    #[test]
+    fn first_non_finite_finds_nan_and_inf() {
+        let clean = HostValue::f32(&[2, 2], vec![0.0, -1.5, 2.0, 3.0]);
+        assert_eq!(clean.first_non_finite(), None);
+        let nan = HostValue::f32(&[3], vec![1.0, f32::NAN, 2.0]);
+        assert_eq!(nan.first_non_finite().map(|(i, _)| i), Some(1));
+        let inf = HostValue::f32(&[2], vec![f32::INFINITY, 0.0]);
+        assert_eq!(inf.first_non_finite().map(|(i, _)| i), Some(0));
+        let ints = HostValue::s32(&[2], vec![1, 2]);
+        assert_eq!(ints.first_non_finite(), None);
     }
 
     #[test]

@@ -1,0 +1,491 @@
+//! Chaos soak: the serving stack under deterministic fault injection —
+//! runs in tier-1 CI on a clean machine (reference backend only).
+//!
+//! * retry transparency: a session driven through the [`FaultBackend`]
+//!   (transient errors; NaN corruption with validation on) produces
+//!   **bit-identical** logits to a fault-free run — the observable form
+//!   of the sequential-parallel duality's side-effect-free replay,
+//! * hardening: `Module::run` rejects injected NaNs with a typed
+//!   `non_finite` error,
+//! * isolation: a panicking / poisoned session is quarantined by the
+//!   executor while sibling sessions keep producing bit-exact output
+//!   and the executor thread survives,
+//! * TCP soak: concurrent clients against `serve()` under moderate
+//!   injection — every `OK` reply matches the fault-free expectation
+//!   exactly, error replies are bounded, STATS still answers,
+//! * degradation: idle-session GC, zero-deadline shedding and malformed
+//!   request rejection.
+//!
+//! harness = false; exits non-zero when any check fails. Checks that
+//! set env knobs (`PSM_VALIDATE`, `PSM_RETRY_*`, ...) do so only while
+//! no other thread is live, and clean up after themselves.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::Result;
+use psm::coordinator::server::{self, executor_loop, Request};
+use psm::coordinator::{PsmSession, RetryPolicy};
+use psm::runtime::{
+    ArtifactSpec, Backend, Executable, FaultConfig, HostValue, Manifest,
+    Module, ParamStore, PsmError, RefBackend, Runtime,
+};
+
+fn main() {
+    let mut failed = 0;
+    let mut run = |name: &str, f: &dyn Fn()| {
+        let t0 = std::time::Instant::now();
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+            .is_ok();
+        println!(
+            "test chaos_soak::{name} ... {} ({:.1}s)",
+            if ok { "ok" } else { "FAILED" },
+            t0.elapsed().as_secs_f64()
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("transient_retry_is_bit_exact", &transient_retry_is_bit_exact);
+    run("nan_retry_with_validation_is_bit_exact", &|| {
+        nan_retry_with_validation_is_bit_exact()
+    });
+    run("module_run_rejects_injected_nan", &module_run_rejects_injected_nan);
+    run("executor_quarantines_panicking_session", &|| {
+        executor_quarantines_panicking_session()
+    });
+    run("idle_sessions_are_garbage_collected", &|| {
+        idle_sessions_are_garbage_collected()
+    });
+    run("tcp_chaos_soak", &tcp_chaos_soak);
+    run("tcp_rejects_malformed_and_sheds_deadline", &|| {
+        tcp_rejects_malformed_and_sheds_deadline()
+    });
+
+    if failed > 0 {
+        eprintln!("{failed} chaos_soak tests failed");
+        std::process::exit(1);
+    }
+}
+
+/// Fail-fast-free policy for the deterministic checks: generous budget,
+/// zero backoff so the soak stays fast.
+fn patient_policy() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 8,
+        base_backoff_ms: 0,
+        max_backoff_ms: 0,
+        retry_non_finite: true,
+    }
+}
+
+/// Fault-free per-token logits for `tokens` — the ground truth every
+/// injected run must reproduce bit for bit.
+fn clean_logits(
+    params: &ParamStore,
+    model: &str,
+    tokens: &[i32],
+) -> Vec<Vec<f32>> {
+    let rt = Runtime::reference();
+    let mut sess = PsmSession::new(&rt, model, params).unwrap();
+    sess.logits_stream(tokens).unwrap()
+}
+
+/// Transient injection at 20%: every call replays from its staged slots
+/// until it lands, so the stream equals the fault-free one exactly.
+fn transient_retry_is_bit_exact() {
+    let model = "psm_s5";
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 11).unwrap();
+    let tokens: Vec<i32> = (0..40).map(|t| (t % 100) as i32).collect();
+    let expect = clean_logits(&params, model, &tokens);
+
+    let cfg = FaultConfig {
+        seed: 21,
+        transient_p: 0.2,
+        ..Default::default()
+    };
+    let frt = Runtime::reference().with_faults(cfg);
+    let mut sess = PsmSession::new(&frt, model, &params).unwrap();
+    sess.set_retry_policy(patient_policy());
+    let got = sess.logits_stream(&tokens).unwrap();
+    assert_eq!(got, expect, "retried stream must be bit-identical");
+    assert!(sess.metrics.retries > 0, "schedule must actually fire");
+    assert!(!sess.is_poisoned());
+
+    let counts = frt.fault_backend().unwrap().counts();
+    assert!(counts.transient > 0);
+    assert_eq!(
+        counts.transient, sess.metrics.retries,
+        "every injected transient is recovered by exactly one replay"
+    );
+}
+
+/// NaN injection with output validation on: the corruption is caught by
+/// `Module::run` as a typed `non_finite` error, the retry replays the
+/// call, and the stream stays bit-exact.
+fn nan_retry_with_validation_is_bit_exact() {
+    let model = "psm_s5";
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 12).unwrap();
+    let tokens: Vec<i32> = (0..32).map(|t| (t % 90) as i32).collect();
+    let expect = clean_logits(&params, model, &tokens);
+
+    std::env::set_var("PSM_VALIDATE", "1");
+    let cfg = FaultConfig {
+        seed: 5,
+        transient_p: 0.1,
+        nan_p: 0.15,
+        ..Default::default()
+    };
+    let frt = Runtime::reference().with_faults(cfg);
+    let mut sess = PsmSession::new(&frt, model, &params).unwrap();
+    std::env::remove_var("PSM_VALIDATE");
+    sess.set_retry_policy(patient_policy());
+
+    let got = sess.logits_stream(&tokens).unwrap();
+    assert_eq!(got, expect, "NaN-retried stream must be bit-identical");
+    let counts = frt.fault_backend().unwrap().counts();
+    assert!(counts.nan > 0, "nan schedule must actually fire");
+    assert!(sess.metrics.retries >= counts.nan);
+}
+
+/// The validation path itself: nan_p = 1 makes the very first validated
+/// call fail with the typed class (no session/retry involved).
+fn module_run_rejects_injected_nan() {
+    let clean = RefBackend::new();
+    let init = clean.load("psm_s5", "init").unwrap();
+    let mut inputs = init.run(&[HostValue::scalar_s32(2)]).unwrap();
+    inputs.push(HostValue::s32(&[1, 1], vec![3])); // chunk = 1
+
+    let cfg = FaultConfig { nan_p: 1.0, ..Default::default() };
+    let be =
+        psm::runtime::FaultBackend::wrap(Box::new(RefBackend::new()), cfg);
+    let mut enc = be.load("psm_s5", "enc").unwrap();
+    assert!(!enc.validates_output());
+    // Without validation the corruption flows through silently...
+    assert!(enc.run(&inputs).unwrap()[0].first_non_finite().is_some());
+    // ...with it, the call answers a typed non_finite error.
+    enc.set_validate_output(true);
+    let err = enc.run(&inputs).unwrap_err();
+    assert_eq!(PsmError::code_of(&err), "non_finite");
+}
+
+/// Test-local backend: passes through to the reference backend but the
+/// module at load index `panic_load` panics on its `panic_at`-th call.
+struct ScriptedBackend {
+    inner: RefBackend,
+    loads: AtomicU64,
+    panic_load: u64,
+    panic_at: u64,
+}
+
+struct PanicExec {
+    inner: Module,
+    spec: ArtifactSpec,
+    calls: AtomicU64,
+    panic_at: u64,
+}
+
+impl Executable for PanicExec {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if self.calls.fetch_add(1, Ordering::Relaxed) + 1 == self.panic_at {
+            panic!("scripted kernel panic in {}", self.spec.file);
+        }
+        self.inner.run(inputs)
+    }
+}
+
+impl Backend for ScriptedBackend {
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn load(&self, model: &str, entry: &str) -> Result<Module> {
+        let inner = self.inner.load(model, entry)?;
+        let idx = self.loads.fetch_add(1, Ordering::Relaxed);
+        if idx == self.panic_load {
+            let spec = inner.spec.clone();
+            return Ok(Module::from_exec(Box::new(PanicExec {
+                inner,
+                spec,
+                calls: AtomicU64::new(0),
+                panic_at: self.panic_at,
+            })));
+        }
+        Ok(inner)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// A panicking kernel must cost exactly one session: its request gets a
+/// typed `ERR`, the session is quarantined, the executor survives and a
+/// sibling session's output stays bit-exact.
+fn executor_quarantines_panicking_session() {
+    let model = "psm_s5";
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 13).unwrap();
+    let prompt = vec![1, 2, 3];
+    let n = 4;
+    let expect = {
+        let mut sess = PsmSession::new(&clean_rt, model, &params).unwrap();
+        sess.generate(&prompt, n).unwrap()
+    };
+
+    let (tx, rx) = mpsc::sync_channel::<Request>(16);
+    let exec_params = params;
+    let handle = std::thread::spawn(move || {
+        // Session A (created first) loads modules 0..3; index 2 is its
+        // `inf`, rigged to panic on the first call.
+        let rt = Runtime::from_backend(Box::new(ScriptedBackend {
+            inner: RefBackend::new(),
+            loads: AtomicU64::new(0),
+            panic_load: 2,
+            panic_at: 1,
+        }));
+        executor_loop(&rt, model, &exec_params, rx).unwrap();
+    });
+
+    let gen = |session: u64| -> Result<Vec<i32>> {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request::Generate {
+            session,
+            prompt: prompt.clone(),
+            n,
+            deadline: None,
+            reply: rtx,
+        })
+        .unwrap();
+        rrx.recv().unwrap()
+    };
+
+    let err = gen(0).unwrap_err();
+    assert_eq!(PsmError::code_of(&err), "fatal");
+    assert!(format!("{err:#}").contains("panic"), "got: {err:#}");
+
+    // The poisoned id is quarantined, not recreated.
+    let err = gen(0).unwrap_err();
+    assert_eq!(PsmError::code_of(&err), "session_poisoned");
+
+    // A sibling session on the same executor is unaffected — and exact.
+    let out = gen(1).unwrap();
+    assert_eq!(out, expect);
+
+    let (htx, hrx) = mpsc::channel();
+    tx.send(Request::Health { reply: htx }).unwrap();
+    let stats = hrx.recv().unwrap();
+    assert_eq!(stats.panics, 1);
+    assert_eq!(stats.quarantined, 1);
+    assert_eq!(stats.sessions, 1);
+    assert!(stats.errors >= 2);
+
+    tx.send(Request::Shutdown).unwrap();
+    handle.join().expect("executor thread must survive the panic");
+}
+
+/// Idle sessions are reclaimed on the GC tick; the executor reports the
+/// reclamation in its health counters.
+fn idle_sessions_are_garbage_collected() {
+    std::env::set_var("PSM_SESSION_TTL_MS", "50");
+    std::env::set_var("PSM_GC_TICK_MS", "20");
+    let model = "psm_s5";
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 14).unwrap();
+    let (tx, rx) = mpsc::sync_channel::<Request>(8);
+    let handle = std::thread::spawn(move || {
+        let rt = Runtime::reference();
+        executor_loop(&rt, model, &params, rx).unwrap();
+    });
+
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Generate {
+        session: 0,
+        prompt: vec![1, 2],
+        n: 2,
+        deadline: None,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap().unwrap();
+
+    std::thread::sleep(Duration::from_millis(250));
+    let (htx, hrx) = mpsc::channel();
+    tx.send(Request::Health { reply: htx }).unwrap();
+    let stats = hrx.recv().unwrap();
+    assert_eq!(stats.sessions, 0, "idle session must be reclaimed");
+    assert!(stats.gc >= 1);
+
+    tx.send(Request::Shutdown).unwrap();
+    handle.join().unwrap();
+    std::env::remove_var("PSM_SESSION_TTL_MS");
+    std::env::remove_var("PSM_GC_TICK_MS");
+}
+
+fn send_line(addr: &str, lines: &[&str]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut replies = Vec::new();
+    for l in lines {
+        writeln!(w, "{l}").unwrap();
+        let mut reply = String::new();
+        r.read_line(&mut reply).unwrap();
+        replies.push(reply.trim_end().to_string());
+    }
+    let _ = writeln!(w, "QUIT");
+    replies
+}
+
+/// The full TCP stack under moderate injection: concurrent clients,
+/// every OK reply bit-identical to the fault-free expectation, bounded
+/// error replies, server alive at the end.
+fn tcp_chaos_soak() {
+    let model = "psm_s5";
+    let addr = "127.0.0.1:7457";
+    let clients = 4usize;
+    let n = 8usize;
+
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 15).unwrap();
+
+    // Fault-free expectations, one per client prompt.
+    let expected: Vec<String> = (0..clients)
+        .map(|c| {
+            let mut sess =
+                PsmSession::new(&clean_rt, model, &params).unwrap();
+            let prompt = [1 + c as i32, 2, 3];
+            let out = sess.generate(&prompt, n).unwrap();
+            let body: Vec<String> =
+                out.iter().map(|t| t.to_string()).collect();
+            format!("OK {}", body.join(" "))
+        })
+        .collect();
+
+    // Knobs set while single-threaded, removed after full shutdown.
+    std::env::set_var("PSM_VALIDATE", "1");
+    std::env::set_var("PSM_RETRY_MAX", "8");
+    std::env::set_var("PSM_RETRY_BASE_MS", "0");
+    let cfg = FaultConfig {
+        seed: 42,
+        transient_p: 0.05,
+        nan_p: 0.05,
+        delay_p: 0.05,
+        delay_ms: 1,
+    };
+    let frt = Runtime::reference().with_faults(cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let stop_driver = stop.clone();
+    let driver = std::thread::spawn(move || -> (u64, u64) {
+        std::thread::sleep(Duration::from_millis(200));
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let expect = expected[c].clone();
+            handles.push(std::thread::spawn(move || -> (u64, u64) {
+                let req = format!("GEN {n} {} 2 3", 1 + c as i32);
+                let mut ok = 0u64;
+                let mut err = 0u64;
+                for _ in 0..3 {
+                    let reply = send_line(addr, &[&req]).remove(0);
+                    if reply.starts_with("OK") {
+                        assert_eq!(
+                            reply, expect,
+                            "OK replies must be bit-identical to the \
+                             fault-free run"
+                        );
+                        ok += 1;
+                    } else {
+                        assert!(
+                            reply.starts_with("ERR"),
+                            "malformed reply {reply:?}"
+                        );
+                        err += 1;
+                    }
+                }
+                (ok, err)
+            }));
+        }
+        let (mut ok, mut err) = (0u64, 0u64);
+        for h in handles {
+            let (o, e) = h.join().expect("client thread");
+            ok += o;
+            err += e;
+        }
+        // Server must still answer health after the storm.
+        let stats = send_line(addr, &["STATS"]).remove(0);
+        assert!(stats.starts_with("OK tokens="), "stats reply: {stats:?}");
+        assert!(stats.contains("sessions="), "stats reply: {stats:?}");
+        stop_driver.store(true, Ordering::Relaxed);
+        (ok, err)
+    });
+
+    server::serve(&frt, model, &params, addr, stop).unwrap();
+    let (ok, err) = driver.join().expect("driver");
+    let total = (clients * 3) as u64;
+    assert_eq!(ok + err, total);
+    assert!(
+        ok >= total / 2,
+        "error rate must stay bounded under moderate injection: \
+         {err}/{total} errors"
+    );
+    let counts = frt.fault_backend().unwrap().counts();
+    assert!(counts.transient + counts.nan > 0, "faults must have fired");
+    std::env::remove_var("PSM_VALIDATE");
+    std::env::remove_var("PSM_RETRY_MAX");
+    std::env::remove_var("PSM_RETRY_BASE_MS");
+}
+
+/// Protocol hardening + degradation on a fault-free server with a zero
+/// deadline: malformed requests are rejected loudly; well-formed ones
+/// are shed with `overloaded`.
+fn tcp_rejects_malformed_and_sheds_deadline() {
+    let model = "psm_s5";
+    let addr = "127.0.0.1:7458";
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 16).unwrap();
+    std::env::set_var("PSM_DEADLINE_MS", "0");
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let stop_driver = stop.clone();
+    let driver = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(200));
+        let replies = send_line(
+            addr,
+            &[
+                "GEN x 1 2",
+                "GEN 4 1 foo",
+                "GEN 999999999",
+                "BLAH",
+                "GEN 2 1 2",
+            ],
+        );
+        assert!(replies[0].starts_with("ERR bad request"), "{replies:?}");
+        assert!(replies[1].starts_with("ERR bad request"), "{replies:?}");
+        assert!(replies[2].starts_with("ERR bad request"), "{replies:?}");
+        assert!(replies[3].starts_with("ERR unknown command"), "{replies:?}");
+        assert!(
+            replies[4].starts_with("ERR overloaded"),
+            "zero deadline must shed, got {replies:?}"
+        );
+        stop_driver.store(true, Ordering::Relaxed);
+    });
+
+    server::serve(&rt, model, &params, addr, stop).unwrap();
+    driver.join().expect("driver");
+    std::env::remove_var("PSM_DEADLINE_MS");
+}

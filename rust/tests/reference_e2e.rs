@@ -169,6 +169,7 @@ fn executor_loop_serves_requests(rt: &Runtime) {
         session: 0,
         prompt: vec![1, 2, 3],
         n: 4,
+        deadline: None,
         reply: gen_tx,
     })
     .unwrap();

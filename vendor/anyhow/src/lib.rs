@@ -12,29 +12,49 @@
 //! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
 //! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
 //!   and `Option`.
+//! * [`Error::downcast_ref`] — the original error value converted via
+//!   `?` (or [`Error::new`]) is kept as a typed payload alongside the
+//!   string chain, and survives any number of `.context(..)` wraps.
+//!   This is what lets callers recover a typed error class (e.g.
+//!   `psm`'s `PsmError` taxonomy) from an `anyhow::Error`.
 //!
-//! Deliberately NOT covered: downcasting, backtraces, `Error::new`
-//! wrapping that preserves the concrete type. The crate stores plain
-//! strings, which is all the workspace needs for diagnostics.
+//! Deliberately NOT covered: backtraces, `downcast` by value /
+//! `downcast_mut`, `Error::chain` of typed sources (the source chain is
+//! captured eagerly as strings; only the outermost concrete error is
+//! kept as a payload).
 
+use std::any::Any;
 use std::fmt::{self, Display};
 
 /// Drop-in alias for `anyhow::Result`.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// A string-chain error: `chain[0]` is the outermost (most recently
-/// added) context, later entries are causes.
+/// added) context, later entries are causes. When the error was built
+/// from a concrete `std::error::Error` value, that value rides along as
+/// a typed payload for [`Error::downcast_ref`].
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a single printable message.
     pub fn msg<M: Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
-    /// Prepend a context message (what `.context(..)` does).
+    /// Wrap a concrete error, preserving it for downcasting (the
+    /// `anyhow::Error::new` entry point).
+    pub fn new<E>(err: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        err.into()
+    }
+
+    /// Prepend a context message (what `.context(..)` does). The typed
+    /// payload, if any, is preserved.
     pub fn context<C: Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
@@ -48,6 +68,18 @@ impl Error {
     /// Outermost-to-innermost context/cause messages.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.chain.iter().map(String::as_str)
+    }
+
+    /// Borrow the concrete error this `Error` was converted from, if it
+    /// was built from a value of type `E` (directly via `?`/[`Error::new`];
+    /// `.context(..)` wraps do not erase it).
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.payload.as_deref()?.downcast_ref::<E>()
+    }
+
+    /// Whether the payload is a value of type `E`.
+    pub fn is<E: 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 }
 
@@ -89,7 +121,7 @@ where
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(err)) }
     }
 }
 
@@ -185,6 +217,22 @@ mod tests {
         assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
         let e = anyhow!("plain {}", 7);
         assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context() {
+        let e: Error = io_err().into();
+        let e = e.context("outer").context("outermost");
+        let io = e.downcast_ref::<std::io::Error>().expect("payload kept");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.is::<std::io::Error>());
+        assert!(!e.is::<std::fmt::Error>());
+        // Message-built errors carry no payload.
+        let plain = anyhow!("no payload");
+        assert!(plain.downcast_ref::<std::io::Error>().is_none());
+        // Error::new is the explicit wrapping entry point.
+        let wrapped = Error::new(io_err());
+        assert!(wrapped.is::<std::io::Error>());
     }
 
     #[test]
