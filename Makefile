@@ -3,7 +3,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench chaos artifacts clean
+.PHONY: build test bench chaos obs artifacts clean
 
 build:
 	cargo build --release
@@ -22,6 +22,12 @@ bench:
 chaos:
 	cargo test -q --test chaos_soak
 	cargo bench --bench chaos
+
+# Observability: protocol/e2e telemetry checks + the recording-overhead
+# bench (writes BENCH_obs.json with the full metric snapshot).
+obs:
+	cargo test -q --test obs_e2e
+	cargo bench --bench obs
 
 # AOT-lower every model entry point to HLO text + manifest.json for the
 # PJRT backend. Requires a python environment with jax (build-time only;

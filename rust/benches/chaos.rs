@@ -51,6 +51,9 @@ fn stream(
 }
 
 fn main() {
+    // Perf-trajectory bench: disable telemetry so the recorded latency
+    // numbers stay comparable across PRs.
+    std::env::set_var("PSM_METRICS", "0");
     let quick = std::env::args().any(|a| a == "--quick");
     let n: usize = std::env::var("PSM_BENCH_TOKENS")
         .ok()

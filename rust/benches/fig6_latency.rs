@@ -52,6 +52,9 @@ fn curve_json(curve: &[(usize, f64)]) -> String {
 }
 
 fn main() {
+    // Perf-trajectory bench: disable telemetry so the recorded numbers
+    // stay comparable across PRs (the obs bench measures that cost).
+    std::env::set_var("PSM_METRICS", "0");
     // The reference backend serves the PSM models with no artifacts;
     // Runtime::new falls back to it automatically (PSM_BACKEND=pjrt
     // plus `make artifacts` selects the AOT path instead).

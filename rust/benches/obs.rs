@@ -1,0 +1,194 @@
+//! Observability bench: recording overhead of the metrics hot path and
+//! a whole-stack telemetry sweep.
+//!
+//! Phase 1 measures the per-record cost of warm handles (counter add,
+//! gauge add, summary record, span enter/drop) — these sit on the scan
+//! and serving hot paths, so they must stay in the few-ns range.
+//! Phase 2 drives every instrumented layer once (scan core, Blelloch
+//! sweeps, clean + faulted sessions, an executor round) and validates
+//! the resulting Prometheus exposition: it must parse and cover the
+//! full metric catalog (>= 12 families).
+//!
+//! Results — overheads plus a full registry snapshot — go to
+//! `BENCH_obs.json`. `--quick` shortens the loops for CI smoke runs.
+
+use std::sync::mpsc;
+
+use psm::bench::Table;
+use psm::coordinator::server::{executor_loop, Request};
+use psm::coordinator::{PsmSession, RetryPolicy};
+use psm::obs;
+use psm::runtime::reference::ChunkSumOp;
+use psm::runtime::{FaultConfig, ParamStore, Runtime};
+use psm::scan::{blelloch_scan, OnlineScan};
+use psm::util::json::Json;
+
+/// Time `iters` repetitions of `f`, returning mean ns/op.
+fn ns_per_op(iters: u64, mut f: impl FnMut()) -> f64 {
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() {
+    // This bench exists to measure the telemetry layer, so force it on
+    // regardless of the environment (the perf-trajectory benches do the
+    // opposite). Must happen before the first registry touch.
+    std::env::set_var("PSM_METRICS", "1");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters: u64 = if quick { 100_000 } else { 1_000_000 };
+    println!("# obs bench — {iters} iters/op\n");
+    assert!(obs::enabled(), "PSM_METRICS=1 must enable the registry");
+
+    // ---- Phase 1: hot-path recording overhead --------------------------
+    let c = obs::counter("obs_bench_counter_total", "bench probe");
+    let g = obs::gauge("obs_bench_gauge", "bench probe");
+    let s = obs::summary("obs_bench_summary_ns", "bench probe");
+    let h = obs::span_handle("obs_bench.span");
+    // Warm every path once before timing.
+    c.inc();
+    g.add(1);
+    s.record(1);
+    drop(h.enter());
+
+    let counter_ns = ns_per_op(iters, || c.add(1));
+    let gauge_ns = ns_per_op(iters, || g.add(1));
+    let mut v = 0u64;
+    let summary_ns = ns_per_op(iters, || {
+        v = v.wrapping_add(2654435761).max(1);
+        s.record(v);
+    });
+    let span_ns = ns_per_op(iters, || drop(h.enter()));
+
+    let mut table = Table::new(&["op", "ns/op"]);
+    for (name, ns) in [
+        ("counter.add", counter_ns),
+        ("gauge.add", gauge_ns),
+        ("summary.record", summary_ns),
+        ("span enter+drop", span_ns),
+    ] {
+        table.row(&[name.to_string(), format!("{ns:.1}")]);
+    }
+    table.print();
+
+    // ---- Phase 2: whole-stack sweep ------------------------------------
+    let model = "psm_s5";
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 42).unwrap();
+    let n_tokens = if quick { 16 } else { 64 };
+    let tokens: Vec<i32> = (0..n_tokens).map(|t| (t % 100) as i32).collect();
+
+    // Scan core + Blelloch levels.
+    let op = ChunkSumOp { c: 8, d: 8 };
+    {
+        let mut scan = OnlineScan::new(&op);
+        let mut pbuf: Vec<f32> = Vec::new();
+        for t in 0..256u64 {
+            let mut y = scan.take_buffer();
+            y.resize(64, 0.0);
+            for (i, x) in y.iter_mut().enumerate() {
+                *x = ((t as usize + i) % 9) as f32;
+            }
+            scan.push(y);
+        }
+        scan.prefix_into(&mut pbuf);
+    }
+    let chunks: Vec<Vec<f32>> = (0..64).map(|t| vec![(t % 5) as f32; 64]).collect();
+    let _ = blelloch_scan(&op, &chunks);
+
+    // Clean session (ref.* stage spans, token counters).
+    let mut sess = PsmSession::new(&rt, model, &params).unwrap();
+    sess.logits_stream(&tokens).unwrap();
+
+    // Faulted session (retry / backoff / injection counters).
+    let cfg = FaultConfig {
+        seed: 21,
+        transient_p: 0.2,
+        ..Default::default()
+    };
+    let frt = Runtime::reference().with_faults(cfg);
+    let mut fsess = PsmSession::new(&frt, model, &params).unwrap();
+    fsess.set_retry_policy(RetryPolicy {
+        max_attempts: 8,
+        base_backoff_ms: 0,
+        max_backoff_ms: 0,
+        retry_non_finite: true,
+    });
+    fsess.logits_stream(&tokens).unwrap();
+
+    // One executor round (queue/session gauges, request summary).
+    let (tx, rx) = mpsc::sync_channel::<Request>(8);
+    let exec_params = params;
+    let exec = std::thread::spawn(move || {
+        let ert = Runtime::reference();
+        executor_loop(&ert, model, &exec_params, rx).unwrap();
+    });
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Generate {
+        session: 0,
+        prompt: vec![1, 2, 3],
+        n: 4,
+        deadline: None,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap().unwrap();
+    tx.send(Request::Shutdown).unwrap();
+    exec.join().unwrap();
+
+    // ---- Validate the exposition ---------------------------------------
+    let text = obs::render_prometheus();
+    let fams = obs::parse_exposition(&text).expect("exposition must parse");
+    println!(
+        "\nexposition: {} families, {} sample lines",
+        fams.len(),
+        fams.values().sum::<usize>()
+    );
+    assert!(
+        fams.len() >= 12,
+        "metric catalog too small: {} families",
+        fams.len()
+    );
+    for required in [
+        "psm_scan_pushes_total",
+        "psm_scan_merges_total",
+        "psm_scan_level_merges_total",
+        "psm_span_calls_total",
+        "psm_span_ns_total",
+        "psm_session_tokens_total",
+        "psm_session_retries_total",
+        "psm_fault_calls_total",
+        "psm_fault_injections_total",
+        "psm_executor_queue_depth",
+        "psm_executor_tokens_total",
+        "psm_executor_request_ns",
+    ] {
+        assert!(fams.contains_key(required), "missing family {required}");
+    }
+    assert!(fsess.metrics.retries > 0, "fault schedule never fired");
+
+    // ---- Artifact ------------------------------------------------------
+    let report = Json::obj(vec![
+        ("bench", Json::Str("obs".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("iters", Json::Num(iters as f64)),
+        ("families", Json::Num(fams.len() as f64)),
+        (
+            "overhead_ns",
+            Json::obj(vec![
+                ("counter_add", Json::Num(counter_ns)),
+                ("gauge_add", Json::Num(gauge_ns)),
+                ("summary_record", Json::Num(summary_ns)),
+                ("span", Json::Num(span_ns)),
+            ]),
+        ),
+        ("snapshot", obs::snapshot_json()),
+    ]);
+    let path = psm::bench::artifact_path("BENCH_obs.json");
+    match std::fs::write(&path, format!("{report}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}

@@ -66,6 +66,10 @@ struct PathStats {
 }
 
 fn main() {
+    // Perf-trajectory bench: disable telemetry so ns/elem and
+    // allocs/elem stay comparable across PRs (the obs bench measures
+    // that cost separately).
+    std::env::set_var("PSM_METRICS", "0");
     // `--quick` (CI smoke) trims warmup/iteration budgets; the default
     // run takes fuller samples for the recorded perf trajectory.
     let quick = std::env::args().any(|a| a == "--quick");

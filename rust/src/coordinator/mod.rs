@@ -18,6 +18,13 @@
 //! errors under [`stream::RetryPolicy`] (bit-exact replay — see the
 //! duality argument in [`stream`]'s docs) and poison themselves when
 //! state integrity is lost, rather than serving corrupt prefixes.
+//!
+//! The layer is instrumented through [`crate::obs`]: sessions count
+//! tokens/retries/backoff/poisonings, the executor exports queue-depth
+//! and session gauges plus request-latency summaries, and the server
+//! answers the `METRICS` protocol command with Prometheus text
+//! exposition (terminated by `# EOF`) alongside the extended `STATS`
+//! one-liner.
 
 pub mod baseline;
 pub mod batcher;

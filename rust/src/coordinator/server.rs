@@ -12,6 +12,10 @@
 //! Protocol (one request per line):
 //!   GEN <n> <tok> <tok> ...   -> "OK <tok> <tok> ..." (greedy decode)
 //!   STATS                     -> "OK tokens=<n> sessions=<n> ..."
+//!   METRICS                   -> Prometheus text exposition (multi-line
+//!                                reply, terminated by a "# EOF" line;
+//!                                answered from the connection thread,
+//!                                no executor round trip)
 //!   QUIT                      -> closes the connection
 //!
 //! Each connection gets its own streaming session (created lazily).
@@ -46,6 +50,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::stream::PsmSession;
+use crate::obs;
 use crate::runtime::{ParamStore, PsmError, Runtime};
 use crate::{log_info, log_warn};
 
@@ -54,6 +59,63 @@ fn env_u64(key: &str, default: u64) -> u64 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(default)
+}
+
+/// Executor metric families. Counters mirror [`ExecStats`] (which
+/// stays the source of truth for `Request::Health`); the gauges and
+/// the request latency summary exist only here.
+struct ExecObs {
+    queue_depth: obs::Gauge,
+    sessions: obs::Gauge,
+    quarantined: obs::Gauge,
+    tokens: obs::Counter,
+    errors: obs::Counter,
+    shed: obs::Counter,
+    panics: obs::Counter,
+    gc: obs::Counter,
+    request_ns: obs::Summary,
+}
+
+fn exec_obs() -> &'static ExecObs {
+    static OBS: std::sync::OnceLock<ExecObs> = std::sync::OnceLock::new();
+    OBS.get_or_init(|| ExecObs {
+        queue_depth: obs::gauge(
+            "psm_executor_queue_depth",
+            "Requests enqueued to the executor and not yet picked up.",
+        ),
+        sessions: obs::gauge(
+            "psm_executor_sessions",
+            "Live streaming sessions owned by the executor.",
+        ),
+        quarantined: obs::gauge(
+            "psm_executor_quarantined",
+            "Poisoned sessions currently in quarantine.",
+        ),
+        tokens: obs::counter(
+            "psm_executor_tokens_total",
+            "Tokens processed by successful generate requests.",
+        ),
+        errors: obs::counter(
+            "psm_executor_errors_total",
+            "Requests answered with a non-overload error.",
+        ),
+        shed: obs::counter(
+            "psm_executor_shed_total",
+            "Requests shed for overload (queue full or deadline blown).",
+        ),
+        panics: obs::counter(
+            "psm_executor_panics_total",
+            "Kernel panics caught and converted to error replies.",
+        ),
+        gc: obs::counter(
+            "psm_executor_gc_total",
+            "Idle sessions reclaimed by the garbage collector.",
+        ),
+        request_ns: obs::summary(
+            "psm_executor_request_ns",
+            "End-to-end executor time per generate request (ns).",
+        ),
+    })
 }
 
 /// A request routed to the executor thread.
@@ -175,10 +237,13 @@ impl Executor {
         for id in dead {
             self.retire(id);
             self.gc_reclaimed += 1;
+            exec_obs().gc.inc();
         }
         let ttl = self.ttl;
         self.quarantine
             .retain(|_, &mut when| now.duration_since(when) < ttl);
+        exec_obs().sessions.set(self.sessions.len() as i64);
+        exec_obs().quarantined.set(self.quarantine.len() as i64);
     }
 
     /// One generate request, fully isolated: every failure mode answers
@@ -195,8 +260,31 @@ impl Executor {
         deadline: Option<Instant>,
         reply: &mpsc::Sender<Result<Vec<i32>>>,
     ) {
+        let t0 = Instant::now();
+        self.generate_inner(
+            rt, model, params, session, prompt, n, deadline, reply,
+        );
+        let o = exec_obs();
+        o.request_ns.record_ns_since(t0);
+        o.sessions.set(self.sessions.len() as i64);
+        o.quarantined.set(self.quarantine.len() as i64);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn generate_inner(
+        &mut self,
+        rt: &Runtime,
+        model: &str,
+        params: &ParamStore,
+        session: u64,
+        prompt: &[i32],
+        n: usize,
+        deadline: Option<Instant>,
+        reply: &mpsc::Sender<Result<Vec<i32>>>,
+    ) {
         if self.quarantine.contains_key(&session) {
             self.errors += 1;
+            exec_obs().errors.inc();
             let _ = reply.send(Err(anyhow::Error::new(
                 PsmError::SessionPoisoned(format!(
                     "session {session} is quarantined"
@@ -207,6 +295,7 @@ impl Executor {
         if let Some(d) = deadline {
             if Instant::now() >= d {
                 self.shed += 1;
+                exec_obs().shed.inc();
                 let _ = reply.send(Err(anyhow::Error::new(
                     PsmError::Overloaded(format!(
                         "deadline expired before session {session} started"
@@ -229,6 +318,7 @@ impl Executor {
                     }),
                     Err(e) => {
                         self.errors += 1;
+                        exec_obs().errors.inc();
                         let _ = reply.send(Err(e.context(format!(
                             "creating session {session}"
                         ))));
@@ -255,20 +345,25 @@ impl Executor {
         match result {
             Ok(Ok(out)) => {
                 self.total_tokens += (prompt.len() + n) as u64;
+                exec_obs().tokens.add((prompt.len() + n) as u64);
                 let _ = reply.send(Ok(out));
             }
             Ok(Err(e)) => {
                 if matches!(PsmError::of(&e), Some(PsmError::Overloaded(_)))
                 {
                     self.shed += 1;
+                    exec_obs().shed.inc();
                 } else {
                     self.errors += 1;
+                    exec_obs().errors.inc();
                 }
                 let _ = reply.send(Err(e));
             }
             Err(payload) => {
                 self.panics += 1;
                 self.errors += 1;
+                exec_obs().panics.inc();
+                exec_obs().errors.inc();
                 let msg = payload
                     .downcast_ref::<&str>()
                     .map(|s| s.to_string())
@@ -318,18 +413,22 @@ pub fn executor_loop(
         };
         match req {
             Request::Generate { session, prompt, n, deadline, reply } => {
+                exec_obs().queue_depth.dec_floor0();
                 ex.generate(
                     rt, model, params, session, &prompt, n, deadline,
                     &reply,
                 );
             }
             Request::Stats { reply } => {
+                exec_obs().queue_depth.dec_floor0();
                 let _ = reply.send((ex.total_tokens, ex.sessions.len()));
             }
             Request::Health { reply } => {
+                exec_obs().queue_depth.dec_floor0();
                 let _ = reply.send(ex.stats());
             }
             Request::Close { session } => {
+                exec_obs().queue_depth.dec_floor0();
                 ex.retire(session);
             }
             Request::Shutdown => break,
@@ -478,18 +577,22 @@ fn handle_conn(
                     reply: rtx,
                 };
                 match tx.try_send(req) {
-                    Ok(()) => match rrx.recv() {
-                        Ok(Ok(tokens)) => {
-                            let body: Vec<String> = tokens
-                                .iter()
-                                .map(|t| t.to_string())
-                                .collect();
-                            writeln!(writer, "OK {}", body.join(" "))?;
+                    Ok(()) => {
+                        exec_obs().queue_depth.inc();
+                        match rrx.recv() {
+                            Ok(Ok(tokens)) => {
+                                let body: Vec<String> = tokens
+                                    .iter()
+                                    .map(|t| t.to_string())
+                                    .collect();
+                                writeln!(writer, "OK {}", body.join(" "))?;
+                            }
+                            Ok(Err(e)) => writeln!(writer, "ERR {e:#}")?,
+                            Err(_) => writeln!(writer, "ERR executor gone")?,
                         }
-                        Ok(Err(e)) => writeln!(writer, "ERR {e:#}")?,
-                        Err(_) => writeln!(writer, "ERR executor gone")?,
-                    },
+                    }
                     Err(mpsc::TrySendError::Full(_)) => {
+                        exec_obs().shed.inc();
                         writeln!(
                             writer,
                             "ERR overloaded: request queue full"
@@ -503,22 +606,27 @@ fn handle_conn(
             Some("STATS") => {
                 let (rtx, rrx) = mpsc::channel();
                 match tx.try_send(Request::Health { reply: rtx }) {
-                    Ok(()) => match rrx.recv() {
-                        Ok(s) => writeln!(
-                            writer,
-                            "OK tokens={} sessions={} quarantined={} \
-                             errors={} shed={} retries={} panics={} gc={}",
-                            s.tokens,
-                            s.sessions,
-                            s.quarantined,
-                            s.errors,
-                            s.shed,
-                            s.retries,
-                            s.panics,
-                            s.gc
-                        )?,
-                        Err(_) => writeln!(writer, "ERR executor gone")?,
-                    },
+                    Ok(()) => {
+                        exec_obs().queue_depth.inc();
+                        match rrx.recv() {
+                            Ok(s) => writeln!(
+                                writer,
+                                "OK tokens={} sessions={} quarantined={} \
+                                 errors={} shed={} retries={} panics={} \
+                                 gc={} queue={}",
+                                s.tokens,
+                                s.sessions,
+                                s.quarantined,
+                                s.errors,
+                                s.shed,
+                                s.retries,
+                                s.panics,
+                                s.gc,
+                                exec_obs().queue_depth.get()
+                            )?,
+                            Err(_) => writeln!(writer, "ERR executor gone")?,
+                        }
+                    }
                     Err(mpsc::TrySendError::Full(_)) => {
                         writeln!(
                             writer,
@@ -530,13 +638,24 @@ fn handle_conn(
                     }
                 }
             }
+            Some("METRICS") => {
+                // Answered from the connection thread: the registry is
+                // process-global, so no executor round trip is needed
+                // (and METRICS keeps working while the executor is
+                // busy — exactly when you want telemetry). The reply is
+                // multi-line; a `# EOF` line terminates it.
+                write!(writer, "{}", obs::render_prometheus())?;
+                writeln!(writer, "# EOF")?;
+            }
             Some("QUIT") | None => break,
             Some(other) => writeln!(writer, "ERR unknown command {other}")?,
         }
     }
     // Best effort: if the queue is saturated the Close is dropped and
     // the idle-session GC reclaims the session instead.
-    let _ = tx.try_send(Request::Close { session });
+    if tx.try_send(Request::Close { session }).is_ok() {
+        exec_obs().queue_depth.inc();
+    }
     Ok(())
 }
 

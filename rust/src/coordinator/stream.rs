@@ -49,8 +49,46 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::obs;
 use crate::runtime::{HostValue, Module, ParamStore, PsmError, Runtime};
 use crate::util::prng::Rng;
+
+/// Session-layer metric families, shared by every [`PsmSession`] in
+/// the process (per-session numbers stay in [`SessionMetrics`]).
+struct SessionObs {
+    tokens: obs::Counter,
+    retries: obs::Counter,
+    backoff_ms: obs::Counter,
+    poisoned: obs::Counter,
+    replay_depth: obs::Summary,
+}
+
+fn session_obs() -> &'static SessionObs {
+    static OBS: std::sync::OnceLock<SessionObs> = std::sync::OnceLock::new();
+    OBS.get_or_init(|| SessionObs {
+        tokens: obs::counter(
+            "psm_session_tokens_total",
+            "Tokens pushed through streaming sessions.",
+        ),
+        retries: obs::counter(
+            "psm_session_retries_total",
+            "Backend-call replays after a retryable failure.",
+        ),
+        backoff_ms: obs::counter(
+            "psm_session_backoff_ms_total",
+            "Milliseconds slept in retry backoff.",
+        ),
+        poisoned: obs::counter(
+            "psm_session_poisonings_total",
+            "Sessions poisoned (state integrity lost until reset).",
+        ),
+        replay_depth: obs::summary(
+            "psm_session_replay_depth",
+            "Replays needed per ultimately-successful backend call \
+             (recorded only when at least one retry happened).",
+        ),
+    })
+}
 
 /// Bounded-retry policy for backend calls: exponential backoff with
 /// jitter, driven by the session's seeded [`Rng`] so the whole schedule
@@ -143,7 +181,12 @@ fn run_with_retry(
     let mut attempt = 0u32;
     loop {
         match module.run(inputs) {
-            Ok(out) => return Ok(out),
+            Ok(out) => {
+                if attempt > 0 {
+                    session_obs().replay_depth.record(u64::from(attempt));
+                }
+                return Ok(out);
+            }
             Err(e) => {
                 if attempt + 1 >= policy.max_attempts
                     || !policy.qualifies(&e)
@@ -151,6 +194,9 @@ fn run_with_retry(
                     return Err(e);
                 }
                 let ms = policy.backoff_ms(attempt, rng);
+                let so = session_obs();
+                so.retries.inc();
+                so.backoff_ms.add(ms);
                 if ms > 0 {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
@@ -409,6 +455,7 @@ impl PsmSession {
                     "push_token failed at token {}: {e:#}",
                     self.metrics.tokens
                 ));
+                session_obs().poisoned.inc();
                 Err(e)
             }
         }
@@ -417,6 +464,7 @@ impl PsmSession {
     fn push_token_inner(&mut self, token: i32) -> Result<Vec<f32>> {
         self.buf.push(token);
         self.metrics.tokens += 1;
+        session_obs().tokens.inc();
 
         // Encode the (padded) partial chunk and run Inf on the cached
         // prefix (already staged in its input slot — it only changes at
@@ -508,6 +556,7 @@ impl PsmSession {
                     "non-finite logits at token {}: {e:#}",
                     self.metrics.tokens
                 ));
+                session_obs().poisoned.inc();
                 Err(e)
             }
         }

@@ -47,6 +47,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod obs;
 pub mod runtime;
 pub mod scan;
 pub mod tensor;

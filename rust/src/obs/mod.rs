@@ -1,0 +1,81 @@
+//! Runtime observability: a lock-cheap metrics registry, RAII tracing
+//! spans, and Prometheus-style exposition.
+//!
+//! Every layer of the stack reports through this module — the scan
+//! core (merge counts, arena recycling, push timing), the Blelloch
+//! levels (`span!("scan.level")`), the reference backend (per-stage
+//! `ref.enc`/`ref.inf`/… spans), streaming sessions (retries, backoff,
+//! replay depth, poisonings), the chaos decorator (injections by
+//! kind), and the serving executor (queue depth, shed/GC/quarantine,
+//! end-to-end request latency). The data gets out three ways:
+//!
+//! 1. the `METRICS` protocol command ([`render_prometheus`] behind the
+//!    TCP server, terminated by a `# EOF` line),
+//! 2. periodic JSON snapshots (`PSM_METRICS_JSON=path`, interval
+//!    `PSM_METRICS_JSON_MS`, default 1000; also [`write_json_snapshot`]
+//!    on demand — `cargo bench --bench obs` emits `BENCH_obs.json`
+//!    this way), and
+//! 3. the extended `STATS` reply (queue depth alongside the executor
+//!    counters).
+//!
+//! ## Hot-path discipline
+//!
+//! Recording is wait-free: handles wrap `Option<Arc<Atomic…>>`, so an
+//! increment is one relaxed `fetch_add` and a disabled handle is a
+//! no-op. The registry mutex is touched only at registration and
+//! exposition time. Steady-state recording performs **zero heap
+//! allocations** (pinned by `tests/alloc_free.rs`); the scan core goes
+//! further and batches its counts in plain instance-local `u64`s,
+//! flushed to the registry only at `clear`/drop boundaries.
+//!
+//! `PSM_METRICS=0` turns the whole subsystem off: constructors hand
+//! out no-op handles, spans skip the clock read, and exposition
+//! renders a single comment line. The perf-trajectory benches
+//! (`scan_hotpath`, `fig6_latency`, `chaos`) set this themselves so
+//! their recorded numbers stay comparable across PRs.
+
+mod registry;
+mod span;
+
+pub use registry::{
+    counter, counter_kv, enabled, gauge, parse_exposition, render_prometheus,
+    snapshot_json, summary, write_json_snapshot, AtomicHisto, Counter, Gauge,
+    Summary,
+};
+pub use span::{span_handle, SpanGuard, SpanHandle};
+
+use std::sync::OnceLock;
+
+/// Start the periodic JSON snapshot writer if `PSM_METRICS_JSON` names
+/// a path (and metrics are enabled). Called once from registry
+/// initialisation, so any process that records at least one metric
+/// gets the writer for free. The thread is a daemon: it holds no
+/// shutdown handle and dies with the process; the tmp+rename in
+/// [`write_json_snapshot`] keeps readers from seeing torn output.
+pub(crate) fn maybe_start_json_writer() {
+    static STARTED: OnceLock<()> = OnceLock::new();
+    STARTED.get_or_init(|| {
+        if !enabled() {
+            return;
+        }
+        let path = match std::env::var("PSM_METRICS_JSON") {
+            Ok(p) if !p.is_empty() => std::path::PathBuf::from(p),
+            _ => return,
+        };
+        let interval_ms = std::env::var("PSM_METRICS_JSON_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(1000)
+            .max(10);
+        let _ = std::thread::Builder::new()
+            .name("psm-metrics-json".to_string())
+            .spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    interval_ms,
+                ));
+                if let Err(e) = write_json_snapshot(&path) {
+                    crate::log_warn!("metrics snapshot failed: {e:#}");
+                }
+            });
+    });
+}

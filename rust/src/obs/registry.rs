@@ -1,0 +1,608 @@
+//! The metrics registry: named families of atomic counters, gauges and
+//! log2-bucket summaries, with Prometheus text rendering and JSON
+//! snapshots.
+//!
+//! Design constraints (see module docs in [`crate::obs`]):
+//!
+//! * **Wait-free hot path.** A [`Counter`] / [`Gauge`] / [`Summary`]
+//!   handle is an `Option<Arc<Atomic…>>`; recording is a single relaxed
+//!   `fetch_add` (or nothing at all when metrics are disabled). The
+//!   registry mutex is only taken at registration and exposition time —
+//!   never while recording.
+//! * **No steady-state allocation.** Handles are registered once
+//!   (typically through a `OnceLock`) and cloned freely; recording
+//!   through a warm handle performs zero heap allocations, which
+//!   `tests/alloc_free.rs` pins with a counting global allocator.
+//! * **Off by default off-switch.** With `PSM_METRICS=0` every
+//!   constructor returns a no-op handle and exposition renders a single
+//!   comment line, so perf-trajectory benches are unperturbed.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats::bucket_upper_edge;
+
+// ---- enable gate -----------------------------------------------------------
+
+/// Global metrics switch, read once from `PSM_METRICS` (default **on**;
+/// `0`/`false`/`off` disable). Cached in a `OnceLock` so the hot path
+/// pays a single load, not an env lookup.
+pub fn enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        !matches!(
+            std::env::var("PSM_METRICS").as_deref(),
+            Ok("0") | Ok("false") | Ok("off")
+        )
+    })
+}
+
+// ---- metric kinds ----------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Summary,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Summary => "summary",
+        }
+    }
+}
+
+/// Monotonic event counter. Cloning shares the underlying atomic.
+#[derive(Clone, Default)]
+pub struct Counter(Option<Arc<AtomicU64>>);
+
+impl Counter {
+    /// A handle that records nothing (what constructors return when
+    /// metrics are disabled).
+    pub fn noop() -> Counter {
+        Counter(None)
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Some(a) = &self.0 {
+            a.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.as_ref().map_or(0, |a| a.load(Ordering::Relaxed))
+    }
+
+    /// Whether this handle records anywhere (false when disabled).
+    pub fn is_live(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+/// Instantaneous level (queue depth, live sessions, …).
+#[derive(Clone, Default)]
+pub struct Gauge(Option<Arc<AtomicI64>>);
+
+impl Gauge {
+    pub fn noop() -> Gauge {
+        Gauge(None)
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if let Some(a) = &self.0 {
+            a.store(v, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        if let Some(a) = &self.0 {
+            a.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Decrement, saturating at zero. Used for the executor queue-depth
+    /// gauge, where tests may drive the consumer without the producer.
+    #[inline]
+    pub fn dec_floor0(&self) {
+        if let Some(a) = &self.0 {
+            let _ = a.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                if v > 0 {
+                    Some(v - 1)
+                } else {
+                    None
+                }
+            });
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.as_ref().map_or(0, |a| a.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free value distribution over the same 64 log2 buckets as
+/// [`crate::util::stats::LatencyHisto`], plus a running sum/count —
+/// rendered as a Prometheus `summary` (q50/q90/q99 + `_sum`/`_count`).
+pub struct AtomicHisto {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl AtomicHisto {
+    fn new() -> Self {
+        AtomicHisto {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn record(&self, v: u64) {
+        let idx = 63 - v.max(1).leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    fn count_now(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn sum_now(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile: upper edge of the bucket containing it
+    /// (saturating at the top bucket, matching `LatencyHisto`).
+    fn quantile(&self, q: f64) -> u64 {
+        let total = self.count_now();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return bucket_upper_edge(i);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Handle to an [`AtomicHisto`] family (latencies, replay depths, …).
+#[derive(Clone, Default)]
+pub struct Summary(Option<Arc<AtomicHisto>>);
+
+impl Summary {
+    pub fn noop() -> Summary {
+        Summary(None)
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if let Some(h) = &self.0 {
+            h.record(v);
+        }
+    }
+
+    /// Record the elapsed time since `t0` in nanoseconds.
+    #[inline]
+    pub fn record_ns_since(&self, t0: std::time::Instant) {
+        if let Some(h) = &self.0 {
+            h.record(t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.as_ref().map_or(0, |h| h.count_now())
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.0.as_ref().map_or(0, |h| h.quantile(q))
+    }
+}
+
+// ---- the registry ----------------------------------------------------------
+
+#[derive(Clone)]
+enum Metric {
+    C(Arc<AtomicU64>),
+    G(Arc<AtomicI64>),
+    S(Arc<AtomicHisto>),
+}
+
+struct Family {
+    help: String,
+    kind: Kind,
+    /// At most one label key per family (e.g. `kind`, `span`); series
+    /// within the family are keyed by label value ("" = unlabelled).
+    label_key: Option<String>,
+    series: BTreeMap<String, Metric>,
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Family>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, Family>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        super::maybe_start_json_writer();
+        Mutex::new(BTreeMap::new())
+    })
+}
+
+/// Register (or look up) a series. Re-registering an existing series
+/// returns a handle to the *same* atomic — callers anywhere in the
+/// crate (or tests) can observe a metric by re-requesting its name.
+fn register(
+    name: &str,
+    help: &str,
+    kind: Kind,
+    label: Option<(&str, &str)>,
+) -> Metric {
+    let mut reg = registry().lock().unwrap();
+    let fam = reg.entry(name.to_string()).or_insert_with(|| Family {
+        help: help.to_string(),
+        kind,
+        label_key: label.map(|(k, _)| k.to_string()),
+        series: BTreeMap::new(),
+    });
+    assert_eq!(
+        fam.kind, kind,
+        "metric {name} re-registered with a different kind"
+    );
+    let key = label.map(|(_, v)| v.to_string()).unwrap_or_default();
+    fam.series
+        .entry(key)
+        .or_insert_with(|| match kind {
+            Kind::Counter => Metric::C(Arc::new(AtomicU64::new(0))),
+            Kind::Gauge => Metric::G(Arc::new(AtomicI64::new(0))),
+            Kind::Summary => Metric::S(Arc::new(AtomicHisto::new())),
+        })
+        .clone()
+}
+
+/// A named counter (no labels). No-op handle when metrics are disabled.
+pub fn counter(name: &str, help: &str) -> Counter {
+    if !enabled() {
+        return Counter::noop();
+    }
+    match register(name, help, Kind::Counter, None) {
+        Metric::C(a) => Counter(Some(a)),
+        _ => unreachable!(),
+    }
+}
+
+/// A counter series inside a labelled family, e.g.
+/// `counter_kv("psm_fault_injections_total", …, "kind", "nan")`.
+pub fn counter_kv(name: &str, help: &str, key: &str, val: &str) -> Counter {
+    if !enabled() {
+        return Counter::noop();
+    }
+    match register(name, help, Kind::Counter, Some((key, val))) {
+        Metric::C(a) => Counter(Some(a)),
+        _ => unreachable!(),
+    }
+}
+
+/// A named gauge. No-op handle when metrics are disabled.
+pub fn gauge(name: &str, help: &str) -> Gauge {
+    if !enabled() {
+        return Gauge::noop();
+    }
+    match register(name, help, Kind::Gauge, None) {
+        Metric::G(a) => Gauge(Some(a)),
+        _ => unreachable!(),
+    }
+}
+
+/// A named summary (log2-bucket histogram). No-op when disabled.
+pub fn summary(name: &str, help: &str) -> Summary {
+    if !enabled() {
+        return Summary::noop();
+    }
+    match register(name, help, Kind::Summary, None) {
+        Metric::S(h) => Summary(Some(h)),
+        _ => unreachable!(),
+    }
+}
+
+// ---- exposition ------------------------------------------------------------
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render every registered family as Prometheus text exposition
+/// (`# HELP` / `# TYPE` + samples). Summaries render quantile series
+/// plus `_sum` / `_count`. The caller appends any framing (the TCP
+/// protocol terminates the reply with a `# EOF` line).
+pub fn render_prometheus() -> String {
+    let mut out = String::new();
+    if !enabled() {
+        out.push_str("# psm metrics disabled (PSM_METRICS=0)\n");
+        return out;
+    }
+    let reg = registry().lock().unwrap();
+    for (name, fam) in reg.iter() {
+        out.push_str(&format!("# HELP {name} {}\n", fam.help));
+        out.push_str(&format!("# TYPE {name} {}\n", fam.kind.as_str()));
+        for (lv, m) in &fam.series {
+            let series = match (&fam.label_key, lv.is_empty()) {
+                (Some(k), false) => {
+                    format!("{name}{{{k}=\"{}\"}}", escape_label(lv))
+                }
+                _ => name.clone(),
+            };
+            match m {
+                Metric::C(a) => {
+                    let v = a.load(Ordering::Relaxed);
+                    out.push_str(&format!("{series} {v}\n"));
+                }
+                Metric::G(a) => {
+                    let v = a.load(Ordering::Relaxed);
+                    out.push_str(&format!("{series} {v}\n"));
+                }
+                Metric::S(h) => {
+                    for q in [0.5, 0.9, 0.99] {
+                        out.push_str(&format!(
+                            "{name}{{quantile=\"{q}\"}} {}\n",
+                            h.quantile(q)
+                        ));
+                    }
+                    out.push_str(&format!("{name}_sum {}\n", h.sum_now()));
+                    out.push_str(&format!("{name}_count {}\n", h.count_now()));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Validate Prometheus text exposition and return, per family declared
+/// by a `# TYPE` line, the number of sample lines seen. Used by the
+/// protocol tests and the `obs` bench; strict enough to catch framing
+/// or escaping regressions (every sample must belong to a declared
+/// family and carry a parseable number).
+pub fn parse_exposition(text: &str) -> Result<BTreeMap<String, usize>> {
+    let mut families: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let ln = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name =
+                it.next().with_context(|| format!("line {ln}: bare TYPE"))?;
+            let kind =
+                it.next().with_context(|| format!("line {ln}: TYPE w/o kind"))?;
+            if !matches!(kind, "counter" | "gauge" | "summary") {
+                bail!("line {ln}: unknown kind {kind:?}");
+            }
+            families.insert(name.to_string(), 0);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP, EOF, or free-form comment
+        }
+        // Sample: name[{labels}] value
+        let (series, value) = line
+            .rsplit_once(' ')
+            .with_context(|| format!("line {ln}: no value: {line:?}"))?;
+        value
+            .parse::<f64>()
+            .with_context(|| format!("line {ln}: bad value {value:?}"))?;
+        let base = series.split('{').next().unwrap_or(series);
+        let fam = base
+            .strip_suffix("_sum")
+            .or_else(|| base.strip_suffix("_count"))
+            .filter(|f| families.contains_key(*f))
+            .unwrap_or(base);
+        let n = families.get_mut(fam).with_context(|| {
+            format!("line {ln}: sample for undeclared family {fam:?}")
+        })?;
+        *n += 1;
+    }
+    Ok(families)
+}
+
+// ---- JSON snapshot ---------------------------------------------------------
+
+/// The full registry as a deterministic JSON object
+/// (`{"schema":"psm.metrics.v1","unix_ms":…,"metrics":{…}}`). Summaries
+/// export count / sum / p50 / p90 / p99; labelled families export a
+/// `values` object keyed by label value.
+pub fn snapshot_json() -> Json {
+    let unix_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    let mut metrics = BTreeMap::new();
+    if enabled() {
+        let reg = registry().lock().unwrap();
+        for (name, fam) in reg.iter() {
+            let mut obj = BTreeMap::new();
+            obj.insert(
+                "type".to_string(),
+                Json::Str(fam.kind.as_str().to_string()),
+            );
+            if let Some(k) = &fam.label_key {
+                obj.insert("label".to_string(), Json::Str(k.clone()));
+            }
+            match fam.kind {
+                Kind::Summary => {
+                    if let Some(Metric::S(h)) = fam.series.get("") {
+                        obj.insert(
+                            "count".to_string(),
+                            Json::Num(h.count_now() as f64),
+                        );
+                        obj.insert(
+                            "sum".to_string(),
+                            Json::Num(h.sum_now() as f64),
+                        );
+                        for (key, q) in
+                            [("p50", 0.5), ("p90", 0.9), ("p99", 0.99)]
+                        {
+                            obj.insert(
+                                key.to_string(),
+                                Json::Num(h.quantile(q) as f64),
+                            );
+                        }
+                    }
+                }
+                Kind::Counter | Kind::Gauge => {
+                    let mut values = BTreeMap::new();
+                    for (lv, m) in &fam.series {
+                        let v = match m {
+                            Metric::C(a) => a.load(Ordering::Relaxed) as f64,
+                            Metric::G(a) => a.load(Ordering::Relaxed) as f64,
+                            Metric::S(_) => continue,
+                        };
+                        values.insert(lv.clone(), Json::Num(v));
+                    }
+                    obj.insert("values".to_string(), Json::Obj(values));
+                }
+            }
+            metrics.insert(name.clone(), Json::Obj(obj));
+        }
+    }
+    Json::obj(vec![
+        ("schema", Json::Str("psm.metrics.v1".to_string())),
+        ("unix_ms", Json::Num(unix_ms)),
+        ("enabled", Json::Bool(enabled())),
+        ("metrics", Json::Obj(metrics)),
+    ])
+}
+
+/// Atomically write [`snapshot_json`] to `path` (tmp file + rename, so
+/// a concurrent reader never sees a torn snapshot).
+pub fn write_json_snapshot(path: &std::path::Path) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, format!("{}\n", snapshot_json()))
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_state() {
+        let a = counter("obs_test_shared_total", "test");
+        let b = counter("obs_test_shared_total", "test");
+        let before = b.get();
+        a.add(3);
+        assert_eq!(b.get(), before + 3);
+    }
+
+    #[test]
+    fn labelled_series_are_distinct() {
+        let x = counter_kv("obs_test_kv_total", "test", "kind", "x");
+        let y = counter_kv("obs_test_kv_total", "test", "kind", "y");
+        let (bx, by) = (x.get(), y.get());
+        x.inc();
+        assert_eq!(x.get(), bx + 1);
+        assert_eq!(y.get(), by);
+    }
+
+    #[test]
+    fn gauge_floor_at_zero() {
+        let g = gauge("obs_test_gauge", "test");
+        g.set(1);
+        g.dec_floor0();
+        g.dec_floor0();
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn summary_quantiles() {
+        let s = summary("obs_test_summary_ns", "test");
+        for v in [1u64, 2, 4, 1 << 20] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert!(s.quantile(0.99) >= 1 << 20);
+        assert!(s.quantile(0.5) <= s.quantile(0.99));
+    }
+
+    #[test]
+    fn exposition_renders_and_parses() {
+        counter("obs_test_render_total", "a counter").inc();
+        gauge("obs_test_render_gauge", "a gauge").set(-2);
+        summary("obs_test_render_ns", "a summary").record(7);
+        counter_kv("obs_test_render_kv_total", "labelled", "kind", "with \"q\"")
+            .inc();
+        let text = render_prometheus();
+        let fams = parse_exposition(&text).expect("must parse");
+        assert!(fams["obs_test_render_total"] >= 1);
+        assert!(fams["obs_test_render_gauge"] >= 1);
+        // summary: 3 quantiles + _sum + _count
+        assert!(fams["obs_test_render_ns"] >= 5);
+        assert!(text.contains("kind=\"with \\\"q\\\"\""));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_exposition("stray_sample 1\n").is_err());
+        assert!(parse_exposition("# TYPE x counter\nx notanumber\n").is_err());
+        assert!(parse_exposition("# TYPE x frobnicator\n").is_err());
+        // Comments and EOF markers are fine.
+        assert!(parse_exposition("# EOF\n").is_ok());
+    }
+
+    #[test]
+    fn noop_handles_are_inert() {
+        let c = Counter::noop();
+        c.inc();
+        assert_eq!(c.get(), 0);
+        assert!(!c.is_live());
+        let g = Gauge::noop();
+        g.set(5);
+        assert_eq!(g.get(), 0);
+        let s = Summary::noop();
+        s.record(5);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        counter("obs_test_snap_total", "snap").add(2);
+        summary("obs_test_snap_ns", "snap").record(100);
+        let j = snapshot_json();
+        let parsed =
+            Json::parse(&j.to_string()).expect("snapshot must be valid JSON");
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str().unwrap(),
+            "psm.metrics.v1"
+        );
+        let m = parsed.get("metrics").unwrap();
+        assert!(m.opt("obs_test_snap_total").is_some());
+        assert!(m.opt("obs_test_snap_ns").is_some());
+    }
+}

@@ -49,7 +49,47 @@ use super::backend::{Backend, Executable, Module};
 use super::error::PsmError;
 use super::manifest::{ArtifactSpec, Manifest};
 use super::value::HostValue;
+use crate::obs;
 use crate::util::prng::Rng;
+
+/// Process-global injection metrics, mirroring the per-wrap
+/// [`FaultStats`]: the chaos bench reads the latter through the
+/// backend handle, while `METRICS` exposes these across all wraps.
+struct FaultObs {
+    calls: obs::Counter,
+    transient: obs::Counter,
+    nan: obs::Counter,
+    delay: obs::Counter,
+}
+
+fn fault_obs() -> &'static FaultObs {
+    static OBS: std::sync::OnceLock<FaultObs> = std::sync::OnceLock::new();
+    const INJ_HELP: &str = "Chaos injections fired, by kind.";
+    OBS.get_or_init(|| FaultObs {
+        calls: obs::counter(
+            "psm_fault_calls_total",
+            "Module calls passing through the chaos decorator.",
+        ),
+        transient: obs::counter_kv(
+            "psm_fault_injections_total",
+            INJ_HELP,
+            "kind",
+            "transient",
+        ),
+        nan: obs::counter_kv(
+            "psm_fault_injections_total",
+            INJ_HELP,
+            "kind",
+            "nan",
+        ),
+        delay: obs::counter_kv(
+            "psm_fault_injections_total",
+            INJ_HELP,
+            "kind",
+            "delay",
+        ),
+    })
+}
 
 /// Fault-injection knobs. Probabilities are per `execute` call.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -261,13 +301,17 @@ impl Executable for FaultExec {
             let nan_pos = rng.next_u64();
             (delay, transient, if nan { Some(nan_pos) } else { None })
         };
+        let fo = fault_obs();
         self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        fo.calls.inc();
         if delay {
             self.stats.delay.fetch_add(1, Ordering::Relaxed);
+            fo.delay.inc();
             std::thread::sleep(Duration::from_millis(self.cfg.delay_ms));
         }
         if transient {
             self.stats.transient.fetch_add(1, Ordering::Relaxed);
+            fo.transient.inc();
             return Err(anyhow::Error::new(PsmError::Transient(format!(
                 "injected transient fault in {}",
                 self.spec.file
@@ -284,6 +328,7 @@ impl Executable for FaultExec {
                     let i = (pos % data.len() as u64) as usize;
                     data[i] = f32::NAN;
                     self.stats.nan.fetch_add(1, Ordering::Relaxed);
+                    fo.nan.inc();
                 }
             }
         }

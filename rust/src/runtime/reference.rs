@@ -474,10 +474,23 @@ impl Backend for RefBackend {
             "train_block" => EntryKind::TrainBlock,
             other => bail!("reference backend: unknown entry {other:?}"),
         };
+        // Stage-timing span, named after the entry point: the serve
+        // path's enc/inf/agg split and the training-path fwd/train
+        // cost both become visible in psm_span_*_total{span="ref.…"}.
+        let span = crate::obs::span_handle(match kind {
+            EntryKind::Init => "ref.init",
+            EntryKind::Enc => "ref.enc",
+            EntryKind::Agg => "ref.agg",
+            EntryKind::Inf => "ref.inf",
+            EntryKind::Fwd => "ref.fwd",
+            EntryKind::TrainStep => "ref.train_step",
+            EntryKind::TrainBlock => "ref.train_block",
+        });
         Ok(Module::from_exec(Box::new(RefExec {
             cfg,
             kind,
             spec,
+            span,
             workspaces: Mutex::new(Vec::new()),
         })))
     }
@@ -502,6 +515,9 @@ struct RefExec {
     cfg: RefModelCfg,
     kind: EntryKind,
     spec: ArtifactSpec,
+    /// Per-entry stage timer (`ref.enc`, `ref.inf`, …), registered at
+    /// load so `execute` never touches the metrics registry.
+    span: crate::obs::SpanHandle,
     /// Recycled per-sequence workspaces, shared across `execute` calls
     /// and handed out to pool workers during batched entry points.
     workspaces: Mutex<Vec<SeqWorkspace>>,
@@ -513,6 +529,7 @@ impl Executable for RefExec {
     }
 
     fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let _stage = self.span.enter();
         match self.kind {
             EntryKind::Init => self.run_init(inputs),
             EntryKind::Enc => self.run_enc(inputs),

@@ -11,7 +11,21 @@
 //! every real prefix, so all `n` returned prefixes are unaffected.
 
 use super::traits::Aggregator;
+use crate::obs;
 use crate::util::pool;
+
+/// Agg merges performed per executed tree level (both sweeps, both
+/// variants) — together with the `span!("scan.level")` timings this
+/// attributes level cost to work vs. dispatch overhead.
+fn level_merges() -> &'static obs::Counter {
+    static C: std::sync::OnceLock<obs::Counter> = std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        obs::counter(
+            "psm_scan_level_merges_total",
+            "Aggregator merges performed across Blelloch tree levels.",
+        )
+    })
+}
 
 /// Exclusive Blelloch prefixes of `items`: `out[t] = x_0 Agg ... Agg
 /// x_{t-1}` under π_Blelloch, `out[0] = e`. Sequential execution.
@@ -37,17 +51,25 @@ pub fn blelloch_scan<A: Aggregator>(
     }
     // Upsweep (reduction), bottom-up: parent v reads children 2v, 2v+1,
     // which live past the split point 2v — a disjoint borrow.
-    for v in (1..r).rev() {
-        let (head, tail) = tree.split_at_mut(2 * v);
-        op.agg_into(&tail[0], &tail[1], &mut head[v]);
+    {
+        let _sweep = crate::span!("scan.upsweep");
+        for v in (1..r).rev() {
+            let (head, tail) = tree.split_at_mut(2 * v);
+            op.agg_into(&tail[0], &tail[1], &mut head[v]);
+        }
+        level_merges().add((r - 1) as u64);
     }
     // Downsweep (prefix propagation), top-down, same split discipline.
     let mut pref: Vec<A::State> = Vec::with_capacity(2 * r);
     pref.resize(2 * r, op.identity());
-    for v in 1..r {
-        let (head, tail) = pref.split_at_mut(2 * v);
-        tail[0].clone_from(&head[v]);
-        op.agg_into(&head[v], &tree[2 * v], &mut tail[1]);
+    {
+        let _sweep = crate::span!("scan.downsweep");
+        for v in 1..r {
+            let (head, tail) = pref.split_at_mut(2 * v);
+            tail[0].clone_from(&head[v]);
+            op.agg_into(&head[v], &tree[2 * v], &mut tail[1]);
+        }
+        level_merges().add((r - 1) as u64);
     }
     // Move (not clone) the leaf prefixes out.
     pref.truncate(r + n);
@@ -93,6 +115,11 @@ where
     // slot where it lives.
     let mut level = r / 2;
     while level >= 1 {
+        // One span per executed tree level: the Θ(log n) step count and
+        // the per-level cost (work vs. spawn overhead) become visible
+        // in psm_span_{calls,ns}_total{span="scan.level"}.
+        let _lvl = crate::span!("scan.level");
+        level_merges().add(level as u64);
         let (upper, lower) = tree.split_at_mut(2 * level);
         let parents = &mut upper[level..];
         let children: &[A::State] = lower;
@@ -114,6 +141,8 @@ where
     pref.resize(2 * r, op.identity());
     let mut level = 1;
     while level < r {
+        let _lvl = crate::span!("scan.level");
+        level_merges().add(level as u64);
         let (upper, lower) = pref.split_at_mut(2 * level);
         let parents = &upper[level..];
         let children = &mut lower[..2 * level];

@@ -36,7 +36,89 @@
 //! `rust/tests/alloc_free.rs` pins the zero-allocation steady state
 //! with a counting global allocator.
 
+use std::sync::OnceLock;
+
 use super::traits::Aggregator;
+use crate::obs;
+
+/// Global scan-core metric families. Registered once; every scan
+/// instance flushes its locally-batched counts here (see [`ScanLocal`]).
+struct ScanObs {
+    pushes: obs::Counter,
+    merges: obs::Counter,
+    arena_hits: obs::Counter,
+    arena_misses: obs::Counter,
+    prefix_aggs: obs::Counter,
+    push_ns: obs::Counter,
+}
+
+fn scan_obs() -> &'static ScanObs {
+    static OBS: OnceLock<ScanObs> = OnceLock::new();
+    OBS.get_or_init(|| ScanObs {
+        pushes: obs::counter(
+            "psm_scan_pushes_total",
+            "Elements inserted into online binary-counter scans.",
+        ),
+        merges: obs::counter(
+            "psm_scan_merges_total",
+            "Carry-chain Aggregator::agg_into merges performed by push.",
+        ),
+        arena_hits: obs::counter(
+            "psm_scan_arena_hits_total",
+            "State buffers served from the recycle arena.",
+        ),
+        arena_misses: obs::counter(
+            "psm_scan_arena_misses_total",
+            "State buffers freshly allocated because the arena was cold.",
+        ),
+        prefix_aggs: obs::counter(
+            "psm_scan_prefix_aggs_total",
+            "Aggregator::agg_into calls spent in prefix folds.",
+        ),
+        push_ns: obs::counter(
+            "psm_scan_push_ns_total",
+            "Wall-clock nanoseconds inside OnlineScan::push \
+             (with psm_scan_pushes_total gives ns/elem).",
+        ),
+    })
+}
+
+/// Per-instance metric accumulator: plain `u64`s, so the per-push hot
+/// path touches no atomics at all. Flushed to the global registry at
+/// scan boundaries (`clear` / drop / `into_arena`) — the scan-core
+/// equivalent of thread-local accumulation, without the flush-loss
+/// hazards of real TLS.
+#[derive(Default)]
+struct ScanLocal {
+    pushes: u64,
+    merges: u64,
+    arena_hits: u64,
+    arena_misses: u64,
+    prefix_aggs: u64,
+    push_ns: u64,
+}
+
+impl ScanLocal {
+    fn flush(&mut self) {
+        if self.pushes == 0
+            && self.merges == 0
+            && self.arena_hits == 0
+            && self.arena_misses == 0
+            && self.prefix_aggs == 0
+            && self.push_ns == 0
+        {
+            return;
+        }
+        let o = scan_obs();
+        o.pushes.add(self.pushes);
+        o.merges.add(self.merges);
+        o.arena_hits.add(self.arena_hits);
+        o.arena_misses.add(self.arena_misses);
+        o.prefix_aggs.add(self.prefix_aggs);
+        o.push_ns.add(self.push_ns);
+        *self = ScanLocal::default();
+    }
+}
 
 /// Streaming prefix-scan state for one sequence.
 pub struct OnlineScan<'a, A: Aggregator> {
@@ -48,6 +130,10 @@ pub struct OnlineScan<'a, A: Aggregator> {
     /// Recycled state buffers: merge outputs are drawn from here and
     /// freed roots land here, so steady-state pushes never allocate.
     arena: Vec<A::State>,
+    /// Locally-batched metrics, flushed at clear/drop (never per push).
+    local: ScanLocal,
+    /// Whether to clock pushes (captured once from `obs::enabled()`).
+    timed: bool,
 }
 
 impl<'a, A: Aggregator> OnlineScan<'a, A> {
@@ -58,7 +144,14 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
     /// Start a scan pre-warmed with recycled buffers (typically the
     /// [`OnlineScan::into_arena`] of a previous sequence's scan).
     pub fn with_arena(op: &'a A, arena: Vec<A::State>) -> Self {
-        OnlineScan { op, roots: Vec::new(), count: 0, arena }
+        OnlineScan {
+            op,
+            roots: Vec::new(),
+            count: 0,
+            arena,
+            local: ScanLocal::default(),
+            timed: obs::enabled(),
+        }
     }
 
     /// Number of elements inserted so far.
@@ -85,7 +178,16 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
     /// [`OnlineScan::push`] — this closes the allocation-free loop for
     /// callers producing elements in place.
     pub fn take_buffer(&mut self) -> A::State {
-        self.arena.pop().unwrap_or_else(|| self.op.new_state())
+        match self.arena.pop() {
+            Some(s) => {
+                self.local.arena_hits += 1;
+                s
+            }
+            None => {
+                self.local.arena_misses += 1;
+                self.op.new_state()
+            }
+        }
     }
 
     /// Return an unused buffer to the arena.
@@ -95,6 +197,11 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
 
     /// Insert the next element (binary-carry merge chain).
     pub fn push(&mut self, x: A::State) {
+        let t0 = if self.timed {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
         let mut carry = x;
         let mut k = 0usize;
         loop {
@@ -107,14 +214,21 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
                     // is the older one — argument order matters for
                     // non-associative Agg). The output slab comes from
                     // the arena; both consumed blocks go back into it.
-                    let mut out = self
-                        .arena
-                        .pop()
-                        .unwrap_or_else(|| self.op.new_state());
+                    let mut out = match self.arena.pop() {
+                        Some(s) => {
+                            self.local.arena_hits += 1;
+                            s
+                        }
+                        None => {
+                            self.local.arena_misses += 1;
+                            self.op.new_state()
+                        }
+                    };
                     self.op.agg_into(&root, &carry, &mut out);
                     self.arena.push(root);
                     let spent = std::mem::replace(&mut carry, out);
                     self.arena.push(spent);
+                    self.local.merges += 1;
                     k += 1;
                 }
                 None => {
@@ -124,6 +238,10 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
             }
         }
         self.count += 1;
+        self.local.pushes += 1;
+        if let Some(t0) = t0 {
+            self.local.push_ns += t0.elapsed().as_nanos() as u64;
+        }
     }
 
     /// The current *inclusive* prefix: `x_0 Agg ... Agg x_{count-1}`
@@ -148,16 +266,27 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
     /// to `prefix()` — same fold order, same `agg_into` kernels.
     pub fn prefix_into(&mut self, out: &mut A::State) {
         self.op.identity_into(out);
-        let mut tmp = self.arena.pop().unwrap_or_else(|| self.op.new_state());
+        let mut tmp = match self.arena.pop() {
+            Some(s) => {
+                self.local.arena_hits += 1;
+                s
+            }
+            None => {
+                self.local.arena_misses += 1;
+                self.op.new_state()
+            }
+        };
         for root in self.roots.iter().rev().flatten() {
             self.op.agg_into(out, root, &mut tmp);
             std::mem::swap(out, &mut tmp);
+            self.local.prefix_aggs += 1;
         }
         self.arena.push(tmp);
     }
 
     /// Reset to the empty stream, recycling every root buffer into the
-    /// arena (capacity is retained for the next sequence).
+    /// arena (capacity is retained for the next sequence). Flushes the
+    /// locally-batched metrics to the global registry.
     pub fn clear(&mut self) {
         while let Some(slot) = self.roots.pop() {
             if let Some(s) = slot {
@@ -165,13 +294,21 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
             }
         }
         self.count = 0;
+        self.local.flush();
     }
 
     /// Tear the scan down, recovering all live buffers (roots + idle
-    /// arena) for a later [`OnlineScan::with_arena`].
+    /// arena) for a later [`OnlineScan::with_arena`]. (The Drop impl
+    /// flushes any remaining local metrics.)
     pub fn into_arena(mut self) -> Vec<A::State> {
         self.clear();
-        self.arena
+        std::mem::take(&mut self.arena)
+    }
+}
+
+impl<A: Aggregator> Drop for OnlineScan<'_, A> {
+    fn drop(&mut self) {
+        self.local.flush();
     }
 }
 
@@ -304,5 +441,32 @@ mod tests {
         online.clear();
         assert!(online.is_empty());
         assert_eq!(online.prefix(), 0);
+    }
+
+    /// Locally-batched scan metrics reach the global registry at scan
+    /// boundaries (deltas only: other tests run concurrently).
+    #[test]
+    fn metrics_flush_at_boundaries() {
+        let o = scan_obs();
+        if !o.pushes.is_live() {
+            return; // PSM_METRICS=0 in this run
+        }
+        let (p0, m0) = (o.pushes.get(), o.merges.get());
+        let op = AddOp;
+        let mut online = OnlineScan::new(&op);
+        for t in 0..64i64 {
+            online.push(t);
+        }
+        // Nothing global yet: counts are batched in the instance.
+        online.clear();
+        assert!(o.pushes.get() >= p0 + 64);
+        // 64 pushes perform 64 - popcount(64) = 63 carry merges.
+        assert!(o.merges.get() >= m0 + 63);
+        let h0 = o.arena_hits.get();
+        for t in 0..64i64 {
+            online.push(t); // warm arena now: merges recycle buffers
+        }
+        drop(online); // Drop flushes without an explicit clear()
+        assert!(o.arena_hits.get() > h0);
     }
 }

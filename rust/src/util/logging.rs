@@ -1,10 +1,17 @@
 //! Leveled stderr logger (replaces env_logger). Level comes from
 //! `PSM_LOG` (`error|warn|info|debug|trace`, default `info`) or
 //! [`set_level`]. Timestamps are seconds since process start.
+//!
+//! Output is human-readable by default; `PSM_LOG_JSON=1` (or
+//! [`set_json`]) switches every line to a single structured JSON
+//! object (`{"t":…,"level":"…","msg":"…"}`) so log collectors can
+//! ingest the stream without a bespoke parser.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -37,9 +44,20 @@ impl Level {
             Level::Trace => "TRACE",
         }
     }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
+static JSON: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
 static START: OnceLock<Instant> = OnceLock::new();
 
 fn level() -> u8 {
@@ -55,9 +73,39 @@ fn level() -> u8 {
     from_env as u8
 }
 
+fn json_mode() -> bool {
+    let v = JSON.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v != 0;
+    }
+    let on = matches!(
+        std::env::var("PSM_LOG_JSON").as_deref(),
+        Ok("1") | Ok("true") | Ok("on")
+    );
+    JSON.store(on as u8, Ordering::Relaxed);
+    on
+}
+
 /// Override the log level programmatically.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Force structured-JSON log lines on/off (overrides `PSM_LOG_JSON`).
+pub fn set_json(on: bool) {
+    JSON.store(on as u8, Ordering::Relaxed);
+}
+
+/// One structured log line. `Json::Str` handles escaping, so arbitrary
+/// message content (quotes, backslashes, control chars) stays valid
+/// JSON. Split out from [`log`] so tests can check the format without
+/// capturing stderr.
+fn json_line(t: f64, l: Level, args: std::fmt::Arguments<'_>) -> String {
+    format!(
+        "{{\"t\":{t:.3},\"level\":\"{}\",\"msg\":{}}}",
+        l.name(),
+        Json::Str(args.to_string())
+    )
 }
 
 /// Log a message at `l`. Prefer the `log_*!` macros.
@@ -65,7 +113,11 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if (l as u8) <= level() {
         let start = START.get_or_init(Instant::now);
         let t = start.elapsed().as_secs_f64();
-        eprintln!("[{t:9.3}s {}] {args}", l.tag());
+        if json_mode() {
+            eprintln!("{}", json_line(t, l, args));
+        } else {
+            eprintln!("[{t:9.3}s {}] {args}", l.tag());
+        }
     }
 }
 
@@ -89,6 +141,11 @@ macro_rules! log_debug {
     ($($t:tt)*) => { $crate::util::logging::log(
         $crate::util::logging::Level::Debug, format_args!($($t)*)) }
 }
+#[macro_export]
+macro_rules! log_trace {
+    ($($t:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Trace, format_args!($($t)*)) }
+}
 
 #[cfg(test)]
 mod tests {
@@ -106,6 +163,44 @@ mod tests {
         set_level(Level::Error);
         // No assertion on output; just exercise the path.
         log(Level::Debug, format_args!("should not print"));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn trace_macro_compiles_and_is_filtered() {
+        set_level(Level::Info);
+        crate::log_trace!("below threshold: {}", 42);
+        set_level(Level::Trace);
+        crate::log_trace!("at threshold");
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn json_lines_parse_and_escape() {
+        let line =
+            json_line(1.5, Level::Warn, format_args!("quote \" slash \\ {}", 7));
+        let parsed = Json::parse(&line).expect("json log line must parse");
+        let obj = match parsed {
+            Json::Obj(m) => m,
+            other => panic!("expected object, got {other}"),
+        };
+        assert_eq!(obj.get("level"), Some(&Json::Str("warn".into())));
+        assert_eq!(
+            obj.get("msg"),
+            Some(&Json::Str("quote \" slash \\ 7".into()))
+        );
+        match obj.get("t") {
+            Some(Json::Num(t)) => assert!((t - 1.5).abs() < 1e-9),
+            other => panic!("bad t: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_mode_toggle() {
+        set_json(true);
+        set_level(Level::Error);
+        log(Level::Debug, format_args!("suppressed either way"));
+        set_json(false);
         set_level(Level::Info);
     }
 }

@@ -52,11 +52,14 @@ impl Summary {
 }
 
 /// Percentile over a sample (sorts a copy; exact, not estimated).
+/// NaN-safe: `f64::total_cmp` gives a total order, so a NaN in the
+/// sample cannot panic the sort (negative NaNs sort below -inf,
+/// positive NaNs above +inf).
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     assert!(!samples.is_empty());
     assert!((0.0..=100.0).contains(&p));
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -65,6 +68,19 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     } else {
         let w = rank - lo as f64;
         s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
+/// Upper edge (exclusive) of log2 bucket `i`: values in
+/// `[2^i, 2^{i+1})` land in bucket `i`. The top bucket (i = 63)
+/// saturates to `u64::MAX` — `1u64 << 64` would overflow. Shared by
+/// [`LatencyHisto`] and the atomic histogram in [`crate::obs`], so
+/// both report identical quantile edges.
+pub fn bucket_upper_edge(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        1u64 << (i + 1)
     }
 }
 
@@ -111,7 +127,7 @@ impl LatencyHisto {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return 1u64 << (i + 1);
+                return bucket_upper_edge(i);
             }
         }
         u64::MAX
@@ -141,6 +157,34 @@ mod tests {
         assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_is_nan_safe() {
+        // A NaN in the sample must not panic the sort (the PR-6 argmax
+        // bug class); finite quantiles stay sensible because positive
+        // NaN sorts above +inf under total_cmp.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!((2.0..=3.0).contains(&p50), "p50 = {p50}");
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    /// Regression: the top bucket (i = 63) used to evaluate
+    /// `1u64 << 64` — overflow UB-adjacent shift. It must saturate.
+    #[test]
+    fn histo_top_bucket_saturates() {
+        assert_eq!(bucket_upper_edge(0), 2);
+        assert_eq!(bucket_upper_edge(62), 1u64 << 63);
+        assert_eq!(bucket_upper_edge(63), u64::MAX);
+        let mut h = LatencyHisto::new();
+        h.record_ns(u64::MAX);
+        h.record_ns(1u64 << 63);
+        assert_eq!(h.count(), 2);
+        // Both samples live in the top bucket; every quantile reports
+        // the saturated edge instead of panicking.
+        assert_eq!(h.quantile_ns(0.5), u64::MAX);
+        assert_eq!(h.quantile_ns(1.0), u64::MAX);
     }
 
     #[test]

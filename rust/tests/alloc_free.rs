@@ -10,6 +10,10 @@
 //! * The in-place (`agg_into` + arena + `prefix_into`) and owned
 //!   (`agg` + `prefix`) paths are **bit-identical**, against each other
 //!   and against the static Blelloch scan.
+//! * Metrics recording (`psm::obs` counters/gauges/summaries/spans and
+//!   the scan core's locally-batched flush) stays **zero-alloc** at
+//!   steady state even with `PSM_METRICS` enabled — observability must
+//!   not cost the discipline it observes.
 
 use psm::bench::{alloc_count as allocs, CountingAlloc};
 use psm::runtime::reference::ChunkSumOp;
@@ -39,6 +43,10 @@ fn main() {
     run("in_place_vs_owned_bit_identical",
         in_place_vs_owned_bit_identical);
     run("concat_in_place_matches_owned", concat_in_place_matches_owned);
+    run("metrics_recording_is_allocation_free",
+        metrics_recording_is_allocation_free);
+    run("scan_metric_flush_is_allocation_free",
+        scan_metric_flush_is_allocation_free);
 
     if failed > 0 {
         eprintln!("{failed} alloc_free tests failed");
@@ -124,6 +132,75 @@ fn in_place_vs_owned_bit_identical() {
         y.copy_from_slice(ch);
         inplace.push(y);
     }
+}
+
+/// Recording through warm `obs` handles — counter add, gauge update,
+/// summary record, span enter/drop — performs zero heap allocations.
+/// (Registration itself allocates; it happens once, before the
+/// measured region, which is exactly the registry's contract.)
+fn metrics_recording_is_allocation_free() {
+    use psm::obs;
+    let c = obs::counter("alloc_free_probe_total", "alloc-free probe");
+    let g = obs::gauge("alloc_free_probe_gauge", "alloc-free probe");
+    let s = obs::summary("alloc_free_probe_ns", "alloc-free probe");
+    let h = obs::span_handle("alloc_free.probe");
+    // Warm every path once.
+    c.inc();
+    g.set(1);
+    s.record(3);
+    drop(h.enter());
+    if !obs::enabled() {
+        return; // PSM_METRICS=0: handles are no-ops, nothing to pin
+    }
+    let a0 = allocs();
+    for i in 0..10_000u64 {
+        c.add(i & 1);
+        g.add(1);
+        s.record(i | 1);
+        let _sp = h.enter();
+    }
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta, 0,
+        "metric recording performed {delta} heap allocations over 10k \
+         iterations"
+    );
+}
+
+/// The scan core's locally-batched metrics flush (at `clear`) is also
+/// allocation-free once the global families are registered — so a
+/// steady-state *sequence* loop (push…push, clear, repeat) stays at
+/// zero allocations with metrics enabled.
+fn scan_metric_flush_is_allocation_free() {
+    let (c, d) = (8usize, 6usize);
+    let op = ChunkSumOp { c, d };
+    let n = 256u64;
+    let mut scan = OnlineScan::new(&op);
+    // Two warmup cycles: the first brings arena/roots to their
+    // high-water marks and registers the scan metric families via the
+    // first flush; the second proves the trajectory repeats.
+    for _ in 0..2 {
+        for t in 0..n {
+            let mut y = scan.take_buffer();
+            y.resize(c * d, 0.0);
+            fill(&mut y, t);
+            scan.push(y);
+        }
+        scan.clear();
+    }
+    let a0 = allocs();
+    for t in 0..n {
+        let mut y = scan.take_buffer();
+        y.resize(c * d, 0.0);
+        fill(&mut y, t);
+        scan.push(y);
+    }
+    scan.clear(); // includes the metrics flush
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta, 0,
+        "push cycle + metrics flush performed {delta} heap allocations"
+    );
 }
 
 /// The `ConcatOp` in-place merge (`agg_into` with `String` reuse) is

@@ -1,0 +1,319 @@
+//! End-to-end observability checks (harness = false; exits non-zero on
+//! failure):
+//!
+//! * the `span!` macro accumulates calls/ns through the public API,
+//! * driving the scan core moves the `psm_scan_*` families (flushed at
+//!   clear/drop boundaries) and the Blelloch level counters,
+//! * a faulted session run moves the session retry/fault families in
+//!   lockstep with the session's own `SessionMetrics`,
+//! * the TCP server answers `METRICS` with valid Prometheus text
+//!   exposition (terminated by `# EOF`) covering >= 12 families across
+//!   scan core, sessions, faults and the executor — and `STATS` grows a
+//!   `queue=` field,
+//! * JSON snapshots (on-demand and the periodic `PSM_METRICS_JSON`
+//!   writer) parse and carry the registered families.
+//!
+//! Env knobs are set at the top of `main` while the process is still
+//! single-threaded. Uses port 7461 (chaos_soak owns 7457/7458).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use psm::coordinator::server;
+use psm::coordinator::{PsmSession, RetryPolicy};
+use psm::obs;
+use psm::runtime::reference::ChunkSumOp;
+use psm::runtime::{FaultConfig, ParamStore, Runtime};
+use psm::scan::{blelloch_scan, OnlineScan};
+use psm::util::json::Json;
+
+fn main() {
+    // While single-threaded: force metrics on (the suite is pointless
+    // without them) and point the periodic writer at a temp file with a
+    // fast interval. The writer thread starts lazily with the registry.
+    std::env::set_var("PSM_METRICS", "1");
+    let snap_path = std::env::temp_dir()
+        .join(format!("psm_obs_e2e_{}.json", std::process::id()));
+    std::env::set_var("PSM_METRICS_JSON", &snap_path);
+    std::env::set_var("PSM_METRICS_JSON_MS", "50");
+
+    let mut failed = 0;
+    let mut run = |name: &str, f: &dyn Fn()| {
+        let t0 = std::time::Instant::now();
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+            .is_ok();
+        println!(
+            "test obs_e2e::{name} ... {} ({:.1}s)",
+            if ok { "ok" } else { "FAILED" },
+            t0.elapsed().as_secs_f64()
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("span_macro_accumulates", &span_macro_accumulates);
+    run("scan_workload_moves_scan_families", &scan_workload_moves_scan_families);
+    run("faulted_session_moves_retry_and_fault_families", &|| {
+        faulted_session_moves_retry_and_fault_families()
+    });
+    run("tcp_metrics_exposition", &tcp_metrics_exposition);
+    run("json_snapshot_on_demand", &json_snapshot_on_demand);
+    run("periodic_json_writer_emits", &|| {
+        periodic_json_writer_emits(&snap_path)
+    });
+
+    std::fs::remove_file(&snap_path).ok();
+    std::env::remove_var("PSM_METRICS_JSON");
+    std::env::remove_var("PSM_METRICS_JSON_MS");
+
+    if failed > 0 {
+        eprintln!("{failed} obs_e2e tests failed");
+        std::process::exit(1);
+    }
+}
+
+/// The public `span!` macro: three scopes -> three completed calls and
+/// a non-zero ns total, visible through a fresh handle to the name.
+fn span_macro_accumulates() {
+    let before = obs::span_handle("obs_e2e.macro").calls();
+    for _ in 0..3 {
+        let _g = psm::span!("obs_e2e.macro");
+        std::hint::black_box(1 + 1);
+    }
+    let h = obs::span_handle("obs_e2e.macro");
+    assert_eq!(h.calls(), before + 3);
+    assert!(h.total_ns() > 0 || !obs::enabled());
+}
+
+/// Drive an OnlineScan trajectory and a Blelloch scan; the scan-core
+/// counter families must move by the binary-counter arithmetic
+/// (64 pushes -> 64 - popcount(64) = 63 carry merges), flushed when the
+/// scan is dropped. The Blelloch sweeps register their spans too.
+fn scan_workload_moves_scan_families() {
+    let pushes = obs::counter("psm_scan_pushes_total", "probe");
+    let merges = obs::counter("psm_scan_merges_total", "probe");
+    let levels = obs::counter("psm_scan_level_merges_total", "probe");
+    let (p0, m0, l0) = (pushes.get(), merges.get(), levels.get());
+
+    let op = ChunkSumOp { c: 4, d: 4 };
+    {
+        let mut scan = OnlineScan::new(&op);
+        let mut pbuf: Vec<f32> = Vec::new();
+        for t in 0..64u64 {
+            let mut y = scan.take_buffer();
+            y.resize(16, 0.0);
+            for (i, v) in y.iter_mut().enumerate() {
+                *v = ((t as usize * 3 + i) % 7) as f32;
+            }
+            scan.push(y);
+        }
+        scan.prefix_into(&mut pbuf);
+        assert!(pbuf.iter().all(|x| x.is_finite()));
+    } // drop flushes the locally-batched counts
+
+    assert!(pushes.get() >= p0 + 64, "pushes: {} -> {}", p0, pushes.get());
+    assert!(merges.get() >= m0 + 63, "merges: {} -> {}", m0, merges.get());
+
+    let up0 = obs::span_handle("scan.upsweep").calls();
+    let chunks: Vec<Vec<f32>> =
+        (0..32).map(|t| vec![(t % 5) as f32; 16]).collect();
+    let _ = blelloch_scan(&op, &chunks);
+    assert!(levels.get() > l0, "level merges must move");
+    assert!(
+        obs::span_handle("scan.upsweep").calls() > up0,
+        "upsweep span must record"
+    );
+}
+
+/// A session under deterministic transient injection (same schedule the
+/// chaos soak pins): the global retry counter moves in lockstep with
+/// the session's own metrics, the fault decorator counts its
+/// injections by kind, and replay depth gets recorded.
+fn faulted_session_moves_retry_and_fault_families() {
+    let tokens_c = obs::counter("psm_session_tokens_total", "probe");
+    let retries_c = obs::counter("psm_session_retries_total", "probe");
+    let calls_c = obs::counter("psm_fault_calls_total", "probe");
+    let transient_c =
+        obs::counter_kv("psm_fault_injections_total", "probe", "kind", "transient");
+    let replay = obs::summary("psm_session_replay_depth", "probe");
+    let (t0, r0, c0, i0, d0) = (
+        tokens_c.get(),
+        retries_c.get(),
+        calls_c.get(),
+        transient_c.get(),
+        replay.count(),
+    );
+
+    let model = "psm_s5";
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 11).unwrap();
+    let tokens: Vec<i32> = (0..40).map(|t| (t % 100) as i32).collect();
+    let cfg = FaultConfig {
+        seed: 21,
+        transient_p: 0.2,
+        ..Default::default()
+    };
+    let frt = Runtime::reference().with_faults(cfg);
+    let mut sess = PsmSession::new(&frt, model, &params).unwrap();
+    sess.set_retry_policy(RetryPolicy {
+        max_attempts: 8,
+        base_backoff_ms: 0,
+        max_backoff_ms: 0,
+        retry_non_finite: true,
+    });
+    sess.logits_stream(&tokens).unwrap();
+    assert!(sess.metrics.retries > 0, "schedule must actually fire");
+
+    assert_eq!(
+        tokens_c.get() - t0,
+        tokens.len() as u64,
+        "one token counted per push"
+    );
+    assert_eq!(
+        retries_c.get() - r0,
+        sess.metrics.retries,
+        "global retry counter mirrors the session's metrics"
+    );
+    assert!(calls_c.get() > c0, "fault decorator must count calls");
+    let injected = transient_c.get() - i0;
+    assert_eq!(
+        injected,
+        frt.fault_backend().unwrap().counts().transient,
+        "injections-by-kind mirrors FaultStats"
+    );
+    assert!(replay.count() > d0, "replay depth must be recorded");
+}
+
+fn send_line(addr: &str, lines: &[&str]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut replies = Vec::new();
+    for l in lines {
+        writeln!(w, "{l}").unwrap();
+        let mut reply = String::new();
+        r.read_line(&mut reply).unwrap();
+        replies.push(reply.trim_end().to_string());
+    }
+    let _ = writeln!(w, "QUIT");
+    replies
+}
+
+/// Fetch the multi-line `METRICS` reply, reading until the `# EOF`
+/// framing line.
+fn fetch_metrics(addr: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    writeln!(w, "METRICS").unwrap();
+    let mut text = String::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line).unwrap() == 0 {
+            panic!("connection closed before # EOF; got:\n{text}");
+        }
+        if line.trim_end() == "# EOF" {
+            break;
+        }
+        text.push_str(&line);
+    }
+    let _ = writeln!(w, "QUIT");
+    text
+}
+
+/// The serving front end: after one GEN, `METRICS` answers valid
+/// exposition covering the whole catalog (>= 12 families across scan /
+/// session / fault / executor — earlier tests in this process populated
+/// the cross-layer families) and `STATS` reports the queue gauge.
+fn tcp_metrics_exposition() {
+    let model = "psm_s5";
+    let addr = "127.0.0.1:7461";
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 12).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let stop_driver = stop.clone();
+    let driver = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(200));
+        let reply = send_line(addr, &["GEN 4 1 2 3"]).remove(0);
+        assert!(reply.starts_with("OK "), "generate failed: {reply:?}");
+
+        let text = fetch_metrics(addr);
+        let fams = obs::parse_exposition(&text)
+            .expect("METRICS reply must be valid exposition");
+        assert!(
+            fams.len() >= 12,
+            "only {} families exposed: {:?}",
+            fams.len(),
+            fams.keys().collect::<Vec<_>>()
+        );
+        for required in [
+            "psm_scan_pushes_total",
+            "psm_scan_merges_total",
+            "psm_span_calls_total",
+            "psm_span_ns_total",
+            "psm_session_tokens_total",
+            "psm_session_retries_total",
+            "psm_fault_calls_total",
+            "psm_fault_injections_total",
+            "psm_executor_queue_depth",
+            "psm_executor_sessions",
+            "psm_executor_tokens_total",
+            "psm_executor_request_ns",
+        ] {
+            assert!(
+                fams.contains_key(required),
+                "family {required} missing from METRICS exposition"
+            );
+        }
+        // Executor families carry real samples from the GEN above.
+        assert!(fams["psm_executor_request_ns"] >= 5, "summary samples");
+
+        let stats = send_line(addr, &["STATS"]).remove(0);
+        assert!(stats.starts_with("OK tokens="), "stats reply: {stats:?}");
+        assert!(stats.contains("queue="), "extended stats: {stats:?}");
+
+        stop_driver.store(true, Ordering::Relaxed);
+    });
+
+    server::serve(&rt, model, &params, addr, stop).unwrap();
+    driver.join().expect("driver");
+}
+
+/// On-demand snapshot: writes atomically, parses as JSON, carries the
+/// schema tag and the families earlier tests registered.
+fn json_snapshot_on_demand() {
+    let path = std::env::temp_dir()
+        .join(format!("psm_obs_snap_{}.json", std::process::id()));
+    obs::write_json_snapshot(&path).expect("snapshot write");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = Json::parse(&text).expect("snapshot must parse");
+    assert_eq!(
+        parsed.get("schema").unwrap().as_str().unwrap(),
+        "psm.metrics.v1"
+    );
+    let metrics = parsed.get("metrics").unwrap();
+    assert!(metrics.opt("psm_scan_pushes_total").is_some());
+    assert!(metrics.opt("psm_session_retries_total").is_some());
+    assert!(metrics.opt("psm_executor_request_ns").is_some());
+    std::fs::remove_file(&path).ok();
+}
+
+/// The periodic writer (armed via `PSM_METRICS_JSON` at the top of
+/// `main`, 50ms interval) must have produced a parseable snapshot.
+fn periodic_json_writer_emits(path: &std::path::Path) {
+    for _ in 0..100 {
+        if path.exists() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(path.exists(), "periodic writer never wrote {}", path.display());
+    let text = std::fs::read_to_string(path).unwrap();
+    let parsed = Json::parse(&text).expect("periodic snapshot must parse");
+    assert!(parsed.get("metrics").is_ok(), "snapshot has metrics object");
+}
