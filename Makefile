@@ -3,7 +3,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench chaos obs artifacts clean
+.PHONY: build test bench bench-check chaos obs artifacts clean
 
 build:
 	cargo build --release
@@ -17,6 +17,14 @@ test:
 bench:
 	cargo bench --bench scan_hotpath
 	cargo bench --bench fig6_latency
+
+# Perf-regression gate: diff the fresh BENCH_scan.json against the
+# checked-in bench_baseline.json; >25% ns/elem regression (or any
+# steady-state allocation) fails. Re-baseline to this machine with
+# `cargo run --release --bin bench-check -- --write-baseline`.
+bench-check:
+	cargo bench --bench scan_hotpath -- --quick
+	cargo run --release --bin bench-check
 
 # Fault-injection soak + recovery bench (writes BENCH_chaos.json).
 chaos:

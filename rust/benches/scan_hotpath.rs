@@ -1,16 +1,18 @@
 //! L3 hot-path microbenchmarks (the §Perf working set): pure-rust scan
 //! throughput — sequential vs Blelloch vs parallel Blelloch vs online —
 //! over the affine monoid at realistic state sizes, the symbolic
-//! overhead of the counter itself, and the headline before/after of the
-//! allocation-free scan core: the `ChunkSumOp` (c=32, d=48) online
-//! scan, owned-`agg` path (the pre-PR behaviour: one heap allocation
-//! per merge and per prefix fold step) versus the in-place
-//! `agg_into` + arena path.
+//! overhead of the counter itself, and the headline three-way history
+//! of the scan core on `ChunkSumOp` (c=32, d=48): owned `agg` (pre-PR 5,
+//! one heap allocation per merge and fold step) vs scalar
+//! `agg_into` + arena (PR 5) vs the tiled/SIMD kernels with the fused
+//! `fold_roots_into` prefix (current). A kernel roofline section
+//! reports ns/elem and effective GB/s for each slice kernel at several
+//! (c, d) working-set points.
 //!
 //! A counting global allocator measures allocs/elem directly; results
-//! are written to `BENCH_scan.json` (ns/elem, allocs/elem,
-//! before/after, speedup) so the repo's perf trajectory is
-//! machine-readable.
+//! are written to `BENCH_scan.json` (ns/elem, allocs/elem, GB/s,
+//! speedups) so the repo's perf trajectory is machine-readable —
+//! `make bench-check` diffs it against `bench_baseline.json`.
 //!
 //! Run: `cargo bench --bench scan_hotpath` (or `make bench`).
 
@@ -23,6 +25,8 @@ use psm::scan::traits::Aggregator;
 use psm::scan::{
     blelloch_scan, blelloch_scan_parallel, sequential_scan, OnlineScan,
 };
+use psm::tensor::Tensor;
+use psm::util::kernels;
 use psm::util::prng::Rng;
 
 #[global_allocator]
@@ -60,9 +64,117 @@ impl Aggregator for OwnedChunkSumOp {
     }
 }
 
+/// The PR 5 `ChunkSumOp`: in-place merges through the *scalar* slice
+/// kernel and the default whole-state ping-pong prefix fold — i.e. the
+/// allocation-free core as it stood before the tiled/SIMD kernels and
+/// the fused `fold_roots_into` override. The gap between this and the
+/// real `ChunkSumOp` isolates what the kernel rewrite bought.
+struct Pr5ChunkSumOp {
+    c: usize,
+    d: usize,
+}
+
+impl Pr5ChunkSumOp {
+    fn as_real(&self) -> ChunkSumOp {
+        ChunkSumOp { c: self.c, d: self.d }
+    }
+}
+
+impl Aggregator for Pr5ChunkSumOp {
+    type State = Vec<f32>;
+
+    fn identity(&self) -> Vec<f32> {
+        vec![0.0; self.c * self.d]
+    }
+
+    fn agg(&self, l: &Vec<f32>, r: &Vec<f32>) -> Vec<f32> {
+        let mut out = vec![0.0; self.c * self.d];
+        self.as_real().agg_slices_scalar(l, r, &mut out);
+        out
+    }
+
+    fn agg_into(&self, l: &Vec<f32>, r: &Vec<f32>, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.c * self.d, 0.0);
+        self.as_real().agg_slices_scalar(l, r, out);
+    }
+
+    fn identity_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.c * self.d, 0.0);
+    }
+
+    fn claims_associative(&self) -> bool {
+        true
+    }
+}
+
 struct PathStats {
     ns_per_elem: f64,
     allocs_per_elem: f64,
+}
+
+/// One steady-state pass of the in-place online scan: arena-recycled
+/// chunk buffers, `prefix_into` after every push. Generic over the
+/// aggregator so the PR 5 scalar baseline and the current tiled/SIMD
+/// op run on the byte-identical harness.
+fn inplace_pass<A: Aggregator<State = Vec<f32>>>(
+    op: &A,
+    chunks: &[Vec<f32>],
+    cd: usize,
+    arena: &mut Vec<Vec<f32>>,
+    pbuf: &mut Vec<f32>,
+) {
+    let mut s = OnlineScan::with_arena(op, std::mem::take(arena));
+    for ch in chunks {
+        let mut y = s.take_buffer();
+        y.resize(cd, 0.0);
+        y.copy_from_slice(ch);
+        s.push(y);
+        s.prefix_into(pbuf);
+        black_box(&*pbuf);
+    }
+    *arena = s.into_arena();
+}
+
+/// Warm-up + timed passes + alloc count for one in-place variant.
+fn measure_inplace<A: Aggregator<State = Vec<f32>>>(
+    bench: &Bencher,
+    name: &str,
+    op: &A,
+    chunks: &[Vec<f32>],
+    cd: usize,
+) -> PathStats {
+    let n = chunks.len();
+    let mut arena: Vec<Vec<f32>> = Vec::new();
+    let mut pbuf: Vec<f32> = Vec::new();
+    inplace_pass(op, chunks, cd, &mut arena, &mut pbuf);
+    let r = bench.run(name, || {
+        inplace_pass(op, chunks, cd, &mut arena, &mut pbuf);
+    });
+    let a0 = alloc_count();
+    inplace_pass(op, chunks, cd, &mut arena, &mut pbuf);
+    let allocs = (alloc_count() - a0) as f64 / n as f64;
+    PathStats { ns_per_elem: r.mean_ns / n as f64, allocs_per_elem: allocs }
+}
+
+/// Final prefix (after all pushes) of the in-place path, for the
+/// bit-exactness cross-checks.
+fn inplace_final<A: Aggregator<State = Vec<f32>>>(
+    op: &A,
+    chunks: &[Vec<f32>],
+    cd: usize,
+) -> Vec<f32> {
+    let mut s = OnlineScan::new(op);
+    for ch in chunks {
+        let mut y = s.take_buffer();
+        y.resize(cd, 0.0);
+        y.copy_from_slice(ch);
+        s.push(y);
+    }
+    let mut p = Vec::new();
+    s.prefix_into(&mut p);
+    p
 }
 
 fn main() {
@@ -113,73 +225,126 @@ fn main() {
         s.prefix()
     };
 
+    let pr5_op = Pr5ChunkSumOp { c, d };
+    let pr5 = measure_inplace(&bench, "pr5", &pr5_op, &chunks, c * d);
     let op = ChunkSumOp { c, d };
-    let mut arena: Vec<Vec<f32>> = Vec::new();
-    let mut pbuf: Vec<f32> = Vec::new();
-    let run_inplace = |arena: &mut Vec<Vec<f32>>, pbuf: &mut Vec<f32>| {
-        let mut s = OnlineScan::with_arena(&op, std::mem::take(arena));
-        for ch in &chunks {
-            let mut y = s.take_buffer();
-            y.resize(c * d, 0.0);
-            y.copy_from_slice(ch);
-            s.push(y);
-            s.prefix_into(pbuf);
-            black_box(&*pbuf);
-        }
-        *arena = s.into_arena();
-    };
-    // Warm the arena once so the timed passes are steady-state.
-    run_inplace(&mut arena, &mut pbuf);
-    let r_after = bench.run("in-place", || {
-        run_inplace(&mut arena, &mut pbuf);
-    });
-    let after_allocs = {
-        let a0 = alloc_count();
-        run_inplace(&mut arena, &mut pbuf);
-        (alloc_count() - a0) as f64 / n as f64
-    };
-    // Bit-exactness of the in-place path against the owned fold.
-    {
-        let mut s = OnlineScan::with_arena(&op, std::mem::take(&mut arena));
-        for ch in &chunks {
-            let mut y = s.take_buffer();
-            y.resize(c * d, 0.0);
-            y.copy_from_slice(ch);
-            s.push(y);
-        }
-        s.prefix_into(&mut pbuf);
-        assert_eq!(
-            before_final, pbuf,
-            "in-place scan diverged from the owned path"
-        );
-        arena = s.into_arena();
-    }
-    drop(arena);
+    let after = measure_inplace(&bench, "in-place", &op, &chunks, c * d);
+    // Bit-exactness: owned fold == PR 5 scalar in-place == tiled/SIMD
+    // fused in-place.
+    let pr5_final = inplace_final(&pr5_op, &chunks, c * d);
+    let after_final = inplace_final(&op, &chunks, c * d);
+    assert_eq!(
+        before_final, pr5_final,
+        "PR 5 scalar in-place scan diverged from the owned path"
+    );
+    assert_eq!(
+        before_final, after_final,
+        "tiled/SIMD in-place scan diverged from the owned path"
+    );
 
     let before = PathStats {
         ns_per_elem: r_before.mean_ns / n as f64,
         allocs_per_elem: before_allocs,
     };
-    let after = PathStats {
-        ns_per_elem: r_after.mean_ns / n as f64,
-        allocs_per_elem: after_allocs,
-    };
     let speedup = before.ns_per_elem / after.ns_per_elem;
+    let vs_pr5 = pr5.ns_per_elem / after.ns_per_elem;
 
     println!("## ChunkSumOp online scan (c={c}, d={d}, n={n})");
     let mut table = Table::new(&["path", "ns/elem", "allocs/elem"]);
     table.row(&[
-        "owned agg (pre-PR)".into(),
+        "owned agg (pre-PR5)".into(),
         format!("{:.0}", before.ns_per_elem),
         format!("{:.2}", before.allocs_per_elem),
     ]);
     table.row(&[
-        "agg_into + arena".into(),
+        "scalar agg_into + arena (PR 5)".into(),
+        format!("{:.0}", pr5.ns_per_elem),
+        format!("{:.2}", pr5.allocs_per_elem),
+    ]);
+    table.row(&[
+        "tiled/SIMD + fused fold".into(),
         format!("{:.0}", after.ns_per_elem),
         format!("{:.2}", after.allocs_per_elem),
     ]);
     table.print();
-    println!("speedup: {speedup:.2}x\n");
+    println!(
+        "speedup vs owned: {speedup:.2}x   vs PR 5: {vs_pr5:.2}x   \
+         (simd_active: {})\n",
+        kernels::simd_active()
+    );
+
+    // --- kernel roofline: ns/elem and effective GB/s for each slice
+    // kernel at several (c, d) working-set points. Bytes-per-call model
+    // counts the slices actually streamed: add_into reads a+b and
+    // writes out (3·len·4 B); axpy reads acc+x and writes acc
+    // (3·len·4 B); agg_slices reads l's tail row + all of r and writes
+    // out ((2cd + d)·4 B); matmul_into ([c,d]×[d,d]) streams a, b and
+    // the output ((2cd + d²)·4 B, compute-bound as d grows).
+    println!("\n## kernel roofline (simd_active: {})", kernels::simd_active());
+    let mut table =
+        Table::new(&["kernel", "c", "d", "ns/elem", "GB/s"]);
+    let mut kernel_rows: Vec<(String, usize, usize, f64, f64)> = Vec::new();
+    let iters = if quick { 64usize } else { 512 };
+    for &(c, d) in &[(32usize, 48usize), (16, 32), (64, 64)] {
+        let len = c * d;
+        let mut rng = Rng::new(0xBEEF ^ (c * 1000 + d) as u64);
+        let a: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; len];
+        let op = ChunkSumOp { c, d };
+
+        let mut record = |name: &str,
+                          bytes_per_call: f64,
+                          r: psm::bench::BenchResult| {
+            let per_call = r.mean_ns / iters as f64;
+            let ns_elem = per_call / len as f64;
+            let gbps = bytes_per_call / per_call; // B/ns == GB/s
+            table.row(&[
+                name.into(),
+                c.to_string(),
+                d.to_string(),
+                format!("{ns_elem:.2}"),
+                format!("{gbps:.1}"),
+            ]);
+            kernel_rows.push((name.into(), c, d, ns_elem, gbps));
+        };
+
+        let r = bench.run("agg_slices", || {
+            for _ in 0..iters {
+                op.agg_slices(&a, &b, &mut out);
+                black_box(&out[0]);
+            }
+        });
+        record("agg_slices", ((2 * len + d) * 4) as f64, r);
+
+        let r = bench.run("add_into", || {
+            for _ in 0..iters {
+                kernels::add_into(&mut out, &a, &b);
+                black_box(&out[0]);
+            }
+        });
+        record("add_into", (3 * len * 4) as f64, r);
+
+        let r = bench.run("axpy", || {
+            for _ in 0..iters {
+                kernels::axpy(&mut out, 1.000001, &a);
+                black_box(&out[0]);
+            }
+        });
+        record("axpy", (3 * len * 4) as f64, r);
+
+        let ta = Tensor::from_fn(&[c, d], |_| rng.normal() as f32);
+        let tb = Tensor::from_fn(&[d, d], |_| rng.normal() as f32);
+        let mut tout = Tensor::zeros(&[c, d]);
+        let r = bench.run("matmul_into", || {
+            for _ in 0..iters {
+                ta.matmul_into(&tb, &mut tout);
+                black_box(&tout);
+            }
+        });
+        record("matmul_into", ((2 * len + d * d) * 4) as f64, r);
+    }
+    table.print();
 
     // --- raw counter overhead (i64 add: measures the data structure,
     // not the operator)
@@ -254,6 +419,10 @@ fn main() {
     let mut json = String::new();
     json.push_str("{\n");
     json.push_str("  \"bench\": \"scan_hotpath\",\n");
+    json.push_str(&format!(
+        "  \"simd_active\": {},\n",
+        kernels::simd_active()
+    ));
     json.push_str("  \"chunk_sum_online\": {\n");
     json.push_str(&format!(
         "    \"c\": {c}, \"d\": {d}, \"n\": {n},\n"
@@ -264,12 +433,27 @@ fn main() {
         before.ns_per_elem, before.allocs_per_elem
     ));
     json.push_str(&format!(
+        "    \"pr5_inplace\": {{\"ns_per_elem\": {:.1}, \
+         \"allocs_per_elem\": {:.2}}},\n",
+        pr5.ns_per_elem, pr5.allocs_per_elem
+    ));
+    json.push_str(&format!(
         "    \"after\": {{\"ns_per_elem\": {:.1}, \
          \"allocs_per_elem\": {:.2}}},\n",
         after.ns_per_elem, after.allocs_per_elem
     ));
-    json.push_str(&format!("    \"speedup\": {speedup:.2}\n"));
+    json.push_str(&format!("    \"speedup\": {speedup:.2},\n"));
+    json.push_str(&format!("    \"vs_pr5_speedup\": {vs_pr5:.2}\n"));
     json.push_str("  },\n");
+    json.push_str("  \"kernels\": [\n");
+    for (i, (name, c, d, ns_elem, gbps)) in kernel_rows.iter().enumerate() {
+        let sep = if i + 1 == kernel_rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{name}\", \"c\": {c}, \"d\": {d}, \
+             \"ns_per_elem\": {ns_elem:.3}, \"gbps\": {gbps:.2}}}{sep}\n"
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"counter_overhead_i64\": [\n");
     for (i, (n, online_ns, blelloch_ns)) in
         counter_rows.iter().enumerate()

@@ -77,20 +77,12 @@ impl Action {
     pub fn apply_into(&self, s: &Tensor, out: &mut Tensor) {
         match self {
             Action::Identity => out.copy_from(s),
-            Action::Scalar(a) => {
-                let a = *a;
-                out.fill_map(s, |x| x * a);
-            }
-            Action::ColDiag(d) => {
-                assert_eq!(d.len(), s.shape()[1]);
-                let n = d.len();
-                out.fill_map_indexed(s, |i, x| x * d[i % n]);
-            }
-            Action::Elem(t) => {
-                assert_eq!(s.shape(), t.shape(), "shape mismatch");
-                let td = t.data();
-                out.fill_map_indexed(s, |i, x| x * td[i]);
-            }
+            // Gates are elementwise products, which are single-rounded
+            // IEEE ops on every kernel path — bit-identical to the
+            // owned `scale`/`scale_cols`/`hadamard` loops.
+            Action::Scalar(a) => out.scale_into(s, *a),
+            Action::ColDiag(d) => out.scale_cols_into(s, d),
+            Action::Elem(t) => out.mul_elem_into(s, t),
             Action::RightMul(m) => s.matmul_into(m, out),
         }
     }

@@ -1,0 +1,207 @@
+//! Perf-regression gate: compare the freshly written `BENCH_scan.json`
+//! (produced by `cargo bench --bench scan_hotpath`) against the
+//! checked-in `bench_baseline.json` and exit non-zero when any tracked
+//! ns/elem figure regressed by more than 25%, or when the in-place
+//! scan path allocated on the steady state.
+//!
+//! The baseline records deliberately *loose* upper bounds so the gate
+//! catches order-of-magnitude regressions (a kernel falling off its
+//! vector path, the fused fold reverting to the ping-pong, an
+//! allocation sneaking back into the hot loop) without flaking on
+//! machine-to-machine variance. Tighten it to your machine with
+//! `cargo run --release --bin bench-check -- --write-baseline`.
+//!
+//! Run via `make bench-check` (which runs the bench first).
+
+use psm::util::json::Json;
+
+const REGRESSION_FACTOR: f64 = 1.25;
+
+/// Tracked metrics: (human label, path through both JSON documents).
+/// Kernel entries are matched by (kernel, c, d) instead.
+fn scalar_metrics() -> Vec<(&'static str, Vec<&'static str>)> {
+    vec![
+        (
+            "chunk_sum_online.after.ns_per_elem",
+            vec!["chunk_sum_online", "after", "ns_per_elem"],
+        ),
+        (
+            "chunk_sum_online.pr5_inplace.ns_per_elem",
+            vec!["chunk_sum_online", "pr5_inplace", "ns_per_elem"],
+        ),
+    ]
+}
+
+fn lookup<'a>(doc: &'a Json, path: &[&str]) -> Option<&'a Json> {
+    let mut cur = doc;
+    for key in path {
+        cur = cur.opt(key)?;
+    }
+    Some(cur)
+}
+
+fn check(
+    failures: &mut Vec<String>,
+    checked: &mut usize,
+    label: &str,
+    base: f64,
+    cur: f64,
+) {
+    *checked += 1;
+    let limit = base * REGRESSION_FACTOR;
+    let verdict = if cur > limit { "FAIL" } else { "ok" };
+    println!(
+        "  {verdict:>4}  {label}: {cur:.3} vs baseline {base:.3} \
+         (limit {limit:.3})"
+    );
+    if cur > limit {
+        failures.push(format!(
+            "{label}: {cur:.3} ns/elem exceeds baseline {base:.3} \
+             by more than {:.0}%",
+            (REGRESSION_FACTOR - 1.0) * 100.0
+        ));
+    }
+}
+
+fn main() {
+    let write_baseline =
+        std::env::args().any(|a| a == "--write-baseline");
+
+    let current_path = psm::bench::artifact_path("BENCH_scan.json");
+    let baseline_path = psm::bench::artifact_path("bench_baseline.json");
+
+    let current_text = match std::fs::read_to_string(&current_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!(
+                "bench-check: cannot read {} ({e}); run `make bench` first",
+                current_path.display()
+            );
+            std::process::exit(2);
+        }
+    };
+    let current = Json::parse(&current_text)
+        .expect("BENCH_scan.json is not valid JSON");
+
+    if write_baseline {
+        std::fs::write(&baseline_path, &current_text)
+            .expect("write bench_baseline.json");
+        println!(
+            "bench-check: baseline rewritten from {}",
+            current_path.display()
+        );
+        return;
+    }
+
+    let baseline_text = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| {
+            eprintln!(
+                "bench-check: cannot read {} ({e})",
+                baseline_path.display()
+            );
+            std::process::exit(2);
+        });
+    let baseline = Json::parse(&baseline_text)
+        .expect("bench_baseline.json is not valid JSON");
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+
+    println!("bench-check: ns/elem regression gate (>{REGRESSION_FACTOR}x fails)");
+    for (label, path) in scalar_metrics() {
+        match (lookup(&baseline, &path), lookup(&current, &path)) {
+            (Some(b), Some(c)) => {
+                let (b, c) = (
+                    b.as_f64().expect("baseline metric is numeric"),
+                    c.as_f64().expect("current metric is numeric"),
+                );
+                check(&mut failures, &mut checked, label, b, c);
+            }
+            (None, _) => {
+                println!("  skip  {label}: not in baseline");
+            }
+            (_, None) => {
+                failures
+                    .push(format!("{label}: missing from BENCH_scan.json"));
+            }
+        }
+    }
+
+    // Kernel roofline rows, keyed by (kernel, c, d).
+    let base_kernels = lookup(&baseline, &["kernels"])
+        .and_then(|k| k.as_arr().ok().map(<[Json]>::to_vec))
+        .unwrap_or_default();
+    let cur_kernels = lookup(&current, &["kernels"])
+        .and_then(|k| k.as_arr().ok().map(<[Json]>::to_vec))
+        .unwrap_or_default();
+    let key = |j: &Json| -> Option<(String, i64, i64)> {
+        Some((
+            j.get("kernel").ok()?.as_str().ok()?.to_string(),
+            j.get("c").ok()?.as_i64().ok()?,
+            j.get("d").ok()?.as_i64().ok()?,
+        ))
+    };
+    for b in &base_kernels {
+        let Some(k) = key(b) else { continue };
+        let Some(c) = cur_kernels
+            .iter()
+            .find(|j| key(j).as_ref() == Some(&k))
+        else {
+            failures.push(format!(
+                "kernel {}(c={}, d={}): missing from BENCH_scan.json",
+                k.0, k.1, k.2
+            ));
+            continue;
+        };
+        let (bv, cv) = (
+            b.get("ns_per_elem").unwrap().as_f64().unwrap(),
+            c.get("ns_per_elem").unwrap().as_f64().unwrap(),
+        );
+        let label = format!("{}(c={}, d={})", k.0, k.1, k.2);
+        check(&mut failures, &mut checked, &label, bv, cv);
+    }
+
+    // The in-place path must stay allocation-free regardless of timing
+    // noise — this is the one exact check.
+    match lookup(&current, &["chunk_sum_online", "after", "allocs_per_elem"])
+    {
+        Some(a) => {
+            let a = a.as_f64().expect("allocs_per_elem is numeric");
+            if a != 0.0 {
+                failures.push(format!(
+                    "chunk_sum_online.after.allocs_per_elem = {a} \
+                     (steady state must be allocation-free)"
+                ));
+            } else {
+                println!("    ok  chunk_sum_online.after.allocs_per_elem: 0");
+            }
+        }
+        None => failures.push(
+            "chunk_sum_online.after.allocs_per_elem missing".to_string(),
+        ),
+    }
+
+    // Informational: the fused-fold + SIMD win over the PR 5 scalar
+    // in-place path (the driver-side acceptance floor is 2x).
+    if let Some(s) = lookup(&current, &["chunk_sum_online", "vs_pr5_speedup"])
+    {
+        let s = s.as_f64().unwrap_or(0.0);
+        println!("  info  vs_pr5_speedup: {s:.2}x");
+        if s < 2.0 {
+            println!(
+                "  warn  vs_pr5_speedup below the 2x target \
+                 (quick-mode runs are noisy; re-run `make bench`)"
+            );
+        }
+    }
+
+    if failures.is_empty() {
+        println!("bench-check OK ({checked} metrics within limits)");
+    } else {
+        eprintln!("bench-check FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

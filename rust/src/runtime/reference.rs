@@ -46,6 +46,22 @@
 //! `HostValue`s the contract requires. `rust/tests/alloc_free.rs`
 //! pins the scan-side zero-allocation property with a counting
 //! allocator.
+//!
+//! ## Two-level parallelism
+//!
+//! Batched entry points pick between two dispatch shapes at runtime:
+//! the default parallelises *across batch rows* (one sequence per pool
+//! worker); when the batch is smaller than the pool but each sequence
+//! holds at least `workers` full chunks, they flip inward and
+//! parallelise *within* the sequence — chunk encoding fans out over
+//! [`pool::parallel_chunks`], the chunk prefix runs through
+//! [`blelloch_scan_parallel`]'s level-parallel sweeps, and the position
+//! expansion fans out again (`forward_hidden_parallel`). The two shapes
+//! are **bit-identical** on any worker count: Thm 3.5 makes the static
+//! Blelloch prefix equal the online counter's prefix at every chunk
+//! boundary, and both paths share the same slice kernels
+//! ([`crate::util::kernels`]). PR 5's row-ordered gradient reduction is
+//! untouched, so training stays bit-reproducible either way.
 
 use std::any::Any;
 use std::collections::BTreeMap;
@@ -58,8 +74,9 @@ use super::backend::{Backend, Executable, Module};
 use super::manifest::{ArtifactSpec, DType, Manifest, ModelSpec, TensorSpec};
 use super::value::HostValue;
 use crate::scan::traits::Aggregator;
-use crate::scan::OnlineScan;
+use crate::scan::{blelloch_scan_parallel, OnlineScan};
 use crate::util::json::Json;
+use crate::util::kernels;
 use crate::util::pool;
 use crate::util::prng::Rng;
 
@@ -117,9 +134,28 @@ pub struct ChunkSumOp {
 impl ChunkSumOp {
     /// The raw merge kernel shared by every entry path (`agg`,
     /// `agg_into`, the `run_agg` executable): `out[j] = l[c-1] + r[j]`
-    /// rowwise over flat `[c, d]` slabs — no allocation, straight-line
-    /// slice arithmetic the compiler can vectorise.
+    /// rowwise over flat `[c, d]` slabs — no allocation, one tiled/SIMD
+    /// row-add per row. Bit-identical to [`ChunkSumOp::agg_slices_scalar`]
+    /// (elementwise f32 addition is single-rounded on every kernel
+    /// path).
     pub fn agg_slices(&self, l: &[f32], r: &[f32], out: &mut [f32]) {
+        let (c, d) = (self.c, self.d);
+        debug_assert_eq!(l.len(), c * d);
+        debug_assert_eq!(r.len(), c * d);
+        debug_assert_eq!(out.len(), c * d);
+        let tail = &l[(c - 1) * d..c * d];
+        for (out_row, r_row) in
+            out.chunks_exact_mut(d).zip(r.chunks_exact(d))
+        {
+            kernels::add_into(out_row, tail, r_row);
+        }
+    }
+
+    /// The retained scalar reference merge (the pre-kernel loop,
+    /// verbatim): tests pin [`ChunkSumOp::agg_slices`] bit-identical
+    /// to this, and the perf bench uses it as the before-this-PR
+    /// baseline.
+    pub fn agg_slices_scalar(&self, l: &[f32], r: &[f32], out: &mut [f32]) {
         let (c, d) = (self.c, self.d);
         debug_assert_eq!(l.len(), c * d);
         debug_assert_eq!(r.len(), c * d);
@@ -158,6 +194,58 @@ impl Aggregator for ChunkSumOp {
         out.resize(self.c * self.d, 0.0);
     }
 
+    /// Fused prefix fold. The default hook ping-pongs one full
+    /// `agg_into` per occupied root (`k · c · d` adds for `k` roots),
+    /// but `Agg` only ever reads its left operand's last row — so the
+    /// fold collapses to accumulating the *tails* of all roots but the
+    /// newest (`(k-1) · d` adds) and expanding the newest root once
+    /// (`c · d` adds).
+    ///
+    /// Bit-identical to the default: the running tail is seeded with
+    /// `0.0 + tail` (matching `Agg(identity, r)`), accumulates
+    /// oldest-to-newest in the same operand order, and the final
+    /// expansion `out[j] = acc + r[j]` is exactly the last default
+    /// step. Pinned by `tests/alloc_free.rs` (`prefix_into` vs owned
+    /// `prefix` vs static Blelloch) and the kernels test suite.
+    fn fold_roots_into(
+        &self,
+        roots_lsb_first: &[Option<Vec<f32>>],
+        scratch: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        let (c, d) = (self.c, self.d);
+        let occupied =
+            roots_lsb_first.iter().filter(|r| r.is_some()).count();
+        if occupied == 0 {
+            self.identity_into(out);
+            return;
+        }
+        // Running prefix tail over every root except the newest
+        // (MSB→LSB order, i.e. oldest block first — `.rev()` over the
+        // LSB-first storage).
+        scratch.clear();
+        scratch.resize(d, 0.0);
+        for root in
+            roots_lsb_first.iter().rev().flatten().take(occupied - 1)
+        {
+            kernels::add_assign(&mut scratch[..d], &root[(c - 1) * d..c * d]);
+        }
+        // The newest root (LSB-most occupied slot) expands in full:
+        // out[j] = acc + r[j].
+        let last = roots_lsb_first
+            .iter()
+            .flatten()
+            .next()
+            .expect("occupied > 0 roots");
+        out.clear();
+        out.resize(c * d, 0.0);
+        for (out_row, r_row) in
+            out.chunks_exact_mut(d).zip(last.chunks_exact(d))
+        {
+            kernels::add_into(out_row, &scratch[..d], r_row);
+        }
+    }
+
     fn claims_associative(&self) -> bool {
         true
     }
@@ -178,10 +266,22 @@ fn enc_chunk_into(
     for j in 0..c {
         let t = (toks[j].max(0) as usize).min(cfg.vocab - 1);
         let emb = &tok_emb[t * d..(t + 1) * d];
-        for f in 0..d {
-            let aug = if f == 0 { 1.0 } else { emb[f] };
-            let prev = if j == 0 { 0.0 } else { y[(j - 1) * d + f] };
-            y[j * d + f] = prev + aug;
+        if j == 0 {
+            // Row 0 is `0.0 + aug` — kept as an explicit add so the
+            // bits match the pre-kernel recurrence exactly (copying
+            // would lose `0.0 + (-0.0) = +0.0`).
+            let row0 = &mut y[..d];
+            row0.fill(0.0);
+            kernels::add_assign(row0, emb);
+            row0[0] = 1.0;
+        } else {
+            // One tiled row-add per position: cur = prev + emb, with
+            // the count channel re-pinned to prev[0] + 1.0.
+            let (prev, cur) = y.split_at_mut(j * d);
+            let prev_row = &prev[(j - 1) * d..];
+            let cur_row = &mut cur[..d];
+            kernels::add_into(cur_row, prev_row, emb);
+            cur_row[0] = prev_row[0] + 1.0;
         }
     }
 }
@@ -200,13 +300,12 @@ fn logits_row(
     out.copy_from_slice(head_b);
     for f in 0..d {
         let phi = h[f] / denom;
+        // Zero features (fresh heads, padded channels) contribute
+        // nothing; skipping keeps the cold-start path cheap.
         if phi == 0.0 {
             continue;
         }
-        let row = &head[f * v..(f + 1) * v];
-        for (o, w) in out.iter_mut().zip(row) {
-            *o += phi * w;
-        }
+        kernels::axpy(out, phi, &head[f * v..(f + 1) * v]);
     }
 }
 
@@ -265,10 +364,11 @@ fn forward_hidden_into(
         y.resize(c * d, 0.0);
         enc_chunk_into(cfg, tok_emb, &ws.chunk_toks, &mut y);
         for j in 0..(end - pos) {
-            let row = &mut out[(pos + j) * d..(pos + j + 1) * d];
-            for (f, slot) in row.iter_mut().enumerate() {
-                *slot = ws.prefix_tail[f] + y[j * d + f];
-            }
+            kernels::add_into(
+                &mut out[(pos + j) * d..(pos + j + 1) * d],
+                &ws.prefix_tail,
+                &y[j * d..(j + 1) * d],
+            );
         }
         if end - pos == c {
             scan.push(y);
@@ -281,6 +381,103 @@ fn forward_hidden_into(
         pos = end;
     }
     ws.arena = scan.into_arena();
+}
+
+/// [`forward_hidden_into`] behind a fresh workspace: the sequential
+/// (online binary-counter) hidden-state path for one sequence, exposed
+/// for tests and benches that pin the two-level path against it.
+pub fn forward_hidden_seq(
+    cfg: &RefModelCfg,
+    tok_emb: &[f32],
+    toks: &[i32],
+    out: &mut [f32],
+) {
+    let mut ws = SeqWorkspace::default();
+    forward_hidden_into(cfg, tok_emb, toks, &mut ws, out);
+}
+
+/// Two-level (within-sequence, chunk-parallel) hidden states for ONE
+/// long sequence: encode all chunks across the pool, prefix the full
+/// chunks with the level-parallel Blelloch scan, then expand positions
+/// chunk-parallel. This is what lets a single long sequence saturate
+/// the machine when the batch dimension is too small to.
+///
+/// **Bit-identical to [`forward_hidden_seq`] on any worker count**: by
+/// Thm 3.5 the online counter's prefix at chunk `k` *is* the static
+/// Blelloch exclusive prefix `P_k` (same parenthesisation, associative
+/// or not), chunk encoding is per-chunk independent, and the position
+/// expansion `out[j] = tail(P_k) + y[j]` uses the same add kernel as
+/// the sequential path. An identity sentinel appended after the full
+/// chunks yields `P_full` (the all-chunks fold) for the ragged tail;
+/// the sentinel itself is never folded into any exclusive prefix.
+pub fn forward_hidden_parallel(
+    cfg: &RefModelCfg,
+    tok_emb: &[f32],
+    toks: &[i32],
+    out: &mut [f32],
+    workers: usize,
+) {
+    let (c, d) = (cfg.chunk, cfg.d);
+    let n = toks.len();
+    debug_assert_eq!(out.len(), n * d);
+    let full = n / c;
+    let rem = n % c;
+    let op = ChunkSumOp { c, d };
+
+    // Level 2a: encode every chunk (ragged tail zero-padded) into one
+    // flat [n_chunks, c, d] slab, chunk-parallel.
+    let n_chunks = full + usize::from(rem > 0);
+    if n_chunks == 0 {
+        return;
+    }
+    let mut enc = vec![0.0f32; n_chunks * c * d];
+    let mut padded: Vec<i32> = Vec::new();
+    if rem > 0 {
+        padded = vec![0i32; c];
+        padded[..rem].copy_from_slice(&toks[full * c..]);
+    }
+    let padded_ref = &padded;
+    pool::parallel_chunks(&mut enc, c * d, workers, |k, y| {
+        if k < full {
+            enc_chunk_into(cfg, tok_emb, &toks[k * c..(k + 1) * c], y);
+        } else {
+            enc_chunk_into(cfg, tok_emb, padded_ref, y);
+        }
+    });
+
+    // Level 2b: exclusive prefixes of the full chunks under
+    // π_Blelloch (level-parallel upsweep/downsweep). The appended
+    // identity gives prefs[full] = fold of all full chunks, used only
+    // as the ragged tail's prefix.
+    let mut states: Vec<Vec<f32>> = Vec::with_capacity(full + 1);
+    for k in 0..full {
+        states.push(enc[k * c * d..(k + 1) * c * d].to_vec());
+    }
+    states.push(op.identity());
+    let prefs = blelloch_scan_parallel(&op, &states, workers);
+
+    // Level 2c: expand positions, chunk-parallel over the output.
+    let prefs_ref = &prefs;
+    let enc_ref = &enc;
+    pool::parallel_chunks(&mut out[..full * c * d], c * d, workers, |k, orows| {
+        let tail = &prefs_ref[k][(c - 1) * d..c * d];
+        let y = &enc_ref[k * c * d..(k + 1) * c * d];
+        for (orow, yrow) in
+            orows.chunks_exact_mut(d).zip(y.chunks_exact(d))
+        {
+            kernels::add_into(orow, tail, yrow);
+        }
+    });
+    if rem > 0 {
+        let tail = &prefs[full][(c - 1) * d..c * d];
+        let y = &enc[full * c * d..];
+        for (orow, yrow) in out[full * c * d..]
+            .chunks_exact_mut(d)
+            .zip(y.chunks_exact(d))
+        {
+            kernels::add_into(orow, tail, yrow);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -607,9 +804,7 @@ impl RefExec {
         let mut logits = vec![0.0f32; c * v];
         let mut h = vec![0.0f32; d];
         for j in 0..c {
-            for f in 0..d {
-                h[f] = tail[f] + x[j * d + f];
-            }
+            kernels::add_into(&mut h, tail, &x[j * d..(j + 1) * d]);
             logits_row(cfg, head, head_b, &h, &mut logits[j * v..(j + 1) * v]);
         }
         Ok(vec![HostValue::f32(&[1, c, v], logits)])
@@ -627,7 +822,25 @@ impl RefExec {
         // workspace from the recycle pool. Rows are independent, so the
         // result is bit-identical to the sequential loop.
         let mut logits = vec![0.0f32; b * n * v];
-        let workers = pool::default_workers().min(b);
+        let workers = pool::default_workers();
+        // Two-level gate: when the batch is too small to occupy the
+        // pool but each sequence holds at least `workers` full chunks,
+        // flip the parallelism inward — rows sequential, chunks (and
+        // logits) parallel *within* each row. Bit-identical to the
+        // row-parallel path (see `forward_hidden_parallel`).
+        if b < workers && n / cfg.chunk >= workers {
+            let mut hidden = vec![0.0f32; n * d];
+            for (bi, out_row) in logits.chunks_exact_mut(n * v).enumerate() {
+                let row = &toks[bi * n..(bi + 1) * n];
+                forward_hidden_parallel(cfg, tok_emb, row, &mut hidden, workers);
+                let hidden_ref = &hidden;
+                pool::parallel_chunks(out_row, v, workers, |t, out| {
+                    logits_row(cfg, head, head_b, &hidden_ref[t * d..(t + 1) * d], out);
+                });
+            }
+            return Ok(vec![HostValue::f32(&[b, n, v], logits)]);
+        }
+        let workers = workers.min(b);
         let ws_pool = &self.workspaces;
         pool::parallel_chunks(&mut logits, n * v, workers, |bi, out_row| {
             let mut ws =
@@ -676,7 +889,15 @@ impl RefExec {
         if msum <= 0.0 {
             return 0.0;
         }
-        let workers = pool::default_workers().min(b);
+        let workers = pool::default_workers();
+        // Same two-level gate as `run_fwd`: a small batch of long
+        // sequences runs the forward pass chunk-parallel within each
+        // row (rows sequential), then the gradient phase proceeds
+        // row-parallel as before. `forward_hidden_parallel` is
+        // bit-identical to the sequential forward on any worker count,
+        // and the row-ordered reduction below is untouched, so training
+        // stays bit-reproducible regardless of which path ran.
+        let two_level = b < workers && n / cfg.chunk >= workers;
         let mut wss = self.take_workspaces(b);
         for ws in wss.iter_mut() {
             ws.d_head.clear();
@@ -689,15 +910,28 @@ impl RefExec {
             let tok_emb: &[f32] = &params[0];
             let head: &[f32] = &params[2];
             let head_b: &[f32] = &params[3];
+            if two_level {
+                for (bi, ws) in wss.iter_mut().enumerate() {
+                    ws.hidden.clear();
+                    ws.hidden.resize(n * d, 0.0);
+                    let row = &tokens[bi * n..(bi + 1) * n];
+                    forward_hidden_parallel(
+                        cfg, tok_emb, row, &mut ws.hidden, workers,
+                    );
+                }
+            }
+            let workers = workers.min(b);
             pool::parallel_update(&mut wss, workers, |bi, ws| {
                 let mut hidden = std::mem::take(&mut ws.hidden);
-                hidden.clear();
-                hidden.resize(n * d, 0.0);
                 let mut row_logits = std::mem::take(&mut ws.row_logits);
                 row_logits.clear();
                 row_logits.resize(vs, 0.0);
                 let row = &tokens[bi * n..(bi + 1) * n];
-                forward_hidden_into(cfg, tok_emb, row, ws, &mut hidden);
+                if !two_level {
+                    hidden.clear();
+                    hidden.resize(n * d, 0.0);
+                    forward_hidden_into(cfg, tok_emb, row, ws, &mut hidden);
+                }
                 for t in 0..n {
                     let mi = mask[bi * n + t];
                     if mi <= 0.0 {
@@ -871,6 +1105,95 @@ mod tests {
             op.identity_into(&mut id);
             assert_eq!(id, op.identity());
         }
+    }
+
+    #[test]
+    fn two_level_hidden_bit_identical_across_worker_counts() {
+        // `forward_hidden_parallel` must reproduce the sequential
+        // online-counter forward bit-for-bit on ANY worker count —
+        // Thm 3.5 (counter prefix == Blelloch exclusive prefix) plus
+        // shared add kernels make this exact, not approximate. Covers a
+        // ragged tail (n % c != 0) and the chunk-0 (zero-prefix) case.
+        let cfg = RefModelCfg {
+            vocab: 32,
+            d: 16,
+            chunk: 4,
+            batch: 1,
+            seq: 67, // 16 full chunks + ragged tail of 3
+            block_k: 1,
+        };
+        let mut rng = Rng::new(41);
+        let tok_emb: Vec<f32> = (0..cfg.vocab * cfg.d)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let toks: Vec<i32> = (0..cfg.seq)
+            .map(|_| (rng.next_u64() % cfg.vocab as u64) as i32)
+            .collect();
+        let mut seq = vec![0.0f32; cfg.seq * cfg.d];
+        forward_hidden_seq(&cfg, &tok_emb, &toks, &mut seq);
+        for workers in [1usize, 4, 16] {
+            let mut par = vec![f32::NAN; cfg.seq * cfg.d];
+            forward_hidden_parallel(&cfg, &tok_emb, &toks, &mut par, workers);
+            assert_eq!(seq, par, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fwd_two_level_matches_row_sequential_reference() {
+        // End-to-end: `run_fwd` (whichever dispatch path the gate
+        // picks on this machine) must match logits computed from the
+        // sequential per-row forward, bit-exactly. batch=2 with 16 full
+        // chunks per row engages the two-level gate whenever the pool
+        // has more than two workers.
+        let cfg = RefModelCfg {
+            vocab: 32,
+            d: 16,
+            chunk: 4,
+            batch: 2,
+            seq: 64,
+            block_k: 1,
+        };
+        let (b, n, d, v) = (cfg.batch, cfg.seq, cfg.d, cfg.vocab);
+        let mut rng = Rng::new(43);
+        let tok_emb: Vec<f32> =
+            (0..v * d).map(|_| rng.normal() as f32).collect();
+        let head: Vec<f32> =
+            (0..d * v).map(|_| rng.normal() as f32 * 0.1).collect();
+        let head_b: Vec<f32> = (0..v).map(|_| rng.normal() as f32).collect();
+        let toks: Vec<i32> = (0..b * n)
+            .map(|_| (rng.next_u64() % v as u64) as i32)
+            .collect();
+        let exec = RefExec {
+            cfg,
+            kind: EntryKind::Fwd,
+            spec: artifact("test", "fwd", Vec::new(), Vec::new()),
+            span: crate::obs::span_handle("ref.fwd"),
+            workspaces: Mutex::new(Vec::new()),
+        };
+        let inputs = vec![
+            HostValue::f32(&[v, d], tok_emb.clone()),
+            HostValue::zeros_f32(&[cfg.chunk, d]),
+            HostValue::f32(&[d, v], head.clone()),
+            HostValue::f32(&[v], head_b.clone()),
+            HostValue::s32(&[b, n], toks.clone()),
+        ];
+        let outs = exec.run_fwd(&inputs).unwrap();
+        let got = outs[0].as_f32().unwrap();
+        let mut want = vec![0.0f32; b * n * v];
+        let mut hidden = vec![0.0f32; n * d];
+        for bi in 0..b {
+            forward_hidden_seq(&cfg, &tok_emb, &toks[bi * n..(bi + 1) * n], &mut hidden);
+            for t in 0..n {
+                logits_row(
+                    &cfg,
+                    &head,
+                    &head_b,
+                    &hidden[t * d..(t + 1) * d],
+                    &mut want[(bi * n + t) * v..(bi * n + t + 1) * v],
+                );
+            }
+        }
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -84,9 +84,16 @@ pub fn blelloch_scan<A: Aggregator>(
 /// the (single) tree/prefix slabs **in place** through
 /// [`pool::parallel_update`] + [`Aggregator::agg_into`], so neither a
 /// per-level `Vec` nor a per-node temporary is allocated; levels
-/// smaller than `4 * workers` nodes run inline, since spawning scoped
-/// workers costs more than a handful of `Agg` calls (`cargo bench
-/// --bench scan_hotpath` measures the sequential-vs-parallel ratio).
+/// smaller than `4 * workers` nodes run inline, since even the
+/// persistent pool's wake/quiesce handshake costs more than a handful
+/// of `Agg` calls (`cargo bench --bench scan_hotpath` measures the
+/// sequential-vs-parallel ratio).
+///
+/// This is the *chunk level* of the runtime's two-level dispatch: the
+/// reference backend calls it from
+/// [`crate::runtime::reference`]'s `forward_hidden_parallel` so that a
+/// single long sequence — too few batch rows to occupy the pool —
+/// still saturates the machine across its tree levels.
 pub fn blelloch_scan_parallel<A>(
     op: &A,
     items: &[A::State],

@@ -17,7 +17,11 @@
 //! both statements describe the same algorithm, they just draw the
 //! accounting boundary differently. (Prefix folds via
 //! [`OnlineScan::prefix`] cost up to one `Agg` per occupied root and
-//! are billed to the caller, not to `push`.)
+//! are billed to the caller, not to `push`. Operators may fuse that
+//! fold through [`Aggregator::fold_roots_into`] —
+//! [`crate::runtime::reference::ChunkSumOp`] collapses the
+//! whole-state ping-pong to one row of accumulation per root —
+//! without changing the accounting or the bits.)
 //!
 //! **Arena / ownership discipline.** The scan owns a recycle arena of
 //! state buffers. Every buffer the carry chain frees (the two merged
@@ -262,10 +266,12 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
     }
 
     /// Allocation-free [`OnlineScan::prefix`]: folds into the caller's
-    /// buffer, ping-ponging against one arena scratch slab. Bit-identical
-    /// to `prefix()` — same fold order, same `agg_into` kernels.
+    /// buffer through [`Aggregator::fold_roots_into`] against one
+    /// arena scratch slab. Bit-identical to `prefix()` — the default
+    /// hook is the same MSB→LSB ping-pong fold, and operator overrides
+    /// (e.g. the `ChunkSumOp` fused tail fold) are pinned to match it
+    /// exactly.
     pub fn prefix_into(&mut self, out: &mut A::State) {
-        self.op.identity_into(out);
         let mut tmp = match self.arena.pop() {
             Some(s) => {
                 self.local.arena_hits += 1;
@@ -276,11 +282,10 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
                 self.op.new_state()
             }
         };
-        for root in self.roots.iter().rev().flatten() {
-            self.op.agg_into(out, root, &mut tmp);
-            std::mem::swap(out, &mut tmp);
-            self.local.prefix_aggs += 1;
-        }
+        self.op.fold_roots_into(&self.roots, &mut tmp, out);
+        // Billed per occupied root whichever fold implementation ran
+        // (the default performs exactly one agg_into per root).
+        self.local.prefix_aggs += self.occupied_roots() as u64;
         self.arena.push(tmp);
     }
 

@@ -53,6 +53,33 @@ pub trait Aggregator {
         self.identity()
     }
 
+    /// Fold the binary counter's occupied roots (stored LSB-first —
+    /// the layout of [`super::counter::OnlineScan`]) into the running
+    /// prefix, visiting MSB→LSB (oldest block first):
+    /// `out = Agg(…Agg(Agg(e, root[k_max]), root[k_mid])…, root[k_0])`
+    /// — exactly the owned `prefix()` fold.
+    ///
+    /// The default performs one `agg_into` per occupied root through
+    /// `scratch` (ping-pong, no allocation). Operators whose prefix
+    /// consumers only need part of each state may override this with a
+    /// fused fold — e.g. [`crate::runtime::reference::ChunkSumOp`],
+    /// where only the last row of each left operand feeds the merge,
+    /// so the whole-state ping-pong can collapse to one row of
+    /// accumulation per root. Overrides MUST stay bit-identical to the
+    /// default (the duality sweep and `tests/alloc_free.rs` pin it).
+    fn fold_roots_into(
+        &self,
+        roots_lsb_first: &[Option<Self::State>],
+        scratch: &mut Self::State,
+        out: &mut Self::State,
+    ) {
+        self.identity_into(out);
+        for root in roots_lsb_first.iter().rev().flatten() {
+            self.agg_into(out, root, scratch);
+            std::mem::swap(out, scratch);
+        }
+    }
+
     /// Documentation hint used by tests: whether the implementation
     /// *claims* associativity (the affine family). Tests *verify* the
     /// claim on random inputs rather than trusting it.

@@ -5,6 +5,7 @@
 //! / cross-entropy over logits fetched from PJRT). Row-major, owned
 //! storage, 1-D/2-D focus; deliberately small rather than general.
 
+use crate::util::kernels;
 use std::fmt;
 
 /// A row-major f32 tensor.
@@ -90,8 +91,12 @@ impl Tensor {
 
     // ---- elementwise -----------------------------------------------------
 
+    /// Delegates to [`Tensor::fill_map`] so the owned and in-place
+    /// map paths share one kernel (bit-exact by construction).
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
-        Tensor::new(&self.shape, self.data.iter().map(|&x| f(x)).collect())
+        let mut out = Tensor { shape: Vec::new(), data: Vec::new() };
+        out.fill_map(self, f);
+        out
     }
 
     pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
@@ -186,19 +191,30 @@ impl Tensor {
 
     // ---- in-place variants (buffer reuse for the scan hot path) ----------
 
-    /// Overwrite `self` with `src`'s contents, reusing storage.
-    pub fn copy_from(&mut self, src: &Tensor) {
+    /// Resize storage for `src.len()` elements without the
+    /// clear-then-extend length bookkeeping (the old contents are
+    /// about to be overwritten wholesale).
+    fn reuse_for(&mut self, src: &Tensor) {
         self.shape.clone_from(&src.shape);
-        self.data.clear();
-        self.data.extend_from_slice(&src.data);
+        self.data.resize(src.data.len(), 0.0);
+    }
+
+    /// Overwrite `self` with `src`'s contents, reusing storage
+    /// (straight memcpy once the buffer is sized).
+    pub fn copy_from(&mut self, src: &Tensor) {
+        self.reuse_for(src);
+        self.data.copy_from_slice(&src.data);
     }
 
     /// Overwrite `self` with `src` mapped through `f`, reusing storage
-    /// (in-place sibling of [`Tensor::map`]).
+    /// (in-place sibling of [`Tensor::map`]). Slice-to-slice writes —
+    /// no per-element `push` bounds growth, so simple closures
+    /// autovectorize.
     pub fn fill_map(&mut self, src: &Tensor, f: impl Fn(f32) -> f32) {
-        self.shape.clone_from(&src.shape);
-        self.data.clear();
-        self.data.extend(src.data.iter().map(|&x| f(x)));
+        self.reuse_for(src);
+        for (o, &x) in self.data.iter_mut().zip(&src.data) {
+            *o = f(x);
+        }
     }
 
     /// Overwrite `self` with `src` mapped through `f(flat_index, x)` —
@@ -209,10 +225,39 @@ impl Tensor {
         src: &Tensor,
         f: impl Fn(usize, f32) -> f32,
     ) {
-        self.shape.clone_from(&src.shape);
-        self.data.clear();
-        self.data
-            .extend(src.data.iter().enumerate().map(|(i, &x)| f(i, x)));
+        self.reuse_for(src);
+        for (i, (o, &x)) in self.data.iter_mut().zip(&src.data).enumerate() {
+            *o = f(i, x);
+        }
+    }
+
+    /// `self = src * s` elementwise, reusing storage (tiled/SIMD
+    /// kernel; bit-identical to `src.scale(s)`).
+    pub fn scale_into(&mut self, src: &Tensor, s: f32) {
+        self.reuse_for(src);
+        kernels::scale_into(&mut self.data, &src.data, s);
+    }
+
+    /// `self = a ⊙ b` elementwise, reusing storage (tiled/SIMD
+    /// kernel; bit-identical to `a.hadamard(b)`).
+    pub fn mul_elem_into(&mut self, a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape, b.shape, "shape mismatch");
+        self.reuse_for(a);
+        kernels::mul_into(&mut self.data, &a.data, &b.data);
+    }
+
+    /// `self = src · diag(d)` — scale column j by `d[j]`, reusing
+    /// storage; one tiled row-times-vector kernel per row.
+    pub fn scale_cols_into(&mut self, src: &Tensor, d: &[f32]) {
+        assert_eq!(src.shape.len(), 2);
+        assert_eq!(d.len(), src.shape[1]);
+        self.reuse_for(src);
+        let n = src.shape[1];
+        for (orow, srow) in
+            self.data.chunks_mut(n).zip(src.data.chunks(n))
+        {
+            kernels::mul_into(orow, srow, d);
+        }
     }
 
     /// `self = other + self`, elementwise in place. The addend order
@@ -220,9 +265,7 @@ impl Tensor {
     /// owned path.
     pub fn radd_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape, "shape mismatch");
-        for (a, &b) in self.data.iter_mut().zip(&other.data) {
-            *a = b + *a;
-        }
+        kernels::radd_assign(&mut self.data, &other.data);
     }
 
     /// Matrix product `self · other` written into `out`, reusing its
@@ -239,16 +282,17 @@ impl Tensor {
         out.data.clear();
         out.data.resize(m * n, 0.0);
         for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
             for kk in 0..k {
                 let a = self.data[i * k + kk];
+                // Affine identities are mostly-zero: skipping null
+                // rows keeps eye-heavy products cheap, and adding
+                // a*0 contributes nothing the axpy would change.
                 if a == 0.0 {
                     continue;
                 }
                 let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
+                kernels::axpy(orow, a, brow);
             }
         }
     }

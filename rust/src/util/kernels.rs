@@ -1,0 +1,581 @@
+//! Tiled / SIMD slice kernels for the scan hot path.
+//!
+//! Every dense inner loop in the reference backend — chunk-state
+//! merges (`ChunkSumOp::agg_slices`), the affine translation add
+//! (`AffineOp::agg_into`), within-chunk prefix sums, logit
+//! accumulation and `Tensor::matmul_into` — funnels through the
+//! elementwise kernels in this module. Each kernel ships three
+//! implementations:
+//!
+//! * `*_scalar` — the retained straight-line reference loop, kept
+//!   `pub` so tests can pin the fast paths against it.
+//! * `*_tiled` — the portable default: fixed-width blocks over
+//!   `chunks_exact(LANES)` with a scalar tail, shaped so LLVM
+//!   autovectorizes the block body on any target.
+//! * an explicit AVX2(+FMA) variant, compiled only on `x86_64` and
+//!   entered only when the CPU reports `avx2`/`fma` at runtime.
+//!
+//! Bit-compatibility contract: `add/radd/scale/mul` kernels are
+//! **bit-identical** to the scalar reference on every path — IEEE-754
+//! addition and multiplication are single-rounded elementwise ops, so
+//! lane width and tiling cannot change results. `axpy` (and therefore
+//! `matmul_into`) may use FMA on the SIMD path, which rounds once
+//! where `mul` + `add` round twice; both callers that compare against
+//! an owned sibling share the *same* kernel on both sides, so the
+//! repo's exact-equality pins (duality sweep, `agg_into` vs `agg`)
+//! hold regardless, and cross-implementation checks use the
+//! duality-sweep tolerance.
+//!
+//! `PSM_SIMD=0` (also `false` / `off`) disables the explicit-SIMD
+//! tier at runtime, leaving the tiled portable path — useful for
+//! bisecting a numeric diff down to the FMA contraction.
+
+use std::sync::OnceLock;
+
+/// Fixed tile width for the portable blocked loops. Eight `f32`s is
+/// one AVX2 register — wide enough for full vectorization, small
+/// enough that the scalar tail stays trivial.
+const LANES: usize = 8;
+
+fn simd_env_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        match std::env::var("PSM_SIMD") {
+            Ok(v) => {
+                let v = v.trim().to_ascii_lowercase();
+                !(v == "0" || v == "false" || v == "off")
+            }
+            Err(_) => true,
+        }
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> bool {
+    std::is_x86_feature_detected!("avx2")
+        && std::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> bool {
+    false
+}
+
+/// True when the explicit-SIMD tier is compiled in, supported by this
+/// CPU, and not disabled via `PSM_SIMD=0`.
+pub fn simd_active() -> bool {
+    static ACTIVE: OnceLock<bool> = OnceLock::new();
+    *ACTIVE.get_or_init(|| simd_env_enabled() && detect())
+}
+
+// ---------------------------------------------------------------------
+// out = a + b
+// ---------------------------------------------------------------------
+
+/// Scalar reference: `out[i] = a[i] + b[i]`.
+pub fn add_into_scalar(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// Tiled portable path: bit-identical to the scalar reference.
+pub fn add_into_tiled(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    let mut o = out.chunks_exact_mut(LANES);
+    let mut ax = a.chunks_exact(LANES);
+    let mut bx = b.chunks_exact(LANES);
+    for ((o, a), b) in (&mut o).zip(&mut ax).zip(&mut bx) {
+        let o: &mut [f32; LANES] = o.try_into().unwrap();
+        let a: &[f32; LANES] = a.try_into().unwrap();
+        let b: &[f32; LANES] = b.try_into().unwrap();
+        for l in 0..LANES {
+            o[l] = a[l] + b[l];
+        }
+    }
+    for ((o, a), b) in o
+        .into_remainder()
+        .iter_mut()
+        .zip(ax.remainder())
+        .zip(bx.remainder())
+    {
+        *o = a + b;
+    }
+}
+
+/// `out = a + b` elementwise. Dispatches to AVX2 when available;
+/// bit-identical on every path.
+#[inline]
+pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        assert_eq!(out.len(), a.len());
+        assert_eq!(out.len(), b.len());
+        unsafe { avx2::add_into(out, a, b) };
+        return;
+    }
+    add_into_tiled(out, a, b);
+}
+
+// ---------------------------------------------------------------------
+// dst += src
+// ---------------------------------------------------------------------
+
+/// Scalar reference: `dst[i] = dst[i] + src[i]`.
+pub fn add_assign_scalar(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for i in 0..dst.len() {
+        dst[i] += src[i];
+    }
+}
+
+/// Tiled portable path: bit-identical to the scalar reference.
+pub fn add_assign_tiled(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    let mut dx = dst.chunks_exact_mut(LANES);
+    let mut sx = src.chunks_exact(LANES);
+    for (d, s) in (&mut dx).zip(&mut sx) {
+        let d: &mut [f32; LANES] = d.try_into().unwrap();
+        let s: &[f32; LANES] = s.try_into().unwrap();
+        for l in 0..LANES {
+            d[l] += s[l];
+        }
+    }
+    for (d, s) in dx.into_remainder().iter_mut().zip(sx.remainder()) {
+        *d += s;
+    }
+}
+
+/// `dst += src` elementwise; bit-identical on every path.
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        assert_eq!(dst.len(), src.len());
+        unsafe { avx2::add_assign(dst, src) };
+        return;
+    }
+    add_assign_tiled(dst, src);
+}
+
+// ---------------------------------------------------------------------
+// dst = src + dst  (reverse-operand accumulate: matches the affine
+// translation order `out.f = A(left.f) + right.f` where `dst` holds
+// the already-transformed left term... see `AffineOp::agg_into`)
+// ---------------------------------------------------------------------
+
+/// Scalar reference: `dst[i] = src[i] + dst[i]` (operand order
+/// preserved — f32 addition is bitwise commutative, but the order is
+/// kept to mirror the original `Tensor::radd_assign` loop exactly).
+pub fn radd_assign_scalar(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for i in 0..dst.len() {
+        dst[i] = src[i] + dst[i];
+    }
+}
+
+/// Tiled portable path: bit-identical to the scalar reference.
+pub fn radd_assign_tiled(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    let mut dx = dst.chunks_exact_mut(LANES);
+    let mut sx = src.chunks_exact(LANES);
+    for (d, s) in (&mut dx).zip(&mut sx) {
+        let d: &mut [f32; LANES] = d.try_into().unwrap();
+        let s: &[f32; LANES] = s.try_into().unwrap();
+        for l in 0..LANES {
+            d[l] = s[l] + d[l];
+        }
+    }
+    for (d, s) in dx.into_remainder().iter_mut().zip(sx.remainder()) {
+        *d = s + *d;
+    }
+}
+
+/// `dst = src + dst` elementwise; bit-identical on every path.
+#[inline]
+pub fn radd_assign(dst: &mut [f32], src: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        assert_eq!(dst.len(), src.len());
+        unsafe { avx2::radd_assign(dst, src) };
+        return;
+    }
+    radd_assign_tiled(dst, src);
+}
+
+// ---------------------------------------------------------------------
+// out = src * s
+// ---------------------------------------------------------------------
+
+/// Scalar reference: `out[i] = src[i] * s`.
+pub fn scale_into_scalar(out: &mut [f32], src: &[f32], s: f32) {
+    assert_eq!(out.len(), src.len());
+    for i in 0..out.len() {
+        out[i] = src[i] * s;
+    }
+}
+
+/// Tiled portable path: bit-identical to the scalar reference.
+pub fn scale_into_tiled(out: &mut [f32], src: &[f32], s: f32) {
+    assert_eq!(out.len(), src.len());
+    let mut ox = out.chunks_exact_mut(LANES);
+    let mut sx = src.chunks_exact(LANES);
+    for (o, x) in (&mut ox).zip(&mut sx) {
+        let o: &mut [f32; LANES] = o.try_into().unwrap();
+        let x: &[f32; LANES] = x.try_into().unwrap();
+        for l in 0..LANES {
+            o[l] = x[l] * s;
+        }
+    }
+    for (o, x) in ox.into_remainder().iter_mut().zip(sx.remainder()) {
+        *o = x * s;
+    }
+}
+
+/// `out = src * s` elementwise; bit-identical on every path.
+#[inline]
+pub fn scale_into(out: &mut [f32], src: &[f32], s: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        assert_eq!(out.len(), src.len());
+        unsafe { avx2::scale_into(out, src, s) };
+        return;
+    }
+    scale_into_tiled(out, src, s);
+}
+
+// ---------------------------------------------------------------------
+// out = a * b  (elementwise)
+// ---------------------------------------------------------------------
+
+/// Scalar reference: `out[i] = a[i] * b[i]`.
+pub fn mul_into_scalar(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] * b[i];
+    }
+}
+
+/// Tiled portable path: bit-identical to the scalar reference.
+pub fn mul_into_tiled(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    let mut o = out.chunks_exact_mut(LANES);
+    let mut ax = a.chunks_exact(LANES);
+    let mut bx = b.chunks_exact(LANES);
+    for ((o, a), b) in (&mut o).zip(&mut ax).zip(&mut bx) {
+        let o: &mut [f32; LANES] = o.try_into().unwrap();
+        let a: &[f32; LANES] = a.try_into().unwrap();
+        let b: &[f32; LANES] = b.try_into().unwrap();
+        for l in 0..LANES {
+            o[l] = a[l] * b[l];
+        }
+    }
+    for ((o, a), b) in o
+        .into_remainder()
+        .iter_mut()
+        .zip(ax.remainder())
+        .zip(bx.remainder())
+    {
+        *o = a * b;
+    }
+}
+
+/// `out = a * b` elementwise; bit-identical on every path.
+#[inline]
+pub fn mul_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        assert_eq!(out.len(), a.len());
+        assert_eq!(out.len(), b.len());
+        unsafe { avx2::mul_into(out, a, b) };
+        return;
+    }
+    mul_into_tiled(out, a, b);
+}
+
+// ---------------------------------------------------------------------
+// acc += a * x  (axpy — the matmul / logits inner kernel)
+// ---------------------------------------------------------------------
+
+/// Scalar reference: `acc[i] += a * x[i]` (mul then add, two
+/// roundings per element).
+pub fn axpy_scalar(acc: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for i in 0..acc.len() {
+        acc[i] += a * x[i];
+    }
+}
+
+/// Tiled portable path: same mul-then-add arithmetic as the scalar
+/// reference (bit-identical to it).
+pub fn axpy_tiled(acc: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    let mut dx = acc.chunks_exact_mut(LANES);
+    let mut xx = x.chunks_exact(LANES);
+    for (d, s) in (&mut dx).zip(&mut xx) {
+        let d: &mut [f32; LANES] = d.try_into().unwrap();
+        let s: &[f32; LANES] = s.try_into().unwrap();
+        for l in 0..LANES {
+            d[l] += a * s[l];
+        }
+    }
+    for (d, s) in dx.into_remainder().iter_mut().zip(xx.remainder()) {
+        *d += a * s;
+    }
+}
+
+/// `acc += a * x`. The AVX2 path uses FMA (one rounding per element,
+/// ≤ 1 ULP from the two-rounding scalar result); compare against the
+/// scalar reference with the duality-sweep tolerance, not
+/// bit-equality.
+#[inline]
+pub fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        assert_eq!(acc.len(), x.len());
+        unsafe { avx2::axpy(acc, a, x) };
+        return;
+    }
+    axpy_tiled(acc, a, x);
+}
+
+// ---------------------------------------------------------------------
+// Explicit AVX2(+FMA) tier. Module-private: all entry goes through
+// the dispatchers above, which check `simd_active()` and slice
+// lengths first.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    // SAFETY contract for every fn here: caller has verified (a) the
+    // CPU supports avx2+fma (`simd_active()`), and (b) all slices
+    // have equal length. Loads/stores are unaligned-safe
+    // (`loadu`/`storeu`); the tail loop uses plain indexing within
+    // the checked length.
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(va, vb));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = a.get_unchecked(i) + b.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vd = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let vs = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(vd, vs));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) += src.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn radd_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vd = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let vs = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(vs, vd));
+            i += 8;
+        }
+        while i < n {
+            let d = dst.get_unchecked_mut(i);
+            *d = src.get_unchecked(i) + *d;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn scale_into(out: &mut [f32], src: &[f32], s: f32) {
+        let vs = _mm256_set1_ps(s);
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vx = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(vx, vs));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = src.get_unchecked(i) * s;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn mul_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = a.get_unchecked(i) * b.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+        let va = _mm256_set1_ps(a);
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vd = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(
+                acc.as_mut_ptr().add(i),
+                _mm256_fmadd_ps(va, vx, vd),
+            );
+            i += 8;
+        }
+        while i < n {
+            let d = acc.get_unchecked_mut(i);
+            *d = a.mul_add(*x.get_unchecked(i), *d);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn vecs(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        (a, b)
+    }
+
+    /// Tail-exercising sizes: below, at and just past the tile width.
+    const SIZES: [usize; 7] = [0, 1, 3, 7, 8, 48, 65];
+
+    #[test]
+    fn tiled_paths_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0x5EED);
+        for &n in &SIZES {
+            let (a, b) = vecs(&mut rng, n);
+            let mut o1 = vec![0.0f32; n];
+            let mut o2 = vec![0.0f32; n];
+
+            add_into_scalar(&mut o1, &a, &b);
+            add_into_tiled(&mut o2, &a, &b);
+            assert_eq!(o1, o2, "add_into n={n}");
+
+            o1.copy_from_slice(&a);
+            o2.copy_from_slice(&a);
+            add_assign_scalar(&mut o1, &b);
+            add_assign_tiled(&mut o2, &b);
+            assert_eq!(o1, o2, "add_assign n={n}");
+
+            o1.copy_from_slice(&a);
+            o2.copy_from_slice(&a);
+            radd_assign_scalar(&mut o1, &b);
+            radd_assign_tiled(&mut o2, &b);
+            assert_eq!(o1, o2, "radd_assign n={n}");
+
+            scale_into_scalar(&mut o1, &a, 1.25);
+            scale_into_tiled(&mut o2, &a, 1.25);
+            assert_eq!(o1, o2, "scale_into n={n}");
+
+            mul_into_scalar(&mut o1, &a, &b);
+            mul_into_tiled(&mut o2, &a, &b);
+            assert_eq!(o1, o2, "mul_into n={n}");
+
+            o1.copy_from_slice(&b);
+            o2.copy_from_slice(&b);
+            axpy_scalar(&mut o1, 0.75, &a);
+            axpy_tiled(&mut o2, 0.75, &a);
+            assert_eq!(o1, o2, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatchers_match_scalar_reference() {
+        let mut rng = Rng::new(0xD15);
+        for &n in &SIZES {
+            let (a, b) = vecs(&mut rng, n);
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+
+            add_into(&mut got, &a, &b);
+            add_into_scalar(&mut want, &a, &b);
+            assert_eq!(got, want, "add_into dispatch n={n}");
+
+            got.copy_from_slice(&a);
+            want.copy_from_slice(&a);
+            add_assign(&mut got, &b);
+            add_assign_scalar(&mut want, &b);
+            assert_eq!(got, want, "add_assign dispatch n={n}");
+
+            got.copy_from_slice(&b);
+            want.copy_from_slice(&b);
+            axpy(&mut got, -0.5, &a);
+            axpy_scalar(&mut want, -0.5, &a);
+            // FMA on the SIMD path rounds once where the scalar path
+            // rounds twice: duality-sweep tolerance, not bit-equality.
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                let scale = w.abs().max(1.0);
+                assert!(
+                    (g - w).abs() <= 1e-5 * scale,
+                    "axpy dispatch n={n} i={i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn signed_zero_preserved_by_add() {
+        // 0.0 + (-0.0) must stay +0.0 on every path (the fold's
+        // single-root case depends on `identity + x` semantics).
+        let a = [0.0f32; 9];
+        let b = [-0.0f32; 9];
+        let mut o = [1.0f32; 9];
+        add_into(&mut o, &a, &b);
+        for v in o {
+            assert_eq!(v.to_bits(), 0.0f32.to_bits());
+        }
+    }
+
+    #[test]
+    fn mismatched_lengths_panic() {
+        let r = std::panic::catch_unwind(|| {
+            let mut o = [0.0f32; 2];
+            add_into(&mut o, &[1.0; 3], &[1.0; 2]);
+        });
+        assert!(r.is_err());
+    }
+}

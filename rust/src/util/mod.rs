@@ -1,10 +1,12 @@
 //! Offline-environment substrates built from scratch (no crates.io access
 //! beyond the `xla` closure — see DESIGN.md §Offline-environment
-//! substrates): PRNG, JSON, CLI parsing, logging, statistics, a scoped
-//! thread pool and a small property-testing driver.
+//! substrates): PRNG, JSON, CLI parsing, logging, statistics, a
+//! persistent thread pool, tiled/SIMD slice kernels and a small
+//! property-testing driver.
 
 pub mod cli;
 pub mod json;
+pub mod kernels;
 pub mod logging;
 pub mod pool;
 pub mod prng;

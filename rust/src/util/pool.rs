@@ -1,24 +1,321 @@
-//! Scoped thread pool (replaces rayon, unavailable offline).
+//! Persistent worker pool (replaces rayon, unavailable offline).
 //!
 //! Supplies the parallel upsweep/downsweep execution of the static
-//! Blelloch scan ([`crate::scan::blelloch`]) and the coordinator's worker
-//! fan-out. Work items are closures run via `std::thread::scope`, so
-//! borrowed data needs no `'static` bound.
+//! Blelloch scan ([`crate::scan::blelloch`]), the reference backend's
+//! row/chunk fan-out and the coordinator's workers. Earlier revisions
+//! spawned fresh scoped threads per call; at scan-level granularity
+//! the spawn/join cost dominated the actual kernel work, so the pool
+//! is now **persistent**: worker threads are spawned lazily on first
+//! use, park on a condvar between calls, and pick work items off an
+//! atomic injection counter. Dispatch is **allocation-free** — the
+//! job descriptor lives on the submitter's stack and is published by
+//! reference (pinned in `tests/alloc_free.rs`) — and the public API
+//! (`parallel_for` / `parallel_update` / `parallel_chunks` /
+//! `parallel_map`) is unchanged, so callers still pass borrowed,
+//! non-`'static` closures.
+//!
+//! Concurrency model: one job slot. The submitter publishes the job
+//! under the pool mutex, wakes the workers, then works the job itself
+//! (it is always one of the runners); workers claim the job at most
+//! once each, drain indices via `fetch_add`, and report completion
+//! back through the mutex. If the slot is busy (a concurrent
+//! dispatch) or the caller *is* a pool worker (nested parallelism),
+//! the call degrades to an inline sequential loop — never a
+//! deadlock. Worker panics are captured and re-raised on the
+//! submitting thread after the job quiesces.
+//!
+//! Worker count: `default_workers()` is the sizing hint everywhere —
+//! override order is [`set_workers`] (in-process) > `PSM_WORKERS`
+//! (env, parsed once) > available cores capped at 16. The pool's
+//! thread count is fixed at first dispatch; later larger hints are
+//! capped by the threads actually running.
+//!
+//! Telemetry (through [`crate::obs`], no-ops under `PSM_METRICS=0`):
+//! `psm_pool_dispatches_total`, `psm_pool_inline_total` (contended or
+//! nested calls that ran inline), `psm_pool_tasks_total`,
+//! `psm_pool_dispatch_ns_total`, and the live
+//! `psm_pool_active_workers` gauge (queue depth of claimed workers).
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
 
-/// Number of worker threads to use by default (cores, capped at 16).
-pub fn default_workers() -> usize {
+// ---------------------------------------------------------------------
+// Worker-count policy
+// ---------------------------------------------------------------------
+
+/// In-process override set via [`set_workers`]; 0 = unset.
+static WORKER_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker-count hint for this process (tests sweep
+/// reproducibility across counts without re-exec). `set_workers(0)`
+/// clears the override, falling back to `PSM_WORKERS` / cores.
+pub fn set_workers(n: usize) {
+    WORKER_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// `PSM_WORKERS` parsed once (env reads allocate; dispatch must not).
+fn env_workers() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("PSM_WORKERS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
+}
+
+fn hw_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .min(16)
 }
 
-/// Run `f(i)` for every `i in 0..n`, distributing indices over `workers`
-/// threads with dynamic (work-stealing-ish atomic counter) scheduling.
+/// Number of worker threads to use by default: [`set_workers`]
+/// override, else `PSM_WORKERS`, else cores capped at 16.
+pub fn default_workers() -> usize {
+    let o = WORKER_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    env_workers().unwrap_or_else(hw_workers)
+}
+
+// ---------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// True on pool worker threads: nested `parallel_for` calls from
+    /// inside a job run inline instead of contending for the single
+    /// job slot (which would deadlock a worker against itself).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A dispatched job. Lives on the **submitter's stack**; workers see
+/// it through a lifetime-erased reference that is retracted (and
+/// quiesced) before `dispatch` returns.
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    n: usize,
+    /// First panic payload captured by any runner.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// SAFETY: pure lifetime erasure — same pointee, same vtable. The
+/// borrow outlives every access because `dispatch` retracts the job
+/// and blocks until `active == 0` before the referent leaves scope.
+unsafe fn erase<'a>(
+    f: &'a (dyn Fn(usize) + Sync + 'a),
+) -> &'static (dyn Fn(usize) + Sync + 'static) {
+    std::mem::transmute::<
+        &'a (dyn Fn(usize) + Sync + 'a),
+        &'static (dyn Fn(usize) + Sync + 'static),
+    >(f)
+}
+
+/// SAFETY: as [`erase`] — the `&'static` never escapes the window in
+/// which the stack `Job` is alive.
+unsafe fn erase_job(job: &Job) -> &'static Job {
+    std::mem::transmute::<&Job, &'static Job>(job)
+}
+
+struct PoolState {
+    job: Option<&'static Job>,
+    /// Bumped per publish so a worker claims each job at most once.
+    seq: u64,
+    /// Workers currently inside the published job.
+    active: usize,
+    /// Max workers allowed to claim the current job.
+    max_claims: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Worker threads actually spawned (excludes the submitter).
+    threads: usize,
+}
+
+struct PoolObs {
+    dispatches: crate::obs::Counter,
+    inline: crate::obs::Counter,
+    tasks: crate::obs::Counter,
+    dispatch_ns: crate::obs::Counter,
+    active: crate::obs::Gauge,
+}
+
+fn pool_obs() -> &'static PoolObs {
+    static OBS: OnceLock<PoolObs> = OnceLock::new();
+    OBS.get_or_init(|| PoolObs {
+        dispatches: crate::obs::counter(
+            "psm_pool_dispatches_total",
+            "parallel jobs dispatched to the persistent pool",
+        ),
+        inline: crate::obs::counter(
+            "psm_pool_inline_total",
+            "parallel calls that ran inline (nested or contended)",
+        ),
+        tasks: crate::obs::counter(
+            "psm_pool_tasks_total",
+            "work items (indices) processed through the pool",
+        ),
+        dispatch_ns: crate::obs::counter(
+            "psm_pool_dispatch_ns_total",
+            "wall time spent inside pool dispatches",
+        ),
+        active: crate::obs::gauge(
+            "psm_pool_active_workers",
+            "pool workers currently running a claimed job",
+        ),
+    })
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        // Capacity is fixed at first use: enough threads for the
+        // current hint or the hardware, whichever is larger (the
+        // submitter is always the +1th runner).
+        let cap = default_workers().max(hw_workers());
+        let threads = cap.saturating_sub(1).max(1);
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            state: Mutex::new(PoolState {
+                job: None,
+                seq: 0,
+                active: 0,
+                max_claims: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            threads,
+        }));
+        for i in 0..threads {
+            std::thread::Builder::new()
+                .name(format!("psm-pool-{i}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawn pool worker");
+        }
+        pool
+    })
+}
+
+/// Drain the job's index stream. Runs on workers *and* the submitter.
+fn run_job(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        (job.f)(i);
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    let mut last_seen = 0u64;
+    loop {
+        let job = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.job {
+                    if st.seq != last_seen && st.active < st.max_claims {
+                        last_seen = st.seq;
+                        st.active += 1;
+                        break job;
+                    }
+                }
+                st = pool.work_cv.wait(st).unwrap();
+            }
+        };
+        let obs = pool_obs();
+        obs.active.inc();
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| run_job(job))) {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        obs.active.dec_floor0();
+        let mut st = pool.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            pool.done_cv.notify_all();
+        }
+    }
+}
+
+/// Publish a job, work it from the submitting thread, quiesce, and
+/// re-raise any captured panic. Falls back to an inline loop when the
+/// slot is busy.
+fn dispatch(n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
+    let pool = pool();
+    let obs = pool_obs();
+    let t0 = crate::obs::enabled().then(std::time::Instant::now);
+    let job = Job {
+        f: unsafe { erase(f) },
+        next: AtomicUsize::new(0),
+        n,
+        panic: Mutex::new(None),
+    };
+    {
+        let mut st = pool.state.lock().unwrap();
+        if st.job.is_some() || st.active > 0 {
+            // Contended slot (concurrent dispatch from another
+            // thread): run inline rather than queueing.
+            drop(st);
+            obs.inline.inc();
+            run_job(&job);
+            if let Some(t0) = t0 {
+                obs.dispatch_ns.add(t0.elapsed().as_nanos() as u64);
+            }
+            return;
+        }
+        st.job = Some(unsafe { erase_job(&job) });
+        st.seq = st.seq.wrapping_add(1);
+        st.max_claims = workers.saturating_sub(1).min(pool.threads);
+    }
+    pool.work_cv.notify_all();
+    obs.dispatches.inc();
+    obs.tasks.add(n as u64);
+
+    // The submitter is always one of the runners.
+    let mine = catch_unwind(AssertUnwindSafe(|| run_job(&job)));
+
+    // Retract the job (no new claims) and wait for workers to leave
+    // it — after this, no reference to the stack `Job` survives.
+    let mut st = pool.state.lock().unwrap();
+    st.job = None;
+    while st.active > 0 {
+        st = pool.done_cv.wait(st).unwrap();
+    }
+    drop(st);
+
+    if let Some(t0) = t0 {
+        obs.dispatch_ns.add(t0.elapsed().as_nanos() as u64);
+    }
+    if let Some(p) = job.panic.lock().unwrap().take() {
+        resume_unwind(p);
+    }
+    if let Err(p) = mine {
+        resume_unwind(p);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public API (unchanged signatures)
+// ---------------------------------------------------------------------
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices over up to
+/// `workers` runners with dynamic (atomic-counter) scheduling through
+/// the persistent pool.
 ///
 /// Blocks until all items complete. Panics in workers propagate.
+/// Nested calls (from inside a pool job) run inline.
 pub fn parallel_for<F>(n: usize, workers: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -27,24 +324,13 @@ where
         return;
     }
     let workers = workers.max(1).min(n);
-    if workers == 1 {
+    if workers == 1 || IN_POOL_WORKER.with(|w| w.get()) {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                f(i);
-            });
-        }
-    });
+    dispatch(n, workers, &f);
 }
 
 /// Run `f(i, &mut dst[i])` for every slot in parallel — the in-place
@@ -93,7 +379,8 @@ where
     struct Slots<T>(*mut T);
     // SAFETY: window i covers [i*chunk, (i+1)*chunk) and each i is
     // handed out exactly once, so the &mut windows are disjoint; the
-    // scope joins all workers before the caller sees `dst` again.
+    // dispatch quiesces all workers before the caller sees `dst`
+    // again.
     unsafe impl<T: Send> Sync for Slots<T> {}
 
     let slots = Slots(dst.as_mut_ptr());
@@ -114,8 +401,8 @@ where
 {
     struct Slots<T>(*mut Option<T>);
     // SAFETY: each index is claimed by exactly one worker (the atomic
-    // counter in parallel_for hands out every i once), so writes are
-    // disjoint; the scope joins all workers before we read.
+    // counter in the dispatch hands out every i once), so writes are
+    // disjoint; the dispatch quiesces all workers before we read.
     unsafe impl<T: Send> Sync for Slots<T> {}
 
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -154,6 +441,59 @@ mod tests {
     #[test]
     fn empty_is_noop() {
         parallel_for(0, 4, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn repeated_dispatches_reuse_the_pool() {
+        // A long sequence of small jobs — exercises publish/claim/
+        // retract cycling on the single slot.
+        for round in 0..200 {
+            let hits = AtomicU64::new(0);
+            parallel_for(round % 7 + 2, 4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), (round % 7 + 2) as u64);
+        }
+    }
+
+    #[test]
+    fn nested_parallel_for_runs_inline() {
+        let hits = AtomicU64::new(0);
+        parallel_for(8, 4, |_| {
+            // Inner call must not contend for the job slot.
+            parallel_for(10, 4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_for(64, 4, |i| {
+                if i == 33 {
+                    panic!("boom at {i}");
+                }
+            });
+        });
+        assert!(r.is_err(), "worker panic must reach the submitter");
+        // The pool must remain usable after a propagated panic.
+        let hits = AtomicU64::new(0);
+        parallel_for(100, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn set_workers_overrides_default() {
+        // Serialized against other tests only by being the sole user
+        // of the override in this module; clear it before leaving.
+        set_workers(3);
+        assert_eq!(default_workers(), 3);
+        set_workers(0);
+        assert!(default_workers() >= 1);
     }
 
     #[test]

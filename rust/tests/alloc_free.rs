@@ -14,6 +14,10 @@
 //!   the scan core's locally-batched flush) stays **zero-alloc** at
 //!   steady state even with `PSM_METRICS` enabled — observability must
 //!   not cost the discipline it observes.
+//! * The persistent worker pool dispatches with **zero allocations**
+//!   after warm-up: the job descriptor lives on the submitter's stack
+//!   and the parked workers are reused, so fanning work out is as
+//!   alloc-disciplined as the scan it accelerates.
 
 use psm::bench::{alloc_count as allocs, CountingAlloc};
 use psm::runtime::reference::ChunkSumOp;
@@ -47,6 +51,8 @@ fn main() {
         metrics_recording_is_allocation_free);
     run("scan_metric_flush_is_allocation_free",
         scan_metric_flush_is_allocation_free);
+    run("persistent_pool_dispatch_is_allocation_free",
+        persistent_pool_dispatch_is_allocation_free);
 
     if failed > 0 {
         eprintln!("{failed} alloc_free tests failed");
@@ -201,6 +207,41 @@ fn scan_metric_flush_is_allocation_free() {
         delta, 0,
         "push cycle + metrics flush performed {delta} heap allocations"
     );
+}
+
+/// Dispatching through the persistent pool allocates NOTHING once the
+/// workers are spawned and parked: the job descriptor is stack-resident
+/// and published by reference, claims go through atomics, and the
+/// telemetry counters record without heap traffic. (The first dispatch
+/// spawns threads and registers the pool's metric families — that is
+/// the warm-up, outside the measured region.)
+fn persistent_pool_dispatch_is_allocation_free() {
+    use psm::util::pool;
+    let n = 4096usize;
+    let workers = 4usize;
+    let mut buf = vec![0.0f32; n];
+    // Warm-up: spawn + park the workers, register pool metrics, and
+    // settle every code path the timed region will take.
+    for round in 0..8usize {
+        pool::parallel_update(&mut buf, workers, |i, v| {
+            *v = (i * 31 + round) as f32;
+        });
+        pool::parallel_for(n, workers, |_| {});
+    }
+    let a0 = allocs();
+    for round in 0..100usize {
+        pool::parallel_update(&mut buf, workers, |i, v| {
+            *v = (i * 7 + round) as f32;
+        });
+    }
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta, 0,
+        "steady-state pool dispatch performed {delta} heap allocations \
+         over 100 rounds"
+    );
+    // The dispatches did real work.
+    assert_eq!(buf[1], (7 + 99) as f32);
 }
 
 /// The `ConcatOp` in-place merge (`agg_into` with `String` reuse) is

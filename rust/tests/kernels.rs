@@ -1,0 +1,238 @@
+//! Property pins for the tiled/SIMD kernel layer and the two-level
+//! dispatch (harness = false; exits non-zero on failure):
+//!
+//! * `PSM_WORKERS` env override feeds `pool::default_workers` (set
+//!   before any pool use, so this runs as its own process).
+//! * Every dispatched kernel matches its retained scalar reference
+//!   across awkward lengths (sub-lane, straddling, multi-tile):
+//!   elementwise add/scale/mul are **bit-identical** (single-rounded
+//!   IEEE ops on every path); `axpy` is compared within duality-sweep
+//!   tolerance because the vector path fuses multiply-add (FMA differs
+//!   from mul-then-add by at most 1 ulp per element).
+//! * `ChunkSumOp::agg_slices` == `agg_slices_scalar` bit-for-bit, and
+//!   the fused `fold_roots_into` override keeps `prefix_into` ==
+//!   owned `prefix()` == static Blelloch at every t.
+//! * The two-level forward (`forward_hidden_parallel`) and the `fwd`
+//!   entry point are **bit-identical across worker counts {1, 4, 16}**.
+
+use psm::runtime::reference::{
+    forward_hidden_parallel, forward_hidden_seq, ChunkSumOp, RefModelCfg,
+};
+use psm::runtime::{ParamStore, Runtime};
+use psm::scan::traits::Aggregator;
+use psm::scan::{blelloch_scan, OnlineScan};
+use psm::util::prng::Rng;
+use psm::util::{kernels, pool};
+
+fn main() {
+    // Before anything touches the pool: the env override must win over
+    // the hardware default (satellite pin for PSM_WORKERS).
+    std::env::set_var("PSM_WORKERS", "4");
+
+    let mut failed = 0;
+    let mut run = |name: &str, f: &dyn Fn()| {
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+            .is_ok();
+        println!(
+            "test kernels::{name} ... {}",
+            if ok { "ok" } else { "FAILED" }
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("env_override_sets_default_workers",
+        &env_override_sets_default_workers);
+    run("kernels_match_scalar_reference", &kernels_match_scalar_reference);
+    run("agg_slices_matches_scalar", &agg_slices_matches_scalar);
+    run("fused_fold_matches_owned_and_blelloch",
+        &fused_fold_matches_owned_and_blelloch);
+    run("two_level_forward_bit_identical_across_worker_counts",
+        &two_level_forward_bit_identical_across_worker_counts);
+    run("fwd_entry_bit_identical_across_worker_counts",
+        &fwd_entry_bit_identical_across_worker_counts);
+
+    if failed > 0 {
+        eprintln!("{failed} kernels tests failed");
+        std::process::exit(1);
+    }
+    println!("test result: ok.");
+}
+
+/// Lengths that exercise the scalar tail, a partially filled tile and
+/// multi-tile bodies (LANES = 8).
+const SIZES: [usize; 5] = [1, 3, 7, 48, 65];
+
+fn env_override_sets_default_workers() {
+    assert_eq!(
+        pool::default_workers(),
+        4,
+        "PSM_WORKERS=4 must override the hardware default"
+    );
+    // The programmatic override outranks the env var…
+    pool::set_workers(9);
+    assert_eq!(pool::default_workers(), 9);
+    // …and resetting it restores the env-derived value.
+    pool::set_workers(0);
+    assert_eq!(pool::default_workers(), 4);
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn kernels_match_scalar_reference() {
+    let mut rng = Rng::new(0x5EED);
+    for &n in &SIZES {
+        let a = rand_vec(&mut rng, n);
+        let b = rand_vec(&mut rng, n);
+        let s = rng.normal() as f32;
+
+        let mut want = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+
+        kernels::add_into_scalar(&mut want, &a, &b);
+        kernels::add_into(&mut got, &a, &b);
+        assert_eq!(want, got, "add_into n={n}");
+
+        want.copy_from_slice(&a);
+        got.copy_from_slice(&a);
+        kernels::add_assign_scalar(&mut want, &b);
+        kernels::add_assign(&mut got, &b);
+        assert_eq!(want, got, "add_assign n={n}");
+
+        want.copy_from_slice(&a);
+        got.copy_from_slice(&a);
+        kernels::radd_assign_scalar(&mut want, &b);
+        kernels::radd_assign(&mut got, &b);
+        assert_eq!(want, got, "radd_assign n={n}");
+
+        kernels::scale_into_scalar(&mut want, &a, s);
+        kernels::scale_into(&mut got, &a, s);
+        assert_eq!(want, got, "scale_into n={n}");
+
+        kernels::mul_into_scalar(&mut want, &a, &b);
+        kernels::mul_into(&mut got, &a, &b);
+        assert_eq!(want, got, "mul_into n={n}");
+
+        // FMA path: <= 1 ulp per element vs mul-then-add; pin within
+        // the duality-sweep tolerance, scaled to the operand magnitude.
+        want.copy_from_slice(&b);
+        got.copy_from_slice(&b);
+        kernels::axpy_scalar(&mut want, s, &a);
+        kernels::axpy(&mut got, s, &a);
+        for i in 0..n {
+            let tol = 1e-5 * (1.0 + want[i].abs());
+            assert!(
+                (want[i] - got[i]).abs() <= tol,
+                "axpy n={n} i={i}: {} vs {}",
+                want[i],
+                got[i]
+            );
+        }
+    }
+}
+
+fn agg_slices_matches_scalar() {
+    let mut rng = Rng::new(0xA66);
+    let c = 32usize;
+    for &d in &SIZES {
+        let op = ChunkSumOp { c, d };
+        let l = rand_vec(&mut rng, c * d);
+        let r = rand_vec(&mut rng, c * d);
+        let mut want = vec![0.0f32; c * d];
+        let mut got = vec![f32::NAN; c * d];
+        op.agg_slices_scalar(&l, &r, &mut want);
+        op.agg_slices(&l, &r, &mut got);
+        assert_eq!(want, got, "agg_slices c={c} d={d}");
+    }
+}
+
+/// The fused `ChunkSumOp::fold_roots_into` must keep all three prefix
+/// paths bit-identical at EVERY step, across chunk shapes that hit the
+/// sub-lane, straddling and multi-tile kernel paths.
+fn fused_fold_matches_owned_and_blelloch() {
+    let mut rng = Rng::new(0xF01D);
+    for &c in &[4usize, 32] {
+        for &d in &[1usize, 3, 7, 65] {
+            let op = ChunkSumOp { c, d };
+            let chunks: Vec<Vec<f32>> =
+                (0..100).map(|_| rand_vec(&mut rng, c * d)).collect();
+            let static_pref = blelloch_scan(&op, &chunks);
+            let mut scan = OnlineScan::new(&op);
+            let mut pbuf: Vec<f32> = Vec::new();
+            for (t, ch) in chunks.iter().enumerate() {
+                scan.prefix_into(&mut pbuf);
+                assert_eq!(
+                    static_pref[t], pbuf,
+                    "fused fold vs blelloch c={c} d={d} t={t}"
+                );
+                assert_eq!(
+                    scan.prefix(),
+                    pbuf,
+                    "fused fold vs owned prefix c={c} d={d} t={t}"
+                );
+                let mut y = scan.take_buffer();
+                y.resize(c * d, 0.0);
+                y.copy_from_slice(ch);
+                scan.push(y);
+            }
+        }
+    }
+}
+
+fn two_level_forward_bit_identical_across_worker_counts() {
+    let cfg = RefModelCfg {
+        vocab: 64,
+        d: 48,
+        chunk: 8,
+        batch: 1,
+        seq: 131, // 16 full chunks + ragged tail of 3
+        block_k: 1,
+    };
+    let mut rng = Rng::new(0x2CE1);
+    let tok_emb = rand_vec(&mut rng, cfg.vocab * cfg.d);
+    let toks: Vec<i32> = (0..cfg.seq)
+        .map(|_| rng.range(0, cfg.vocab) as i32)
+        .collect();
+    let mut want = vec![0.0f32; cfg.seq * cfg.d];
+    forward_hidden_seq(&cfg, &tok_emb, &toks, &mut want);
+    for workers in [1usize, 4, 16] {
+        let mut got = vec![f32::NAN; cfg.seq * cfg.d];
+        forward_hidden_parallel(&cfg, &tok_emb, &toks, &mut got, workers);
+        assert_eq!(want, got, "workers={workers}");
+    }
+}
+
+/// The production `fwd` entry point returns bit-identical logits no
+/// matter how many workers the pool is told to use — covering whichever
+/// dispatch shape (row-parallel or two-level) the gate picks at each
+/// count.
+fn fwd_entry_bit_identical_across_worker_counts() {
+    let rt = Runtime::reference();
+    let model = "psm_lm_c16";
+    let params = ParamStore::init(&rt, model, 5).unwrap();
+    let spec = rt.model(model).unwrap();
+    let (b, n, v) = (
+        spec.cfg_usize("batch").unwrap(),
+        spec.cfg_usize("seq").unwrap(),
+        spec.cfg_usize("vocab").unwrap(),
+    );
+    let mut rng = Rng::new(23);
+    let tokens: Vec<i32> =
+        (0..b * n).map(|_| rng.range(0, v.min(100)) as i32).collect();
+    let mut inputs = params.to_values();
+    inputs.push(psm::runtime::HostValue::s32(&[b, n], tokens));
+    let fwd = rt.load(model, "fwd").unwrap();
+
+    let mut outputs: Vec<Vec<f32>> = Vec::new();
+    for workers in [1usize, 4, 16] {
+        pool::set_workers(workers);
+        let out = fwd.run(&inputs).unwrap()[0].as_f32().unwrap().to_vec();
+        outputs.push(out);
+    }
+    pool::set_workers(0);
+    assert_eq!(outputs[0], outputs[1], "fwd diverged between 1 and 4 workers");
+    assert_eq!(outputs[0], outputs[2], "fwd diverged between 1 and 16 workers");
+}
