@@ -3,7 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench bench-check chaos obs artifacts clean
+.PHONY: build test bench bench-check chaos obs artifacts clean \
+        lint loom miri tsan asan analysis
 
 build:
 	cargo build --release
@@ -46,3 +47,42 @@ artifacts:
 clean:
 	cargo clean
 	rm -rf $(ARTIFACTS)
+
+# ---- correctness tooling (see README "Correctness tooling") -----------------
+
+# Repo-invariant linter: the self-test seeds one violation per rule and
+# must fail on each before the real tree is linted.
+lint:
+	cargo run --release --bin lint -- --self-test
+	cargo run --release --bin lint
+
+# Model-checked pool protocol: the vendored bounded-preemption checker
+# replaces std::sync via the `loom` feature (util::sync). Tune with
+# LOOM_MAX_ITER (default 200) / LOOM_MAX_PREEMPTIONS (default 4).
+loom:
+	cargo test --release --features loom --test loom_pool
+
+# Curated unsafe-core subset under the Miri interpreter (needs
+# `rustup +nightly component add miri`). The same binary runs natively
+# in tier-1, so the subset cannot rot.
+miri:
+	cargo +nightly miri test --test miri_core
+
+# Sanitizers rebuild std instrumented (-Zbuild-std, needs the nightly
+# rust-src component). PSM_SOAK=short keeps the soak inside CI budget;
+# detect_leaks=0 because the process-global pool is intentionally
+# leaked (workers park forever by design).
+SAN_TARGET ?= x86_64-unknown-linux-gnu
+
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" PSM_SOAK=short \
+	cargo +nightly test -Zbuild-std --target $(SAN_TARGET) \
+	    --test kernels --test chaos_soak
+
+asan:
+	RUSTFLAGS="-Zsanitizer=address" ASAN_OPTIONS=detect_leaks=0 PSM_SOAK=short \
+	cargo +nightly test -Zbuild-std --target $(SAN_TARGET) \
+	    --test kernels --test chaos_soak
+
+# Everything the CI `analysis` job matrix runs, in one local pass.
+analysis: lint loom miri tsan asan

@@ -55,10 +55,10 @@ fn main() {
     // numbers stay comparable across PRs.
     std::env::set_var("PSM_METRICS", "0");
     let quick = std::env::args().any(|a| a == "--quick");
-    let n: usize = std::env::var("PSM_BENCH_TOKENS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(if quick { 64 } else { 256 });
+    let n: usize = psm::util::env::parse_or(
+        "PSM_BENCH_TOKENS",
+        if quick { 64 } else { 256 },
+    );
     let model = "psm_s5";
     let tokens: Vec<i32> = (0..n).map(|t| (t % 100) as i32).collect();
 

@@ -17,10 +17,7 @@ use psm::train::{Curriculum, Trainer};
 use psm::util::prng::Rng;
 
 fn steps() -> usize {
-    std::env::var("PSM_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(24)
+    psm::util::env::parse_or("PSM_BENCH_STEPS", 24)
 }
 
 fn train(rt: &Runtime, model: &str, steps: usize, seed: u64) -> ParamStore {
@@ -63,7 +60,7 @@ fn psm_error(
             let pred = logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             total += 1;

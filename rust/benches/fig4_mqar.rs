@@ -12,10 +12,7 @@ use psm::train::Trainer;
 use psm::util::prng::Rng;
 
 fn steps() -> usize {
-    std::env::var("PSM_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(12)
+    psm::util::env::parse_or("PSM_BENCH_STEPS", 12)
 }
 
 fn train_and_eval(rt: &Runtime, model: &str, steps: usize, seed: u64)

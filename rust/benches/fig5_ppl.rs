@@ -11,10 +11,7 @@ use psm::train::eval::{mean_perplexity, Evaluator};
 use psm::train::Trainer;
 
 fn steps() -> usize {
-    std::env::var("PSM_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(8)
+    psm::util::env::parse_or("PSM_BENCH_STEPS", 8)
 }
 
 fn train_and_ppl(rt: &Runtime, model: &str, steps: usize, seed: u64)

@@ -17,10 +17,7 @@ use psm::runtime::{default_artifacts_dir, ParamStore, Runtime};
 use psm::util::stats::Summary;
 
 fn tokens() -> usize {
-    std::env::var("PSM_BENCH_TOKENS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(320)
+    psm::util::env::parse_or("PSM_BENCH_TOKENS", 320)
 }
 
 /// Measure per-token latency, bucketed by position windows of 64.

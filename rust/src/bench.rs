@@ -28,6 +28,8 @@ pub struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to `System` plus a relaxed counter bump;
+// every layout/pointer contract is `System`'s own.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
@@ -59,7 +61,7 @@ pub fn alloc_count() -> u64 {
 /// with cwd at the *package* root, not the invoking directory.
 /// `PSM_BENCH_DIR` overrides.
 pub fn artifact_path(name: &str) -> std::path::PathBuf {
-    match std::env::var_os("PSM_BENCH_DIR") {
+    match crate::util::env::raw_os("PSM_BENCH_DIR") {
         Some(d) => std::path::PathBuf::from(d).join(name),
         None => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("..")

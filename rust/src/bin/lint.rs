@@ -1,0 +1,795 @@
+//! Repo-invariant static analysis (`make lint`; the CI `analysis` job).
+//!
+//! Four rules, each enforcing an invariant the test suite cannot see:
+//!
+//! 1. **Documented unsafety** — every `unsafe` *block* and `unsafe
+//!    impl` must carry a `SAFETY:` comment within the ten preceding
+//!    lines. (`unsafe fn` declarations are exempt, matching clippy's
+//!    `undocumented_unsafe_blocks`: the contract belongs on the doc
+//!    comment, the argument on each call site.)
+//! 2. **Registered env vars** — every exact `"PSM_*"` string literal
+//!    in the crate must appear in `util::env::REGISTRY`, every
+//!    registry entry must appear in the README env table, and every
+//!    `PSM_*` token the README mentions must be a registry entry.
+//!    Together these keep code, registry and docs from drifting.
+//! 3. **Documented metrics** — every metric name registered through
+//!    `obs::{counter,counter_kv,gauge,summary}` must appear in the
+//!    README metric catalog (brace families like
+//!    `psm_scan_{pushes,merges}_total` are expanded; `{k=v}` label
+//!    groups are display-only and ignored).
+//! 4. **Total float ordering** — `.partial_cmp(..).unwrap()` is
+//!    forbidden outside test code: it panics on NaN, exactly where the
+//!    chaos tier injects NaN. Use `f32::total_cmp`.
+//!
+//! The scanner is a small char-level state machine that strips `//`
+//! and nested `/* */` comments, collects their text separately (for
+//! the `SAFETY:` check), extracts string literals — escapes, raw
+//! `r#".."#` and byte forms included — and distinguishes lifetimes
+//! from char literals. Rules then run over *code* lines, *comment*
+//! lines and *literals* independently, so a rule can never be faked
+//! out by (or false-positive on) quoted or commented text.
+//!
+//! `--self-test` runs the rules against in-memory fixtures with a
+//! seeded violation per rule and exits non-zero unless every rule both
+//! fires on its violation and stays quiet on the clean twin. CI runs
+//! the self-test before the tree lint, so a silently broken rule
+//! cannot green the gate.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use psm::util::env::{is_registered, REGISTRY};
+
+// --------------------------------------------------------------------------
+// Source scanner
+// --------------------------------------------------------------------------
+
+/// One file, split into per-line code text, per-line comment text and
+/// extracted string literals (tagged with their starting 1-based line).
+#[derive(Default)]
+struct Scanned {
+    code: Vec<String>,
+    comments: Vec<String>,
+    strings: Vec<(usize, String)>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn scan(src: &str) -> Scanned {
+    let cs: Vec<char> = src.chars().collect();
+    let mut out = Scanned::default();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+    let mut prev_ident = false;
+
+    fn flush(out: &mut Scanned, code: &mut String, comment: &mut String) {
+        out.code.push(std::mem::take(code));
+        out.comments.push(std::mem::take(comment));
+    }
+
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            flush(&mut out, &mut code, &mut comment);
+            prev_ident = false;
+            i += 1;
+        } else if c == '/' && cs.get(i + 1) == Some(&'/') {
+            while i < cs.len() && cs[i] != '\n' {
+                comment.push(cs[i]);
+                i += 1;
+            }
+            prev_ident = false;
+        } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        flush(&mut out, &mut code, &mut comment);
+                    } else {
+                        comment.push(cs[i]);
+                    }
+                    i += 1;
+                }
+            }
+            prev_ident = false;
+        } else if c == '"' {
+            let line0 = out.code.len() + 1;
+            let mut content = String::new();
+            i += 1;
+            while i < cs.len() {
+                match cs[i] {
+                    '\\' => {
+                        if let Some(&e) = cs.get(i + 1) {
+                            content.push('\\');
+                            content.push(e);
+                        }
+                        i += 2;
+                    }
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        flush(&mut out, &mut code, &mut comment);
+                        content.push('\n');
+                        i += 1;
+                    }
+                    ch => {
+                        content.push(ch);
+                        i += 1;
+                    }
+                }
+            }
+            out.strings.push((line0, content));
+            prev_ident = false;
+        } else if (c == 'r' || c == 'b') && !prev_ident {
+            // Candidate raw/byte string: b" r" r#" br" br#" …; raw
+            // identifiers (`r#match`) and byte chars (`b'x'`) fall
+            // through to ordinary handling.
+            let mut j = i;
+            if cs[j] == 'b' {
+                j += 1;
+            }
+            let is_raw = cs.get(j) == Some(&'r');
+            if is_raw {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while cs.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            // If no quote follows the prefix this was an identifier
+            // (or `b'x'`), and falls through to ordinary handling. A
+            // plain `b"…"` still processes escapes, so jump back to
+            // the opening quote and let the string arm consume it.
+            let quoted = j > i && cs.get(j) == Some(&'"');
+            if quoted && !is_raw {
+                i = j; // the '"' branch takes it from here next loop
+                prev_ident = false;
+                continue;
+            }
+            if quoted {
+                let line0 = out.code.len() + 1;
+                let mut content = String::new();
+                i = j + 1;
+                while i < cs.len() {
+                    if cs[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && cs.get(i + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            i += 1 + hashes;
+                            break;
+                        }
+                    }
+                    if cs[i] == '\n' {
+                        flush(&mut out, &mut code, &mut comment);
+                    }
+                    content.push(cs[i]);
+                    i += 1;
+                }
+                out.strings.push((line0, content));
+                prev_ident = false;
+            } else {
+                code.push(c);
+                prev_ident = true;
+                i += 1;
+            }
+        } else if c == '\'' {
+            if cs.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: skip to the closing quote
+                // (handles '\n', '\'', '\u{7f}').
+                i += 2;
+                while i < cs.len() && cs[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if cs.get(i + 2) == Some(&'\'') && cs.get(i + 1).is_some() {
+                i += 3; // 'x'
+            } else {
+                code.push('\''); // lifetime or loop label
+                i += 1;
+            }
+            prev_ident = false;
+        } else {
+            code.push(c);
+            prev_ident = is_ident(c);
+            i += 1;
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        flush(&mut out, &mut code, &mut comment);
+    }
+    out
+}
+
+// --------------------------------------------------------------------------
+// Rule 1: every unsafe block / unsafe impl carries a SAFETY: comment
+// --------------------------------------------------------------------------
+
+/// Lines of comment context the SAFETY: note may sit above the site.
+const SAFETY_WINDOW: usize = 10;
+
+fn rule_unsafe(rel: &str, s: &Scanned, findings: &mut Vec<String>) -> usize {
+    let mut sites = 0usize;
+    for (idx, line) in s.code.iter().enumerate() {
+        let mut from = 0usize;
+        while let Some(p) = line[from..].find("unsafe") {
+            let at = from + p;
+            from = at + 6;
+            let before_ok =
+                !line[..at].chars().next_back().is_some_and(is_ident);
+            let after_ok =
+                !line[at + 6..].chars().next().is_some_and(is_ident);
+            if !before_ok || !after_ok {
+                continue; // substring of a longer identifier
+            }
+            // What does this `unsafe` introduce? Look at the next
+            // non-blank code text, same line or below.
+            let mut rest = line[at + 6..].trim_start().to_string();
+            let mut look = idx + 1;
+            while rest.is_empty() && look < s.code.len() {
+                rest = s.code[look].trim_start().to_string();
+                look += 1;
+            }
+            let is_block = rest.starts_with('{');
+            let is_impl = rest.starts_with("impl")
+                && !rest[4..].chars().next().is_some_and(is_ident);
+            if !(is_block || is_impl) {
+                continue; // `unsafe fn` / `unsafe extern` declaration
+            }
+            sites += 1;
+            let lo = idx.saturating_sub(SAFETY_WINDOW);
+            let documented = s.comments[lo..=idx]
+                .iter()
+                .any(|c| c.contains("SAFETY"));
+            if !documented {
+                findings.push(format!(
+                    "{rel}:{}: [unsafe-doc] `unsafe {}` without a \
+                     SAFETY: comment in the {SAFETY_WINDOW} lines above",
+                    idx + 1,
+                    if is_impl { "impl" } else { "block" },
+                ));
+            }
+        }
+    }
+    sites
+}
+
+// --------------------------------------------------------------------------
+// Rule 2: exact "PSM_*" literals are registered; registry and README agree
+// --------------------------------------------------------------------------
+
+fn is_env_literal(s: &str) -> bool {
+    s.len() > 4
+        && s.starts_with("PSM_")
+        && s[4..]
+            .chars()
+            .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn rule_env(rel: &str, s: &Scanned, findings: &mut Vec<String>) -> usize {
+    let mut seen = 0usize;
+    for (line, lit) in &s.strings {
+        if !is_env_literal(lit) {
+            continue;
+        }
+        seen += 1;
+        if !is_registered(lit) {
+            findings.push(format!(
+                "{rel}:{line}: [env-registry] `{lit}` is not in \
+                 util::env::REGISTRY — register it (name, default, doc)",
+            ));
+        }
+    }
+    seen
+}
+
+/// Maximal `[A-Z0-9_]` runs in free text that start with the env prefix.
+fn readme_env_tokens(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut run = String::new();
+    for c in text.chars().chain(std::iter::once(' ')) {
+        if c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_' {
+            run.push(c);
+        } else {
+            if is_env_literal(&run) {
+                out.insert(std::mem::take(&mut run));
+            }
+            run.clear();
+        }
+    }
+    out
+}
+
+fn rule_env_docs(
+    readme_rel: &str,
+    readme: &str,
+    findings: &mut Vec<String>,
+) {
+    let documented = readme_env_tokens(readme);
+    for v in REGISTRY {
+        if !documented.contains(v.name) {
+            findings.push(format!(
+                "{readme_rel}: [env-docs] registered variable `{}` is \
+                 missing from the README env table",
+                v.name,
+            ));
+        }
+    }
+    for name in &documented {
+        if !is_registered(name) {
+            findings.push(format!(
+                "{readme_rel}: [env-docs] README mentions `{name}` but \
+                 util::env::REGISTRY has no such entry (stale docs?)",
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Rule 3: registered metric names appear in the README catalog
+// --------------------------------------------------------------------------
+
+const METRIC_CALLS: [&str; 4] = ["counter(", "counter_kv(", "gauge(", "summary("];
+
+fn is_metric_literal(s: &str) -> bool {
+    s.len() > 4
+        && s.starts_with("psm_")
+        && s[4..]
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn rule_metrics(
+    rel: &str,
+    s: &Scanned,
+    documented: &BTreeSet<String>,
+    findings: &mut Vec<String>,
+) -> usize {
+    let mut seen = 0usize;
+    for (line, lit) in &s.strings {
+        if !is_metric_literal(lit) {
+            continue;
+        }
+        // Registration site: one of the constructor tokens within the
+        // two code lines at or above the literal (names are written on
+        // the call line or the line after it).
+        let Some(last) = s.code.len().checked_sub(1) else {
+            continue;
+        };
+        let idx = (line - 1).min(last);
+        let lo = idx.saturating_sub(2);
+        let near_call = s.code[lo..=idx]
+            .iter()
+            .any(|l| METRIC_CALLS.iter().any(|t| l.contains(t)));
+        if !near_call {
+            continue;
+        }
+        seen += 1;
+        if !documented.contains(lit) {
+            findings.push(format!(
+                "{rel}:{line}: [metric-docs] metric `{lit}` is \
+                 registered here but absent from the README catalog",
+            ));
+        }
+    }
+    seen
+}
+
+/// Every metric name the README mentions, with `{a,b,c}` families
+/// expanded and `{key=value}` label groups dropped.
+fn readme_metric_names(text: &str) -> BTreeSet<String> {
+    let cs: Vec<char> = text.chars().collect();
+    let mut out = BTreeSet::new();
+    let mut i = 0usize;
+    while i < cs.len() {
+        let boundary =
+            i == 0 || !(cs[i - 1].is_ascii_lowercase() || cs[i - 1] == '_');
+        let starts = cs[i] == 'p'
+            && cs.get(i + 1) == Some(&'s')
+            && cs.get(i + 2) == Some(&'m')
+            && cs.get(i + 3) == Some(&'_');
+        if !(boundary && starts) {
+            i += 1;
+            continue;
+        }
+        let mut names = vec![String::new()];
+        let mut j = i;
+        while j < cs.len() {
+            let c = cs[j];
+            if c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' {
+                for n in &mut names {
+                    n.push(c);
+                }
+                j += 1;
+            } else if c == '{' {
+                let close = (j + 1..cs.len()).find(|&k| cs[k] == '}');
+                let Some(close) = close else { break };
+                let inner: String = cs[j + 1..close].iter().collect();
+                if inner.contains('=') {
+                    break; // label group: display-only
+                }
+                let mut next = Vec::new();
+                for n in &names {
+                    for alt in inner.split(',') {
+                        next.push(format!("{n}{}", alt.trim()));
+                    }
+                }
+                names = next;
+                j = close + 1;
+            } else {
+                break;
+            }
+        }
+        for n in names {
+            if is_metric_literal(&n) {
+                out.insert(n);
+            }
+        }
+        i = j.max(i + 1);
+    }
+    out
+}
+
+// --------------------------------------------------------------------------
+// Rule 4: no `.partial_cmp(..).unwrap()` outside test code
+// --------------------------------------------------------------------------
+
+fn rule_float_cmp(rel: &str, s: &Scanned, findings: &mut Vec<String>) {
+    // Test regions in this tree are trailing `#[cfg(test)] mod`s
+    // (sometimes `#[cfg(all(test, …))]`); the rule conservatively
+    // stops at the first such marker.
+    let cutoff = s
+        .code
+        .iter()
+        .position(|l| l.contains("#[cfg(") && l.contains("test"))
+        .unwrap_or(s.code.len());
+    for idx in 0..cutoff {
+        if !s.code[idx].contains(".partial_cmp(") {
+            continue;
+        }
+        let hi = (idx + 2).min(cutoff - 1);
+        if s.code[idx..=hi].iter().any(|l| l.contains(".unwrap()")) {
+            findings.push(format!(
+                "{rel}:{}: [float-cmp] `.partial_cmp(..).unwrap()` \
+                 panics on NaN (the chaos tier injects NaN) — use \
+                 `total_cmp`",
+                idx + 1,
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Driver
+// --------------------------------------------------------------------------
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+struct Totals {
+    files: usize,
+    unsafe_sites: usize,
+    env_literals: usize,
+    metric_regs: usize,
+}
+
+fn lint_tree(root: &Path, findings: &mut Vec<String>) -> Totals {
+    let mut totals = Totals {
+        files: 0,
+        unsafe_sites: 0,
+        env_literals: 0,
+        metric_regs: 0,
+    };
+
+    let readme = std::fs::read_to_string(root.join("README.md"))
+        .unwrap_or_default();
+    if readme.is_empty() {
+        findings.push("README.md: [setup] missing or unreadable".into());
+    }
+    let documented_metrics = readme_metric_names(&readme);
+    rule_env_docs("README.md", &readme, findings);
+
+    // Scopes: unsafety is checked everywhere we own code (vendored
+    // stand-ins included); env literals everywhere PSM_* is read or
+    // set; metric registrations live in the library; float ordering
+    // applies to everything that runs outside `cargo test` harnesses.
+    let unsafe_scope =
+        ["rust/src", "rust/tests", "rust/benches", "examples", "vendor"];
+    let env_scope = ["rust/src", "rust/tests", "rust/benches", "examples"];
+    let metric_scope = ["rust/src"];
+    let float_scope = ["rust/src", "rust/benches", "examples"];
+
+    let mut files: BTreeSet<PathBuf> = BTreeSet::new();
+    for scope in unsafe_scope
+        .iter()
+        .chain(&env_scope)
+        .chain(&metric_scope)
+        .chain(&float_scope)
+    {
+        let mut v = Vec::new();
+        walk(&root.join(scope), &mut v);
+        files.extend(v);
+    }
+
+    let in_scope = |p: &Path, scope: &[&str]| {
+        scope.iter().any(|s| p.starts_with(root.join(s)))
+    };
+
+    for path in &files {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            findings.push(format!("{}: [setup] unreadable", path.display()));
+            continue;
+        };
+        totals.files += 1;
+        let s = scan(&src);
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .display()
+            .to_string();
+        if in_scope(path, &unsafe_scope) {
+            totals.unsafe_sites += rule_unsafe(&rel, &s, findings);
+        }
+        if in_scope(path, &env_scope) {
+            totals.env_literals += rule_env(&rel, &s, findings);
+        }
+        if in_scope(path, &metric_scope) {
+            totals.metric_regs +=
+                rule_metrics(&rel, &s, &documented_metrics, findings);
+        }
+        if in_scope(path, &float_scope) {
+            rule_float_cmp(&rel, &s, findings);
+        }
+    }
+    totals
+}
+
+/// Default workspace root: the parent of the crate manifest dir, baked
+/// in at compile time (`--root` overrides for out-of-tree runs).
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+fn main() -> ExitCode {
+    let mut root = default_root();
+    let mut self_test = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--self-test" => self_test = true,
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("lint: --root needs a path");
+                    return ExitCode::FAILURE;
+                }
+            },
+            other => {
+                eprintln!("lint: unknown argument `{other}`");
+                eprintln!("usage: lint [--self-test] [--root <dir>]");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    if self_test {
+        return match run_self_test() {
+            Ok(checks) => {
+                println!("lint --self-test: ok ({checks} checks)");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("lint --self-test: FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let mut findings = Vec::new();
+    let totals = lint_tree(&root, &mut findings);
+    if findings.is_empty() {
+        println!(
+            "lint: ok — {} files; {} unsafe sites documented, {} env \
+             literals registered ({} in registry), {} metric \
+             registrations documented",
+            totals.files,
+            totals.unsafe_sites,
+            totals.env_literals,
+            REGISTRY.len(),
+            totals.metric_regs,
+        );
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            eprintln!("{f}");
+        }
+        eprintln!("lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+// --------------------------------------------------------------------------
+// Self-test: each rule must fire on a seeded violation and stay quiet
+// on the clean twin. Env/metric fixture names are assembled at runtime
+// so the linter never flags its own source.
+// --------------------------------------------------------------------------
+
+fn check(cond: bool, what: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+fn run_self_test() -> Result<usize, String> {
+    let mut checks = 0usize;
+
+    // Scanner: comments, strings, raw strings and char literals are
+    // stripped from code; comment text is retained separately.
+    {
+        let src = "// SAFETY: commentary\nlet s = \"unsafe { quoted }\";\n\
+                   let r = r#\"unsafe { raw }\"#; /* unsafe {\n} */\n\
+                   let c = 'u'; let l: &'static str = s;\n";
+        let sc = scan(src);
+        check(
+            sc.code.iter().all(|l| !l.contains("unsafe")),
+            "scanner: quoted/commented `unsafe` must not reach code",
+        )?;
+        check(
+            sc.comments[0].contains("SAFETY"),
+            "scanner: comment text must be retained",
+        )?;
+        check(
+            sc.strings.len() == 2,
+            "scanner: both string forms must be extracted",
+        )?;
+        check(
+            sc.code.iter().any(|l| l.contains("&'static")),
+            "scanner: lifetimes must survive char-literal stripping",
+        )?;
+        checks += 4;
+    }
+
+    // Rule 1 fires on an undocumented block, not on a documented one
+    // or on an `unsafe fn` declaration.
+    {
+        let bad = scan("fn f() {\n    unsafe { danger() }\n}\n");
+        let mut fs = Vec::new();
+        let sites = rule_unsafe("fixture.rs", &bad, &mut fs);
+        check(sites == 1 && fs.len() == 1, "rule 1: must fire on bare block")?;
+        // The undocumented impl comes FIRST so the documented block's
+        // SAFETY comment (which sits below it) cannot vouch for it.
+        let good = scan(
+            "unsafe impl Sync for X {}\nunsafe fn decl() {}\nfn f() {\n    \
+             // SAFETY: fixture\n    unsafe { danger() }\n}\n",
+        );
+        let mut fs = Vec::new();
+        let sites = rule_unsafe("fixture.rs", &good, &mut fs);
+        check(
+            sites == 2 && fs.len() == 1,
+            "rule 1: fn decl exempt, impl counted, block documented",
+        )?;
+        check(
+            fs[0].contains("impl"),
+            "rule 1: the undocumented impl is the one reported",
+        )?;
+        checks += 3;
+    }
+
+    // Rule 2 fires on an unregistered exact literal, passes registered
+    // ones, and the README cross-check runs both directions.
+    {
+        let bogus = format!("PSM_{}", "SELF_TEST_BOGUS");
+        let ok = REGISTRY[0].name;
+        let src = format!(
+            "fn f() {{\n    let a = var({bogus:?});\n    let b = \
+             var({ok:?});\n}}\n"
+        );
+        let mut fs = Vec::new();
+        let seen = rule_env("fixture.rs", &scan(&src), &mut fs);
+        check(
+            seen == 2 && fs.len() == 1 && fs[0].contains(&bogus),
+            "rule 2: unregistered literal must be the one reported",
+        )?;
+        let fake_readme = format!("| `{bogus}` | on | fixture |\n");
+        let mut fs = Vec::new();
+        rule_env_docs("fixture.md", &fake_readme, &mut fs);
+        check(
+            fs.iter().any(|f| f.contains(&bogus)),
+            "rule 2: README mention of an unregistered var must fire",
+        )?;
+        check(
+            fs.iter().any(|f| f.contains(REGISTRY[0].name)),
+            "rule 2: registry entry missing from README must fire",
+        )?;
+        checks += 3;
+    }
+
+    // Rule 3 fires on an undocumented registration, respects the
+    // two-line window, and the README expander handles families.
+    {
+        let bogus = format!("psm_{}", "selftest_bogus_total");
+        let fam_a = format!("psm_{}", "selftest_fam_a_total");
+        let fam_b = format!("psm_{}", "selftest_fam_b_total");
+        let readme = format!(
+            "catalog: `psm_selftest_fam_{{a,b}}_total{{kind=x}}` and \
+             `{fam_a}` prose\n"
+        );
+        let documented = readme_metric_names(&readme);
+        check(
+            documented.contains(&fam_a) && documented.contains(&fam_b),
+            "rule 3: brace families must expand",
+        )?;
+        // `far` sits three code lines below the last constructor so
+        // the two-line proximity window must not count it.
+        let src = format!(
+            "fn reg() {{\n    let c = obs::counter(\n        \
+             {bogus:?},\n        \"help\",\n    );\n    let d = \
+             obs::counter({fam_a:?}, \"help\");\n    let x = 1;\n    \
+             let y = 2;\n    let far = {bogus:?};\n}}\n"
+        );
+        let mut fs = Vec::new();
+        let seen =
+            rule_metrics("fixture.rs", &scan(&src), &documented, &mut fs);
+        check(
+            seen == 2,
+            "rule 3: the literal far from any call must not count",
+        )?;
+        check(
+            fs.len() == 1 && fs[0].contains(&bogus),
+            "rule 3: only the undocumented registration fires",
+        )?;
+        checks += 3;
+    }
+
+    // Rule 4 fires outside test code only.
+    {
+        let bad = scan(
+            "fn f(xs: &[f32]) {\n    xs.iter().max_by(|a, b| \
+             a.partial_cmp(b).unwrap());\n}\n",
+        );
+        let mut fs = Vec::new();
+        rule_float_cmp("fixture.rs", &bad, &mut fs);
+        check(fs.len() == 1, "rule 4: must fire outside tests")?;
+        let test_only = scan(
+            "#[cfg(test)]\nmod tests {\n    fn f(xs: &[f32]) {\n        \
+             xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap());\n    \
+             }\n}\n",
+        );
+        let mut fs = Vec::new();
+        rule_float_cmp("fixture.rs", &test_only, &mut fs);
+        check(fs.is_empty(), "rule 4: test code is exempt")?;
+        checks += 2;
+    }
+
+    Ok(checks)
+}

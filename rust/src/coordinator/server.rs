@@ -54,12 +54,6 @@ use crate::obs;
 use crate::runtime::{ParamStore, PsmError, Runtime};
 use crate::{log_info, log_warn};
 
-fn env_u64(key: &str, default: u64) -> u64 {
-    std::env::var(key)
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
-}
 
 /// Executor metric families. Counters mirror [`ExecStats`] (which
 /// stays the source of truth for `Request::Health`); the gauges and
@@ -395,10 +389,12 @@ pub fn executor_loop(
     params: &ParamStore,
     rx: mpsc::Receiver<Request>,
 ) -> Result<()> {
-    let gc_tick =
-        Duration::from_millis(env_u64("PSM_GC_TICK_MS", 500).max(1));
-    let ttl =
-        Duration::from_millis(env_u64("PSM_SESSION_TTL_MS", 600_000).max(1));
+    let gc_tick = Duration::from_millis(
+        crate::util::env::parse_or("PSM_GC_TICK_MS", 500u64).max(1),
+    );
+    let ttl = Duration::from_millis(
+        crate::util::env::parse_or("PSM_SESSION_TTL_MS", 600_000u64).max(1),
+    );
     let mut ex = Executor::new(ttl);
     let mut last_gc = Instant::now();
     loop {
@@ -461,7 +457,8 @@ pub fn serve(
     // Bounded queue: when connection threads outrun the executor the
     // excess is shed at enqueue time ("ERR overloaded") instead of
     // growing an unbounded backlog of doomed-to-miss-deadline work.
-    let cap = env_u64("PSM_QUEUE_CAP", 512).max(1) as usize;
+    let cap =
+        crate::util::env::parse_or("PSM_QUEUE_CAP", 512u64).max(1) as usize;
     let (tx, rx) = mpsc::sync_channel::<Request>(cap);
     let next_session = Arc::new(AtomicU64::new(0));
 
@@ -513,8 +510,9 @@ fn handle_conn(
     session: u64,
     tx: mpsc::SyncSender<Request>,
 ) -> Result<()> {
-    let deadline_ms = env_u64("PSM_DEADLINE_MS", 30_000);
-    let max_gen = env_u64("PSM_MAX_GEN", 4096) as usize;
+    let deadline_ms = crate::util::env::parse_or("PSM_DEADLINE_MS", 30_000u64);
+    let max_gen =
+        crate::util::env::parse_or("PSM_MAX_GEN", 4096u64) as usize;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {

@@ -124,22 +124,21 @@ impl Default for RetryPolicy {
 impl RetryPolicy {
     /// Defaults overridable via `PSM_RETRY_MAX`, `PSM_RETRY_BASE_MS`,
     /// `PSM_RETRY_MAX_MS`, `PSM_RETRY_NON_FINITE` (=0 disables).
-    /// Unparsable values fall back to the default.
+    /// Malformed values warn (via `util::env`) and fall back to the
+    /// default.
     pub fn from_env() -> RetryPolicy {
-        fn env_u64(key: &str) -> Option<u64> {
-            std::env::var(key).ok().and_then(|s| s.parse().ok())
-        }
+        use crate::util::env::parse_opt;
         let mut p = RetryPolicy::default();
-        if let Some(v) = env_u64("PSM_RETRY_MAX") {
+        if let Some(v) = parse_opt::<u64>("PSM_RETRY_MAX") {
             p.max_attempts = (v as u32).max(1);
         }
-        if let Some(v) = env_u64("PSM_RETRY_BASE_MS") {
+        if let Some(v) = parse_opt::<u64>("PSM_RETRY_BASE_MS") {
             p.base_backoff_ms = v;
         }
-        if let Some(v) = env_u64("PSM_RETRY_MAX_MS") {
+        if let Some(v) = parse_opt::<u64>("PSM_RETRY_MAX_MS") {
             p.max_backoff_ms = v;
         }
-        if let Some(v) = env_u64("PSM_RETRY_NON_FINITE") {
+        if let Some(v) = parse_opt::<u64>("PSM_RETRY_NON_FINITE") {
             p.retry_non_finite = v != 0;
         }
         p

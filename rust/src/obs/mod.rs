@@ -58,15 +58,11 @@ pub(crate) fn maybe_start_json_writer() {
         if !enabled() {
             return;
         }
-        let path = match std::env::var("PSM_METRICS_JSON") {
-            Ok(p) if !p.is_empty() => std::path::PathBuf::from(p),
+        let path = match crate::util::env::raw("PSM_METRICS_JSON") {
+            Some(p) if !p.is_empty() => std::path::PathBuf::from(p),
             _ => return,
         };
-        let interval_ms = std::env::var("PSM_METRICS_JSON_MS")
-            .ok()
-            .and_then(|s| s.parse::<u64>().ok())
-            .unwrap_or(1000)
-            .max(10);
+        let interval_ms = crate::util::env::parse_or("PSM_METRICS_JSON_MS", 1000u64).max(10);
         let _ = std::thread::Builder::new()
             .name("psm-metrics-json".to_string())
             .spawn(move || loop {

@@ -33,12 +33,7 @@ use crate::util::stats::bucket_upper_edge;
 /// pays a single load, not an env lookup.
 pub fn enabled() -> bool {
     static ENABLED: OnceLock<bool> = OnceLock::new();
-    *ENABLED.get_or_init(|| {
-        !matches!(
-            std::env::var("PSM_METRICS").as_deref(),
-            Ok("0") | Ok("false") | Ok("off")
-        )
-    })
+    *ENABLED.get_or_init(|| crate::util::env::flag_on("PSM_METRICS"))
 }
 
 // ---- metric kinds ----------------------------------------------------------

@@ -67,9 +67,7 @@ pub struct Module {
 
 impl Module {
     pub fn from_exec(exec: Box<dyn Executable>) -> Module {
-        let validate_output = std::env::var("PSM_VALIDATE")
-            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
-            .unwrap_or(false);
+        let validate_output = crate::util::env::flag_off("PSM_VALIDATE");
         Module { spec: exec.spec().clone(), exec, validate_output }
     }
 
@@ -174,7 +172,8 @@ impl Runtime {
     }
 
     fn select(artifacts_dir: &Path) -> Result<Runtime> {
-        let choice = std::env::var("PSM_BACKEND").unwrap_or_default();
+        let choice =
+            crate::util::env::raw("PSM_BACKEND").unwrap_or_default();
         match choice.as_str() {
             "reference" | "ref" => Ok(Runtime::reference()),
             "pjrt" => {

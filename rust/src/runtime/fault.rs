@@ -159,8 +159,10 @@ impl FaultConfig {
     /// The `PSM_FAULTS` env knob: `Ok(None)` when unset/empty, an error
     /// when set but malformed.
     pub fn from_env() -> Result<Option<FaultConfig>> {
-        match std::env::var("PSM_FAULTS") {
-            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultConfig::parse(&s)?)),
+        match crate::util::env::raw("PSM_FAULTS") {
+            Some(s) if !s.trim().is_empty() => {
+                Ok(Some(FaultConfig::parse(&s)?))
+            }
             _ => Ok(None),
         }
     }

@@ -42,7 +42,7 @@ use std::path::PathBuf;
 
 /// Default artifacts directory: `$PSM_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
-    std::env::var("PSM_ARTIFACTS")
+    crate::util::env::raw_os("PSM_ARTIFACTS")
         .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }

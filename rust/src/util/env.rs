@@ -1,0 +1,304 @@
+//! Central registry of every `PSM_*` environment variable.
+//!
+//! Every env var the crate reads is declared once in [`REGISTRY`] and
+//! read through the typed accessors here. That buys three things:
+//!
+//! * **Discoverability** — one table, mirrored verbatim into the
+//!   README (`make lint` fails if either side drifts; the lint also
+//!   rejects any `"PSM_*"` literal in the tree that is missing here).
+//! * **Loud misconfiguration** — malformed values used to be silently
+//!   ignored (`PSM_WORKERS=eight` behaved like unset). [`parse_opt`]
+//!   and the flag helpers now warn through the repo logger before
+//!   falling back to the default.
+//! * **One semantics** — default-on switches (`PSM_SIMD`,
+//!   `PSM_METRICS`) and default-off switches (`PSM_VALIDATE`,
+//!   `PSM_LOG_JSON`) each share a single parser instead of N ad-hoc
+//!   `matches!` forms.
+//!
+//! The logger itself bootstraps through [`raw`] (which never logs):
+//! a warning from this module calls `log_warn!`, which reads
+//! `PSM_LOG`/`PSM_LOG_JSON`; if those reads warned in turn the
+//! recursion would never terminate.
+
+use std::str::FromStr;
+
+/// One registered environment variable.
+pub struct EnvVar {
+    pub name: &'static str,
+    /// Human-readable default, for docs and error messages.
+    pub default: &'static str,
+    pub doc: &'static str,
+}
+
+/// Every `PSM_*` variable the crate (including tests and benches)
+/// reads. Keep sorted by name; `make lint` cross-checks this table
+/// against both the source tree and the README.
+pub const REGISTRY: &[EnvVar] = &[
+    EnvVar {
+        name: "PSM_ARTIFACTS",
+        default: "artifacts",
+        doc: "Directory holding AOT artifacts (manifest.json + HLO) for the PJRT backend",
+    },
+    EnvVar {
+        name: "PSM_BACKEND",
+        default: "auto",
+        doc: "Backend selection: reference | pjrt | auto",
+    },
+    EnvVar {
+        name: "PSM_BENCH_DIR",
+        default: "workspace root",
+        doc: "Directory benches write their BENCH_*.json artifacts into",
+    },
+    EnvVar {
+        name: "PSM_BENCH_STEPS",
+        default: "per-bench",
+        doc: "Training steps for the fig3/fig4/fig5 benches",
+    },
+    EnvVar {
+        name: "PSM_BENCH_TOKENS",
+        default: "per-bench",
+        doc: "Generated tokens for the fig6/chaos latency benches",
+    },
+    EnvVar {
+        name: "PSM_DEADLINE_MS",
+        default: "30000",
+        doc: "Executor per-request deadline before shedding as overloaded",
+    },
+    EnvVar {
+        name: "PSM_FAULTS",
+        default: "unset",
+        doc: "Chaos injection spec, e.g. seed:7,transient_p:0.05,nan_p:0.01,delay_p:0.1,delay_ms:5",
+    },
+    EnvVar {
+        name: "PSM_GC_TICK_MS",
+        default: "500",
+        doc: "Idle-session garbage-collector tick interval",
+    },
+    EnvVar {
+        name: "PSM_LOG",
+        default: "info",
+        doc: "Log level: error | warn | info | debug | trace",
+    },
+    EnvVar {
+        name: "PSM_LOG_JSON",
+        default: "0",
+        doc: "Structured JSON log lines instead of human-readable (default-off switch)",
+    },
+    EnvVar {
+        name: "PSM_MAX_GEN",
+        default: "4096",
+        doc: "Protocol cap on tokens per GEN request",
+    },
+    EnvVar {
+        name: "PSM_METRICS",
+        default: "1",
+        doc: "Metrics registry master switch (default-on; 0/false/off hands out no-op handles)",
+    },
+    EnvVar {
+        name: "PSM_METRICS_JSON",
+        default: "unset",
+        doc: "Path for periodic atomic JSON metric snapshots (unset = no writer thread)",
+    },
+    EnvVar {
+        name: "PSM_METRICS_JSON_MS",
+        default: "1000",
+        doc: "Snapshot writer interval (min 10)",
+    },
+    EnvVar {
+        name: "PSM_QUEUE_CAP",
+        default: "512",
+        doc: "Bounded executor queue depth before shedding as overloaded",
+    },
+    EnvVar {
+        name: "PSM_RETRY_BASE_MS",
+        default: "2",
+        doc: "Session retry: initial backoff",
+    },
+    EnvVar {
+        name: "PSM_RETRY_MAX",
+        default: "3",
+        doc: "Session retry: attempts per token before poisoning",
+    },
+    EnvVar {
+        name: "PSM_RETRY_MAX_MS",
+        default: "50",
+        doc: "Session retry: backoff growth cap",
+    },
+    EnvVar {
+        name: "PSM_RETRY_NON_FINITE",
+        default: "1",
+        doc: "Session retry: whether non-finite outputs are retryable (0 disables)",
+    },
+    EnvVar {
+        name: "PSM_SESSION_TTL_MS",
+        default: "600000",
+        doc: "Idle session lifetime before the executor GCs it",
+    },
+    EnvVar {
+        name: "PSM_SIMD",
+        default: "1",
+        doc: "AVX2/FMA kernel tier master switch (default-on; 0/false/off forces tiled portable)",
+    },
+    EnvVar {
+        name: "PSM_SOAK",
+        default: "full",
+        doc: "Chaos-soak test size: full | short (short is used by the sanitizer CI tiers)",
+    },
+    EnvVar {
+        name: "PSM_VALIDATE",
+        default: "0",
+        doc: "Validate module outputs for NaN/Inf (default-off switch)",
+    },
+    EnvVar {
+        name: "PSM_WORKERS",
+        default: "available_parallelism, capped at 16",
+        doc: "Worker count for the persistent pool (>= 1; set_workers overrides)",
+    },
+];
+
+/// Look up a registered variable's metadata.
+pub fn find(name: &str) -> Option<&'static EnvVar> {
+    REGISTRY.iter().find(|v| v.name == name)
+}
+
+pub fn is_registered(name: &str) -> bool {
+    find(name).is_some()
+}
+
+fn assert_registered(name: &str) {
+    debug_assert!(
+        is_registered(name),
+        "env var {name} read but missing from util::env::REGISTRY — \
+         register it there and in the README table (`make lint` enforces both)"
+    );
+}
+
+/// Raw string read. Never logs, so it is safe for bootstrap paths (the
+/// logger reads `PSM_LOG`/`PSM_LOG_JSON` through this). Returns `None`
+/// for unset or non-UTF-8 values.
+pub fn raw(name: &'static str) -> Option<String> {
+    assert_registered(name);
+    std::env::var(name).ok()
+}
+
+/// Raw OS-string read, for values that are paths.
+pub fn raw_os(name: &'static str) -> Option<std::ffi::OsString> {
+    assert_registered(name);
+    std::env::var_os(name)
+}
+
+/// Typed read: `None` when unset or empty; a malformed value warns
+/// (once per read site invocation) and counts as unset.
+pub fn parse_opt<T: FromStr>(name: &'static str) -> Option<T> {
+    let s = raw(name)?;
+    let t = s.trim();
+    if t.is_empty() {
+        return None;
+    }
+    match t.parse::<T>() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            let want = std::any::type_name::<T>();
+            let default = find(name).map_or("?", |v| v.default);
+            crate::log_warn!(
+                "ignoring malformed {name}={s:?} (expected {want}; default: {default})"
+            );
+            None
+        }
+    }
+}
+
+/// Typed read with a fallback for unset/empty/malformed.
+pub fn parse_or<T: FromStr>(name: &'static str, default: T) -> T {
+    parse_opt(name).unwrap_or(default)
+}
+
+/// Default-ON switch: only `0 | false | off | no` disable it. Any
+/// other non-empty, non-affirmative value warns and stays on.
+pub fn flag_on(name: &'static str) -> bool {
+    match raw(name) {
+        None => true,
+        Some(s) => {
+            let v = s.trim().to_ascii_lowercase();
+            if matches!(v.as_str(), "0" | "false" | "off" | "no") {
+                false
+            } else {
+                if !matches!(v.as_str(), "" | "1" | "true" | "on" | "yes") {
+                    crate::log_warn!("unrecognised {name}={s:?}; treating it as on");
+                }
+                true
+            }
+        }
+    }
+}
+
+/// Default-OFF switch: only `1 | true | on | yes` enable it. Any other
+/// non-empty, non-negative value warns and stays off.
+pub fn flag_off(name: &'static str) -> bool {
+    match raw(name) {
+        None => false,
+        Some(s) => {
+            let v = s.trim().to_ascii_lowercase();
+            if matches!(v.as_str(), "1" | "true" | "on" | "yes") {
+                true
+            } else {
+                if !matches!(v.as_str(), "" | "0" | "false" | "off" | "no") {
+                    crate::log_warn!("unrecognised {name}={s:?}; treating it as off");
+                }
+                false
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_unique() {
+        for w in REGISTRY.windows(2) {
+            assert!(
+                w[0].name < w[1].name,
+                "REGISTRY must stay sorted/unique: {} vs {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+    }
+
+    #[test]
+    fn every_name_has_the_prefix() {
+        for v in REGISTRY {
+            assert!(v.name.starts_with("PSM_"), "bad name {}", v.name);
+            assert!(!v.doc.is_empty());
+        }
+    }
+
+    #[test]
+    fn parse_and_flags() {
+        // Env mutation is process-global and lib unit tests run
+        // threaded, so only touch vars no other in-process code reads
+        // (these two are only consumed by the standalone bench
+        // binaries).
+        std::env::set_var("PSM_BENCH_STEPS", "123");
+        assert_eq!(parse_or("PSM_BENCH_STEPS", 7u64), 123);
+        std::env::set_var("PSM_BENCH_STEPS", "not-a-number");
+        assert_eq!(parse_or("PSM_BENCH_STEPS", 7u64), 7);
+        std::env::set_var("PSM_BENCH_STEPS", "  ");
+        assert_eq!(parse_opt::<u64>("PSM_BENCH_STEPS"), None);
+        std::env::remove_var("PSM_BENCH_STEPS");
+
+        std::env::set_var("PSM_BENCH_TOKENS", "OFF");
+        assert!(!flag_on("PSM_BENCH_TOKENS"));
+        std::env::set_var("PSM_BENCH_TOKENS", "weird");
+        assert!(flag_on("PSM_BENCH_TOKENS"));
+        std::env::set_var("PSM_BENCH_TOKENS", "TRUE");
+        assert!(flag_off("PSM_BENCH_TOKENS"));
+        std::env::set_var("PSM_BENCH_TOKENS", "weird");
+        assert!(!flag_off("PSM_BENCH_TOKENS"));
+        std::env::remove_var("PSM_BENCH_TOKENS");
+        assert!(flag_on("PSM_BENCH_TOKENS"));
+        assert!(!flag_off("PSM_BENCH_TOKENS"));
+    }
+}

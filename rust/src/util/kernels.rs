@@ -37,21 +37,20 @@ use std::sync::OnceLock;
 /// enough that the scalar tail stays trivial.
 const LANES: usize = 8;
 
+/// `PSM_SIMD` is a default-on switch; malformed values warn through
+/// the central env registry instead of being read as "off".
 fn simd_env_enabled() -> bool {
-    static ON: OnceLock<bool> = OnceLock::new();
-    *ON.get_or_init(|| {
-        match std::env::var("PSM_SIMD") {
-            Ok(v) => {
-                let v = v.trim().to_ascii_lowercase();
-                !(v == "0" || v == "false" || v == "off")
-            }
-            Err(_) => true,
-        }
-    })
+    crate::util::env::flag_on("PSM_SIMD")
 }
 
 #[cfg(target_arch = "x86_64")]
 fn detect() -> bool {
+    // Miri interprets portable Rust but not vendor intrinsics: route
+    // the dispatchers to the tiled path under the interpreter so the
+    // whole module stays Miri-checkable (`make miri`).
+    if cfg!(miri) {
+        return false;
+    }
     std::is_x86_feature_detected!("avx2")
         && std::is_x86_feature_detected!("fma")
 }
@@ -114,6 +113,9 @@ pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
     if simd_active() {
         assert_eq!(out.len(), a.len());
         assert_eq!(out.len(), b.len());
+        // SAFETY: `simd_active()` verified avx2+fma on this CPU and
+        // the asserts above established equal lengths — the
+        // documented contract of `avx2::*`.
         unsafe { avx2::add_into(out, a, b) };
         return;
     }
@@ -155,6 +157,8 @@ pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     #[cfg(target_arch = "x86_64")]
     if simd_active() {
         assert_eq!(dst.len(), src.len());
+        // SAFETY: `simd_active()` verified avx2+fma; the assert above
+        // established equal lengths — the `avx2::*` contract.
         unsafe { avx2::add_assign(dst, src) };
         return;
     }
@@ -200,6 +204,8 @@ pub fn radd_assign(dst: &mut [f32], src: &[f32]) {
     #[cfg(target_arch = "x86_64")]
     if simd_active() {
         assert_eq!(dst.len(), src.len());
+        // SAFETY: `simd_active()` verified avx2+fma; the assert above
+        // established equal lengths — the `avx2::*` contract.
         unsafe { avx2::radd_assign(dst, src) };
         return;
     }
@@ -241,6 +247,8 @@ pub fn scale_into(out: &mut [f32], src: &[f32], s: f32) {
     #[cfg(target_arch = "x86_64")]
     if simd_active() {
         assert_eq!(out.len(), src.len());
+        // SAFETY: `simd_active()` verified avx2+fma; the assert above
+        // established equal lengths — the `avx2::*` contract.
         unsafe { avx2::scale_into(out, src, s) };
         return;
     }
@@ -292,6 +300,9 @@ pub fn mul_into(out: &mut [f32], a: &[f32], b: &[f32]) {
     if simd_active() {
         assert_eq!(out.len(), a.len());
         assert_eq!(out.len(), b.len());
+        // SAFETY: `simd_active()` verified avx2+fma on this CPU and
+        // the asserts above established equal lengths — the
+        // documented contract of `avx2::*`.
         unsafe { avx2::mul_into(out, a, b) };
         return;
     }
@@ -338,6 +349,8 @@ pub fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
     #[cfg(target_arch = "x86_64")]
     if simd_active() {
         assert_eq!(acc.len(), x.len());
+        // SAFETY: `simd_active()` verified avx2+fma; the assert above
+        // established equal lengths — the `avx2::*` contract.
         unsafe { avx2::axpy(acc, a, x) };
         return;
     }
@@ -377,6 +390,8 @@ mod avx2 {
         }
     }
 
+    // SAFETY: module contract above — caller checked avx2+fma and
+    // equal slice lengths.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
@@ -394,6 +409,8 @@ mod avx2 {
         }
     }
 
+    // SAFETY: module contract above — caller checked avx2+fma and
+    // equal slice lengths.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn radd_assign(dst: &mut [f32], src: &[f32]) {
@@ -412,6 +429,8 @@ mod avx2 {
         }
     }
 
+    // SAFETY: module contract above — caller checked avx2+fma and
+    // equal slice lengths.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn scale_into(out: &mut [f32], src: &[f32], s: f32) {
@@ -429,6 +448,8 @@ mod avx2 {
         }
     }
 
+    // SAFETY: module contract above — caller checked avx2+fma and
+    // equal slice lengths.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn mul_into(out: &mut [f32], a: &[f32], b: &[f32]) {
@@ -446,6 +467,8 @@ mod avx2 {
         }
     }
 
+    // SAFETY: module contract above — caller checked avx2+fma and
+    // equal slice lengths.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {

@@ -65,8 +65,9 @@ fn level() -> u8 {
     if v != u8::MAX {
         return v;
     }
-    let from_env = std::env::var("PSM_LOG")
-        .ok()
+    // `env::raw` never logs — a warning here would recurse straight
+    // back into `level()`.
+    let from_env = crate::util::env::raw("PSM_LOG")
         .and_then(|s| Level::from_str(&s))
         .unwrap_or(Level::Info);
     LEVEL.store(from_env as u8, Ordering::Relaxed);
@@ -79,8 +80,8 @@ fn json_mode() -> bool {
         return v != 0;
     }
     let on = matches!(
-        std::env::var("PSM_LOG_JSON").as_deref(),
-        Ok("1") | Ok("true") | Ok("on")
+        crate::util::env::raw("PSM_LOG_JSON").as_deref(),
+        Some("1") | Some("true") | Some("on")
     );
     JSON.store(on as u8, Ordering::Relaxed);
     on

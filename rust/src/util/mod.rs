@@ -5,6 +5,7 @@
 //! property-testing driver.
 
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod kernels;
 pub mod logging;
@@ -12,3 +13,4 @@ pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod stats;
+pub mod sync;

@@ -24,45 +24,62 @@
 //! deadlock. Worker panics are captured and re-raised on the
 //! submitting thread after the job quiesces.
 //!
+//! Structure: all of the protocol lives in the instantiable
+//! [`PoolCore`] so it can be built, driven and torn down inside a
+//! test harness; the process-global pool is one leaked, instrumented
+//! `PoolCore` plus obs accounting. Every primitive (`Mutex`,
+//! `Condvar`, `AtomicUsize`) comes through [`crate::util::sync`], so
+//! `--features loom` swaps in the model checker's instrumented types
+//! and `tests/loom_pool.rs` explores publish → claim →
+//! retract-then-quiesce, the panic capture, nested-dispatch inlining
+//! and the contended-slot fallback exhaustively. `tests/miri_core.rs`
+//! runs the same `PoolCore` under Miri to check the lifetime-erasure
+//! and raw-slot `unsafe` against the borrow model.
+//!
 //! Worker count: `default_workers()` is the sizing hint everywhere —
 //! override order is [`set_workers`] (in-process) > `PSM_WORKERS`
-//! (env, parsed once) > available cores capped at 16. The pool's
-//! thread count is fixed at first dispatch; later larger hints are
-//! capped by the threads actually running.
+//! (env, parsed once through [`crate::util::env`], malformed values
+//! warn) > available cores capped at 16. The global pool's thread
+//! count is fixed at first dispatch; later larger hints are capped by
+//! the threads actually running.
 //!
-//! Telemetry (through [`crate::obs`], no-ops under `PSM_METRICS=0`):
-//! `psm_pool_dispatches_total`, `psm_pool_inline_total` (contended or
-//! nested calls that ran inline), `psm_pool_tasks_total`,
-//! `psm_pool_dispatch_ns_total`, and the live
-//! `psm_pool_active_workers` gauge (queue depth of claimed workers).
+//! Telemetry (through [`crate::obs`], no-ops under `PSM_METRICS=0`,
+//! global pool only): `psm_pool_dispatches_total`,
+//! `psm_pool_inline_total` (contended or nested calls that ran
+//! inline), `psm_pool_tasks_total`, `psm_pool_dispatch_ns_total`, and
+//! the live `psm_pool_active_workers` gauge. A dispatch that
+//! propagates a panic is not counted.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{Condvar, Mutex};
 
 // ---------------------------------------------------------------------
-// Worker-count policy
+// Worker-count policy (process-global, never model-checked: plain std)
 // ---------------------------------------------------------------------
 
 /// In-process override set via [`set_workers`]; 0 = unset.
-static WORKER_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+static WORKER_OVERRIDE: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
 
 /// Override the worker-count hint for this process (tests sweep
 /// reproducibility across counts without re-exec). `set_workers(0)`
 /// clears the override, falling back to `PSM_WORKERS` / cores.
 pub fn set_workers(n: usize) {
-    WORKER_OVERRIDE.store(n, Ordering::Relaxed);
+    WORKER_OVERRIDE.store(n, std::sync::atomic::Ordering::Relaxed);
 }
 
 /// `PSM_WORKERS` parsed once (env reads allocate; dispatch must not).
+/// Malformed or zero values warn through the logger and fall back.
 fn env_workers() -> Option<usize> {
-    static ENV: OnceLock<Option<usize>> = OnceLock::new();
-    *ENV.get_or_init(|| {
-        std::env::var("PSM_WORKERS")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .filter(|&n| n >= 1)
+    static ENV: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| match crate::util::env::parse_opt::<usize>("PSM_WORKERS") {
+        Some(0) => {
+            crate::log_warn!("ignoring PSM_WORKERS=0 (need >= 1); using the hardware default");
+            None
+        }
+        v => v,
     })
 }
 
@@ -76,7 +93,7 @@ fn hw_workers() -> usize {
 /// Number of worker threads to use by default: [`set_workers`]
 /// override, else `PSM_WORKERS`, else cores capped at 16.
 pub fn default_workers() -> usize {
-    let o = WORKER_OVERRIDE.load(Ordering::Relaxed);
+    let o = WORKER_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed);
     if o > 0 {
         return o;
     }
@@ -84,7 +101,7 @@ pub fn default_workers() -> usize {
 }
 
 // ---------------------------------------------------------------------
-// The pool
+// The core protocol
 // ---------------------------------------------------------------------
 
 thread_local! {
@@ -92,6 +109,10 @@ thread_local! {
     /// inside a job run inline instead of contending for the single
     /// job slot (which would deadlock a worker against itself).
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|w| w.get())
 }
 
 /// A dispatched job. Lives on the **submitter's stack**; workers see
@@ -105,9 +126,10 @@ struct Job {
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
 }
 
-/// SAFETY: pure lifetime erasure — same pointee, same vtable. The
-/// borrow outlives every access because `dispatch` retracts the job
-/// and blocks until `active == 0` before the referent leaves scope.
+/// SAFETY contract: pure lifetime erasure — same pointee, same
+/// vtable. The caller must guarantee the borrow outlives every
+/// access; `dispatch` does so by retracting the job and blocking
+/// until `active == 0` before the referent leaves scope.
 unsafe fn erase<'a>(
     f: &'a (dyn Fn(usize) + Sync + 'a),
 ) -> &'static (dyn Fn(usize) + Sync + 'static) {
@@ -117,8 +139,8 @@ unsafe fn erase<'a>(
     >(f)
 }
 
-/// SAFETY: as [`erase`] — the `&'static` never escapes the window in
-/// which the stack `Job` is alive.
+/// SAFETY contract: as [`erase`] — the `&'static` must never escape
+/// the window in which the stack `Job` is alive.
 unsafe fn erase_job(job: &Job) -> &'static Job {
     std::mem::transmute::<&Job, &'static Job>(job)
 }
@@ -131,16 +153,309 @@ struct PoolState {
     active: usize,
     /// Max workers allowed to claim the current job.
     max_claims: usize,
+    /// Set by [`PoolCore::shutdown`]: workers exit between jobs.
+    shutdown: bool,
 }
 
-struct Pool {
+/// How a dispatch was executed — the global wrappers translate this
+/// into obs counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Published to the job slot and drained by pool workers + the
+    /// submitter.
+    Pooled,
+    /// Ran as a plain sequential loop (nested call, contended slot,
+    /// single worker, or trivial size).
+    Inline,
+}
+
+/// The pool protocol, instantiable so tests (loom, Miri, scoped unit
+/// tests) can build one, drive it with their own worker threads, shut
+/// it down and join. The process-global pool in this module is one
+/// leaked instance of this plus telemetry.
+pub struct PoolCore {
     state: Mutex<PoolState>,
     work_cv: Condvar,
     done_cv: Condvar,
-    /// Worker threads actually spawned (excludes the submitter).
+    /// Worker threads the owner runs (excludes submitters); claims
+    /// are capped by this.
     threads: usize,
+    /// Report the active-workers gauge to the global registry (the
+    /// process-global pool only; scoped/model instances stay silent).
+    #[cfg_attr(feature = "loom", allow(dead_code))]
+    instrument: bool,
 }
 
+impl PoolCore {
+    /// A core sized for `threads` worker threads. The caller is
+    /// responsible for actually running [`PoolCore::worker`] on that
+    /// many threads and for [`PoolCore::shutdown`] + join at the end.
+    pub fn new(threads: usize) -> PoolCore {
+        PoolCore {
+            state: Mutex::new(PoolState {
+                job: None,
+                seq: 0,
+                active: 0,
+                max_claims: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            threads,
+            instrument: false,
+        }
+    }
+
+    /// Worker body: park on the condvar, claim each published job at
+    /// most once, drain it, report back, repeat until
+    /// [`PoolCore::shutdown`]. In-flight jobs finish before the
+    /// shutdown flag is honoured (it is only checked between jobs).
+    pub fn worker(&self) {
+        IN_POOL_WORKER.with(|w| w.set(true));
+        let mut last_seen = 0u64;
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if let Some(job) = st.job {
+                        if st.seq != last_seen && st.active < st.max_claims {
+                            last_seen = st.seq;
+                            st.active += 1;
+                            break job;
+                        }
+                    }
+                    st = self.work_cv.wait(st).unwrap();
+                }
+            };
+            #[cfg(not(feature = "loom"))]
+            let gauge = self.instrument.then(|| &pool_obs().active);
+            #[cfg(not(feature = "loom"))]
+            if let Some(g) = gauge {
+                g.inc();
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| run_job(job))) {
+                let mut slot = job.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            #[cfg(not(feature = "loom"))]
+            if let Some(g) = gauge {
+                g.dec_floor0();
+            }
+            let mut st = self.state.lock().unwrap();
+            st.active -= 1;
+            if st.active == 0 {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Publish a job, work it from the submitting thread, quiesce,
+    /// and re-raise any captured panic (worker payloads first, the
+    /// submitter's own second — at most one `resume_unwind` fires).
+    /// Falls back to an inline loop when the slot is busy.
+    pub fn dispatch(&self, n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) -> Dispatch {
+        let job = Job {
+            // SAFETY: the erased borrow of `f` only lives in `job`,
+            // which this function retracts and quiesces below before
+            // returning (or unwinding) — `f` outlives every access.
+            f: unsafe { erase(f) },
+            next: AtomicUsize::new(0),
+            n,
+            panic: Mutex::new(None),
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.job.is_some() || st.active > 0 {
+                // Contended slot (concurrent dispatch from another
+                // thread): run inline rather than queueing. The
+                // `active > 0` arm also covers the retract window of
+                // a finishing dispatch.
+                drop(st);
+                run_job(&job);
+                return Dispatch::Inline;
+            }
+            // SAFETY: the erased `&'static Job` points at the stack
+            // `job` above; it is removed from the slot and all
+            // claimants are waited out before `job` drops.
+            st.job = Some(unsafe { erase_job(&job) });
+            st.seq = st.seq.wrapping_add(1);
+            st.max_claims = workers.saturating_sub(1).min(self.threads);
+        }
+        self.work_cv.notify_all();
+
+        // The submitter is always one of the runners.
+        let mine = catch_unwind(AssertUnwindSafe(|| run_job(&job)));
+
+        // Retract the job (no new claims) and wait for workers to
+        // leave it — after this, no reference to the stack `Job`
+        // survives.
+        let mut st = self.state.lock().unwrap();
+        st.job = None;
+        while st.active > 0 {
+            st = self.done_cv.wait(st).unwrap();
+        }
+        drop(st);
+
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+        if let Err(p) = mine {
+            resume_unwind(p);
+        }
+        Dispatch::Pooled
+    }
+
+    /// [`parallel_for`] against this core: inline for trivial shapes
+    /// and nested calls, pooled otherwise.
+    pub fn run_for(&self, n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) -> Dispatch {
+        if n == 0 {
+            return Dispatch::Inline;
+        }
+        let workers = workers.max(1).min(n);
+        if workers == 1 || in_pool_worker() {
+            for i in 0..n {
+                f(i);
+            }
+            return Dispatch::Inline;
+        }
+        self.dispatch(n, workers, f)
+    }
+
+    /// [`parallel_update`] against this core.
+    pub fn run_update<T, F>(&self, dst: &mut [T], workers: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        self.run_chunks(dst, 1, workers, |i, window| f(i, &mut window[0]));
+    }
+
+    /// [`parallel_chunks`] against this core.
+    pub fn run_chunks<T, F>(&self, dst: &mut [T], chunk: usize, workers: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        chunks_impl(dst, chunk, f, |n, g| {
+            self.run_for(n, workers, g);
+        });
+    }
+
+    /// [`parallel_map`] against this core.
+    pub fn run_map<T, F>(&self, n: usize, workers: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        map_impl(n, f, |m, g| {
+            self.run_for(m, workers, g);
+        })
+    }
+
+    /// Ask the workers to exit once the slot is idle and wake them.
+    /// Jobs already claimed finish normally; a dispatch racing the
+    /// shutdown is drained entirely by its submitter.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.work_cv.notify_all();
+    }
+
+    /// True when no job is published and no worker is inside one —
+    /// the invariant every dispatch restores before returning (the
+    /// loom suite pins it after each scenario).
+    pub fn quiesced(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.job.is_none() && st.active == 0
+    }
+}
+
+/// Drain the job's index stream. Runs on workers *and* the submitter.
+fn run_job(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        (job.f)(i);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Raw-slot plumbing shared by the scoped and global entry points
+// ---------------------------------------------------------------------
+
+/// Window-disjointness core of `parallel_chunks`/`run_chunks`: split
+/// `dst` into `chunk`-sized windows and hand `run` an index-driven
+/// closure over them.
+fn chunks_impl<T, F>(dst: &mut [T], chunk: usize, f: F, run: impl FnOnce(usize, &(dyn Fn(usize) + Sync)))
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "parallel_chunks: chunk must be positive");
+    assert_eq!(
+        dst.len() % chunk,
+        0,
+        "parallel_chunks: len {} not a multiple of chunk {chunk}",
+        dst.len()
+    );
+    let n = dst.len() / chunk;
+    if n == 0 {
+        return;
+    }
+    struct Slots<T>(*mut T);
+    // SAFETY: window i covers [i*chunk, (i+1)*chunk) and each i is
+    // handed out exactly once, so the &mut windows are disjoint; the
+    // dispatch quiesces all workers before the caller sees `dst`
+    // again.
+    unsafe impl<T: Send> Sync for Slots<T> {}
+
+    let slots = Slots(dst.as_mut_ptr());
+    let slots_ref = &slots;
+    run(n, &move |i| {
+        // SAFETY: in-bounds by the length assert above; disjoint and
+        // race-free per the `Slots` justification.
+        let window = unsafe { std::slice::from_raw_parts_mut(slots_ref.0.add(i * chunk), chunk) };
+        f(i, window);
+    });
+}
+
+/// Index-ordered collection core of `parallel_map`/`run_map`.
+fn map_impl<T, F>(n: usize, f: F, run: impl FnOnce(usize, &(dyn Fn(usize) + Sync))) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    struct Slots<T>(*mut Option<T>);
+    // SAFETY: each index is claimed by exactly one worker (the atomic
+    // counter in the dispatch hands out every i once), so writes are
+    // disjoint; the dispatch quiesces all workers before we read.
+    unsafe impl<T: Send> Sync for Slots<T> {}
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = Slots(out.as_mut_ptr());
+    let slots_ref = &slots; // capture the Sync wrapper, not the raw field
+    run(n, &move |i| {
+        let v = f(i);
+        // SAFETY: i < n = out.len() and each i is written at most
+        // once; the overwritten slot is a `None` (no drop needed).
+        unsafe { std::ptr::write(slots_ref.0.add(i), Some(v)) };
+    });
+    out.into_iter().map(|o| o.expect("worker missed index")).collect()
+}
+
+// ---------------------------------------------------------------------
+// The process-global pool + obs accounting
+// ---------------------------------------------------------------------
+
+#[cfg(not(feature = "loom"))]
 struct PoolObs {
     dispatches: crate::obs::Counter,
     inline: crate::obs::Counter,
@@ -149,8 +464,9 @@ struct PoolObs {
     active: crate::obs::Gauge,
 }
 
+#[cfg(not(feature = "loom"))]
 fn pool_obs() -> &'static PoolObs {
-    static OBS: OnceLock<PoolObs> = OnceLock::new();
+    static OBS: std::sync::OnceLock<PoolObs> = std::sync::OnceLock::new();
     OBS.get_or_init(|| PoolObs {
         dispatches: crate::obs::counter(
             "psm_pool_dispatches_total",
@@ -175,135 +491,26 @@ fn pool_obs() -> &'static PoolObs {
     })
 }
 
-fn pool() -> &'static Pool {
-    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+#[cfg(not(feature = "loom"))]
+fn pool() -> &'static PoolCore {
+    static POOL: std::sync::OnceLock<&'static PoolCore> = std::sync::OnceLock::new();
     POOL.get_or_init(|| {
         // Capacity is fixed at first use: enough threads for the
         // current hint or the hardware, whichever is larger (the
         // submitter is always the +1th runner).
         let cap = default_workers().max(hw_workers());
         let threads = cap.saturating_sub(1).max(1);
-        let pool: &'static Pool = Box::leak(Box::new(Pool {
-            state: Mutex::new(PoolState {
-                job: None,
-                seq: 0,
-                active: 0,
-                max_claims: 0,
-            }),
-            work_cv: Condvar::new(),
-            done_cv: Condvar::new(),
-            threads,
-        }));
+        let mut core = PoolCore::new(threads);
+        core.instrument = true;
+        let core: &'static PoolCore = Box::leak(Box::new(core));
         for i in 0..threads {
             std::thread::Builder::new()
                 .name(format!("psm-pool-{i}"))
-                .spawn(move || worker_loop(pool))
+                .spawn(move || core.worker())
                 .expect("spawn pool worker");
         }
-        pool
+        core
     })
-}
-
-/// Drain the job's index stream. Runs on workers *and* the submitter.
-fn run_job(job: &Job) {
-    loop {
-        let i = job.next.fetch_add(1, Ordering::Relaxed);
-        if i >= job.n {
-            break;
-        }
-        (job.f)(i);
-    }
-}
-
-fn worker_loop(pool: &'static Pool) {
-    IN_POOL_WORKER.with(|w| w.set(true));
-    let mut last_seen = 0u64;
-    loop {
-        let job = {
-            let mut st = pool.state.lock().unwrap();
-            loop {
-                if let Some(job) = st.job {
-                    if st.seq != last_seen && st.active < st.max_claims {
-                        last_seen = st.seq;
-                        st.active += 1;
-                        break job;
-                    }
-                }
-                st = pool.work_cv.wait(st).unwrap();
-            }
-        };
-        let obs = pool_obs();
-        obs.active.inc();
-        if let Err(p) = catch_unwind(AssertUnwindSafe(|| run_job(job))) {
-            let mut slot = job.panic.lock().unwrap();
-            if slot.is_none() {
-                *slot = Some(p);
-            }
-        }
-        obs.active.dec_floor0();
-        let mut st = pool.state.lock().unwrap();
-        st.active -= 1;
-        if st.active == 0 {
-            pool.done_cv.notify_all();
-        }
-    }
-}
-
-/// Publish a job, work it from the submitting thread, quiesce, and
-/// re-raise any captured panic. Falls back to an inline loop when the
-/// slot is busy.
-fn dispatch(n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
-    let pool = pool();
-    let obs = pool_obs();
-    let t0 = crate::obs::enabled().then(std::time::Instant::now);
-    let job = Job {
-        f: unsafe { erase(f) },
-        next: AtomicUsize::new(0),
-        n,
-        panic: Mutex::new(None),
-    };
-    {
-        let mut st = pool.state.lock().unwrap();
-        if st.job.is_some() || st.active > 0 {
-            // Contended slot (concurrent dispatch from another
-            // thread): run inline rather than queueing.
-            drop(st);
-            obs.inline.inc();
-            run_job(&job);
-            if let Some(t0) = t0 {
-                obs.dispatch_ns.add(t0.elapsed().as_nanos() as u64);
-            }
-            return;
-        }
-        st.job = Some(unsafe { erase_job(&job) });
-        st.seq = st.seq.wrapping_add(1);
-        st.max_claims = workers.saturating_sub(1).min(pool.threads);
-    }
-    pool.work_cv.notify_all();
-    obs.dispatches.inc();
-    obs.tasks.add(n as u64);
-
-    // The submitter is always one of the runners.
-    let mine = catch_unwind(AssertUnwindSafe(|| run_job(&job)));
-
-    // Retract the job (no new claims) and wait for workers to leave
-    // it — after this, no reference to the stack `Job` survives.
-    let mut st = pool.state.lock().unwrap();
-    st.job = None;
-    while st.active > 0 {
-        st = pool.done_cv.wait(st).unwrap();
-    }
-    drop(st);
-
-    if let Some(t0) = t0 {
-        obs.dispatch_ns.add(t0.elapsed().as_nanos() as u64);
-    }
-    if let Some(p) = job.panic.lock().unwrap().take() {
-        resume_unwind(p);
-    }
-    if let Err(p) = mine {
-        resume_unwind(p);
-    }
 }
 
 // ---------------------------------------------------------------------
@@ -316,6 +523,7 @@ fn dispatch(n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
 ///
 /// Blocks until all items complete. Panics in workers propagate.
 /// Nested calls (from inside a pool job) run inline.
+#[cfg(not(feature = "loom"))]
 pub fn parallel_for<F>(n: usize, workers: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -324,13 +532,39 @@ where
         return;
     }
     let workers = workers.max(1).min(n);
-    if workers == 1 || IN_POOL_WORKER.with(|w| w.get()) {
+    if workers == 1 || in_pool_worker() {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    dispatch(n, workers, &f);
+    let obs = pool_obs();
+    let t0 = crate::obs::enabled().then(std::time::Instant::now);
+    match pool().dispatch(n, workers, &f) {
+        Dispatch::Pooled => {
+            obs.dispatches.inc();
+            obs.tasks.add(n as u64);
+        }
+        Dispatch::Inline => obs.inline.inc(),
+    }
+    if let Some(t0) = t0 {
+        obs.dispatch_ns.add(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Model-checked builds never touch the process-global pool (its
+/// workers are plain OS threads the checker cannot schedule): callers
+/// outside the modeled [`PoolCore`] degrade to the sequential loop,
+/// which is semantically identical by the sequential–parallel
+/// duality.
+#[cfg(feature = "loom")]
+pub fn parallel_for<F>(n: usize, _workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    for i in 0..n {
+        f(i);
+    }
 }
 
 /// Run `f(i, &mut dst[i])` for every slot in parallel — the in-place
@@ -358,39 +592,7 @@ where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
-    assert!(chunk > 0, "parallel_chunks: chunk must be positive");
-    assert_eq!(
-        dst.len() % chunk,
-        0,
-        "parallel_chunks: len {} not a multiple of chunk {chunk}",
-        dst.len()
-    );
-    let n = dst.len() / chunk;
-    if n == 0 {
-        return;
-    }
-    let workers = workers.max(1).min(n);
-    if workers == 1 {
-        for (i, window) in dst.chunks_mut(chunk).enumerate() {
-            f(i, window);
-        }
-        return;
-    }
-    struct Slots<T>(*mut T);
-    // SAFETY: window i covers [i*chunk, (i+1)*chunk) and each i is
-    // handed out exactly once, so the &mut windows are disjoint; the
-    // dispatch quiesces all workers before the caller sees `dst`
-    // again.
-    unsafe impl<T: Send> Sync for Slots<T> {}
-
-    let slots = Slots(dst.as_mut_ptr());
-    let slots_ref = &slots;
-    parallel_for(n, workers, |i| {
-        let window = unsafe {
-            std::slice::from_raw_parts_mut(slots_ref.0.add(i * chunk), chunk)
-        };
-        f(i, window);
-    });
+    chunks_impl(dst, chunk, f, |n, g| parallel_for(n, workers, g));
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
@@ -399,26 +601,14 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    struct Slots<T>(*mut Option<T>);
-    // SAFETY: each index is claimed by exactly one worker (the atomic
-    // counter in the dispatch hands out every i once), so writes are
-    // disjoint; the dispatch quiesces all workers before we read.
-    unsafe impl<T: Send> Sync for Slots<T> {}
-
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots = Slots(out.as_mut_ptr());
-    let slots_ref = &slots; // capture the Sync wrapper, not the raw field
-    parallel_for(n, workers, |i| {
-        let v = f(i);
-        unsafe { std::ptr::write(slots_ref.0.add(i), Some(v)) };
-    });
-    out.into_iter().map(|o| o.expect("worker missed index")).collect()
+    map_impl(n, f, |m, g| parallel_for(m, workers, g))
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(feature = "loom")))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::Ordering;
 
     #[test]
     fn covers_all_indices() {
@@ -548,5 +738,63 @@ mod tests {
         for (i, v) in dst.iter().enumerate() {
             assert_eq!(v, &format!("new-{i}"));
         }
+    }
+
+    #[test]
+    fn scoped_core_full_lifecycle() {
+        // A PoolCore with explicitly managed worker threads: the same
+        // protocol the global pool leaks, but with shutdown + join —
+        // exactly the shape the loom and Miri suites drive.
+        let core = std::sync::Arc::new(PoolCore::new(2));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let c = core.clone();
+                std::thread::spawn(move || c.worker())
+            })
+            .collect();
+
+        let hits = AtomicU64::new(0);
+        for _ in 0..50 {
+            core.run_for(16, 3, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 800);
+        assert!(core.quiesced());
+
+        let mut buf = vec![0usize; 8 * 4];
+        core.run_chunks(&mut buf, 4, 3, |i, w| w.fill(i + 1));
+        for (j, v) in buf.iter().enumerate() {
+            assert_eq!(*v, j / 4 + 1);
+        }
+        let out = core.run_map(10, 3, |i| i * 3);
+        assert_eq!(out, (0..10).map(|i| i * 3).collect::<Vec<_>>());
+
+        // Panic path leaves the core dispatchable and quiesced.
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            core.run_for(8, 3, &|i| {
+                if i == 3 {
+                    panic!("scoped boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        assert!(core.quiesced());
+        core.run_for(4, 3, &|_| ());
+
+        core.shutdown();
+        for t in workers {
+            t.join().expect("worker thread exits cleanly");
+        }
+        // With the workers gone a dispatch drains entirely on the
+        // submitter.
+        let late = AtomicU64::new(0);
+        assert_eq!(
+            core.run_for(5, 3, &|_| {
+                late.fetch_add(1, Ordering::Relaxed);
+            }),
+            Dispatch::Pooled
+        );
+        assert_eq!(late.load(Ordering::Relaxed), 5);
     }
 }

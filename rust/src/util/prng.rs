@@ -128,7 +128,7 @@ impl Zipf {
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        match self.cdf.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }

@@ -1,0 +1,53 @@
+//! Switchable synchronization primitives for the model-checked core.
+//!
+//! `util::pool` (and any future lock-free code) imports its atomics,
+//! `Mutex`, `Condvar` and thread-spawning through this shim instead of
+//! `std::sync` directly. In a normal build everything here is a
+//! zero-cost re-export of `std`. Under `--features loom` (`make loom`)
+//! the same names resolve to the vendored `loom` model checker's
+//! instrumented types, so `tests/loom_pool.rs` can exhaustively
+//! explore the pool's publish → claim → retract-then-quiesce protocol
+//! without a single source change in `pool.rs`.
+//!
+//! Canonical loom uses `RUSTFLAGS="--cfg loom"`; this repo keys off a
+//! cargo *feature* named `loom` instead so that ordinary builds on any
+//! toolchain never see an unexpected `cfg` (the CI lint job denies all
+//! warnings) and so `make loom` needs no RUSTFLAGS plumbing. The
+//! switch is otherwise the same idea: swap the primitive layer, keep
+//! the algorithm under test byte-for-byte identical.
+//!
+//! Only what the pool actually uses is re-exported; grow the surface
+//! deliberately — every addition widens what the model checker must
+//! cover.
+
+#[cfg(not(feature = "loom"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(not(feature = "loom"))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(feature = "loom"))]
+pub mod thread {
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+}
+
+#[cfg(feature = "loom")]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(feature = "loom")]
+pub mod atomic {
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(feature = "loom")]
+pub mod thread {
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+}
+
+/// Model-checking entry point (`loom::model`), re-exported so test
+/// code depends on `psm::util::sync` only. Present only under
+/// `--features loom`.
+#[cfg(feature = "loom")]
+pub use loom::model;

@@ -1,0 +1,344 @@
+//! Model-checked exploration of the pool's single-slot protocol
+//! (harness = false; exits non-zero on failure).
+//!
+//! Under `--features loom` (`make loom`) every scenario body runs
+//! hundreds of times under the vendored model checker's controlled
+//! scheduler — one task active at a time, every atomic/mutex/condvar
+//! operation a schedule point, bounded preemptions per execution — so
+//! the invariants below are checked across *many interleavings*, not
+//! one lucky native schedule:
+//!
+//! * publish → atomic claim → retract-then-quiesce leaves the core
+//!   quiesced with every index executed exactly once;
+//! * a concurrent dispatch on the occupied slot falls back inline and
+//!   still runs its own indices exactly once (both outcomes must be
+//!   observed across the seed sweep);
+//! * nested dispatch from inside a job inlines on both the worker
+//!   path (TLS flag) and the submitter path (busy slot), never
+//!   deadlocking on the slot it already holds;
+//! * a panicking task is captured, re-raised exactly once on the
+//!   submitter, and leaves the pool dispatchable;
+//! * shutdown racing a dispatch never strands work: the submitter
+//!   drains whatever the exiting workers do not claim.
+//!
+//! Without the feature (tier-1) the same binary runs a bounded
+//! native-thread smoke over the panic path — so the scenario code is
+//! exercised on every CI run, and `make loom` upgrades the schedule
+//! coverage.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use psm::util::pool::{Dispatch, PoolCore};
+use psm::util::sync::thread;
+
+fn main() {
+    let mut failed = 0;
+    let mut run = |name: &str, f: &dyn Fn()| {
+        let t0 = std::time::Instant::now();
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(f)).is_ok();
+        println!(
+            "test loom_pool::{name} ... {} ({:.1}s)",
+            if ok { "ok" } else { "FAILED" },
+            t0.elapsed().as_secs_f64()
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    #[cfg(feature = "loom")]
+    {
+        run("model_publish_claim_retract_quiesce",
+            &model_publish_claim_retract_quiesce);
+        run("model_contended_dispatch_falls_back_inline",
+            &model_contended_dispatch_falls_back_inline);
+        run("model_nested_dispatch_inlines",
+            &model_nested_dispatch_inlines);
+        run("model_panic_captured_exactly_once",
+            &model_panic_captured_exactly_once);
+        run("model_shutdown_racing_dispatch_strands_nothing",
+            &model_shutdown_racing_dispatch_strands_nothing);
+    }
+    #[cfg(not(feature = "loom"))]
+    {
+        run("smoke_panic_path_bounded_stress",
+            &smoke_panic_path_bounded_stress);
+        run("smoke_every_runner_panicking_raises_once",
+            &smoke_every_runner_panicking_raises_once);
+    }
+
+    if failed > 0 {
+        eprintln!("{failed} loom_pool tests failed");
+        std::process::exit(1);
+    }
+    println!("test result: ok.");
+}
+
+/// Spawn `n` model (or native) worker threads driving `core.worker()`.
+fn spawn_workers(
+    core: &Arc<PoolCore>,
+    n: usize,
+) -> Vec<thread::JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let c = core.clone();
+            thread::spawn(move || c.worker())
+        })
+        .collect()
+}
+
+#[cfg(feature = "loom")]
+mod model_scenarios {
+    use super::*;
+    use psm::util::sync::model;
+
+    pub fn model_publish_claim_retract_quiesce() {
+        model(|| {
+            let core = Arc::new(PoolCore::new(1));
+            let workers = spawn_workers(&core, 1);
+
+            let hits = AtomicUsize::new(0);
+            let d = core.run_for(4, 2, &|i| {
+                hits.fetch_add(i + 1, Ordering::Relaxed);
+            });
+            assert_eq!(d, Dispatch::Pooled, "uncontended slot must pool");
+            assert_eq!(
+                hits.load(Ordering::Relaxed),
+                10,
+                "every index exactly once"
+            );
+            assert!(core.quiesced(), "retract-then-quiesce must restore idle");
+
+            core.shutdown();
+            for w in workers {
+                w.join().expect("worker exits");
+            }
+        });
+    }
+
+    pub fn model_contended_dispatch_falls_back_inline() {
+        // Cross-iteration outcome record: the seed sweep must witness
+        // both the pooled and the contended-inline path.
+        let saw_pooled = Arc::new(AtomicBool::new(false));
+        let saw_inline = Arc::new(AtomicBool::new(false));
+        let (rec_p, rec_i) = (saw_pooled.clone(), saw_inline.clone());
+        model(move || {
+            let core = Arc::new(PoolCore::new(1));
+            let workers = spawn_workers(&core, 1);
+            let hits = Arc::new(AtomicUsize::new(0));
+
+            let c2 = core.clone();
+            let h2 = hits.clone();
+            let other = thread::spawn(move || {
+                c2.run_for(3, 2, &|_| {
+                    h2.fetch_add(1, Ordering::Relaxed);
+                })
+            });
+            let mine = core.run_for(3, 2, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            let theirs = other.join().expect("submitter task");
+
+            assert_eq!(
+                hits.load(Ordering::Relaxed),
+                6,
+                "contention must never lose or duplicate indices"
+            );
+            assert!(core.quiesced());
+            for d in [mine, theirs] {
+                match d {
+                    Dispatch::Pooled => rec_p.store(true, Ordering::Relaxed),
+                    Dispatch::Inline => rec_i.store(true, Ordering::Relaxed),
+                }
+            }
+
+            core.shutdown();
+            for w in workers {
+                w.join().expect("worker exits");
+            }
+        });
+        assert!(
+            saw_pooled.load(Ordering::Relaxed),
+            "seed sweep never reached the pooled outcome"
+        );
+        assert!(
+            saw_inline.load(Ordering::Relaxed),
+            "seed sweep never reached the contended-inline fallback"
+        );
+    }
+
+    pub fn model_nested_dispatch_inlines() {
+        model(|| {
+            let core = Arc::new(PoolCore::new(1));
+            let workers = spawn_workers(&core, 1);
+
+            let hits = AtomicUsize::new(0);
+            let nested_inline = AtomicUsize::new(0);
+            core.run_for(2, 2, &|_| {
+                // From a worker the TLS flag inlines; from the
+                // submitter the occupied slot inlines. Either way the
+                // nested call must not deadlock on the slot the outer
+                // job holds.
+                let d = core.run_for(2, 2, &|_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+                if d == Dispatch::Inline {
+                    nested_inline.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 4);
+            assert_eq!(
+                nested_inline.load(Ordering::Relaxed),
+                2,
+                "every nested dispatch must inline"
+            );
+            assert!(core.quiesced());
+
+            core.shutdown();
+            for w in workers {
+                w.join().expect("worker exits");
+            }
+        });
+    }
+
+    pub fn model_panic_captured_exactly_once() {
+        model(|| {
+            let core = Arc::new(PoolCore::new(1));
+            let workers = spawn_workers(&core, 1);
+
+            let raised = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                core.run_for(3, 2, &|i| {
+                    if i == 0 {
+                        panic!("model boom");
+                    }
+                });
+            }));
+            let payload = raised.expect_err("panic must reach the submitter");
+            let msg = payload
+                .downcast_ref::<&str>()
+                .copied()
+                .unwrap_or("<non-str payload>");
+            assert_eq!(msg, "model boom", "the captured payload is re-raised");
+            assert!(core.quiesced(), "panic path must still quiesce");
+
+            // Exactly once: the catch above consumed the only raise;
+            // the core is back to normal service.
+            let hits = AtomicUsize::new(0);
+            core.run_for(2, 2, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 2);
+
+            core.shutdown();
+            for w in workers {
+                w.join().expect("worker exits");
+            }
+        });
+    }
+
+    pub fn model_shutdown_racing_dispatch_strands_nothing() {
+        model(|| {
+            let core = Arc::new(PoolCore::new(1));
+            let workers = spawn_workers(&core, 1);
+
+            let c2 = core.clone();
+            let killer = thread::spawn(move || c2.shutdown());
+
+            // Whatever the interleaving — worker claims before the
+            // flag, sees the flag and exits, or never wakes — the
+            // submitter drains the remainder itself.
+            let hits = AtomicUsize::new(0);
+            core.run_for(4, 2, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 4);
+            assert!(core.quiesced());
+
+            killer.join().expect("shutdown task");
+            core.shutdown(); // idempotent: ensure the flag is set
+            for w in workers {
+                w.join().expect("worker exits");
+            }
+        });
+    }
+}
+
+#[cfg(feature = "loom")]
+use model_scenarios::*;
+
+/// Tier-1 smoke: the panic path under real threads, bounded rounds.
+/// Weaker than the model run (one native schedule per round) but keeps
+/// the scenario shapes compiling and passing on every CI tier.
+#[cfg(not(feature = "loom"))]
+fn smoke_panic_path_bounded_stress() {
+    let core = Arc::new(PoolCore::new(2));
+    let workers = spawn_workers(&core, 2);
+
+    for round in 0..200usize {
+        let boom_at = round % 8;
+        let survivors = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            core.run_for(8, 3, &|i| {
+                if i == boom_at {
+                    panic!("pinned boom");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        let payload = r.expect_err("panic must propagate every round");
+        assert_eq!(
+            payload.downcast_ref::<&str>().copied(),
+            Some("pinned boom"),
+            "round {round}: the captured payload is the one re-raised"
+        );
+        assert!(survivors.load(Ordering::Relaxed) <= 7);
+        assert!(core.quiesced(), "round {round}: pool must quiesce");
+
+        // The pool stays dispatchable after every propagated panic.
+        let hits = AtomicUsize::new(0);
+        let d = core.run_for(5, 3, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(d, Dispatch::Pooled, "round {round}: slot must be free");
+        assert_eq!(hits.load(Ordering::Relaxed), 5, "round {round}");
+    }
+
+    core.shutdown();
+    for w in workers {
+        w.join().expect("worker exits cleanly");
+    }
+}
+
+/// Every runner panics; the submitter must see exactly one payload
+/// (the first captured wins, the rest are swallowed) and the pool must
+/// come back quiesced.
+#[cfg(not(feature = "loom"))]
+fn smoke_every_runner_panicking_raises_once() {
+    let core = Arc::new(PoolCore::new(2));
+    let workers = spawn_workers(&core, 2);
+
+    for round in 0..50usize {
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            core.run_for(6, 3, &|i| panic!("boom {i}"));
+        }));
+        let payload = r.expect_err("some payload must be re-raised");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("format-panic payload is a String");
+        assert!(msg.starts_with("boom "), "round {round}: got {msg:?}");
+        assert!(core.quiesced(), "round {round}");
+    }
+    let hits = AtomicUsize::new(0);
+    core.run_for(4, 3, &|_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 4);
+
+    core.shutdown();
+    for w in workers {
+        w.join().expect("worker exits cleanly");
+    }
+}

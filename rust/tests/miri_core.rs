@@ -1,0 +1,238 @@
+//! Curated Miri subset for the `unsafe` core (harness = false; exits
+//! non-zero on failure). Run via `make miri`:
+//!
+//! ```text
+//! cargo +nightly miri test --test miri_core
+//! ```
+//!
+//! The interpreter is orders of magnitude slower than native and does
+//! not execute vendor SIMD intrinsics, so this is a *curated* pass
+//! over exactly the code that carries `unsafe` or lifetime-erasure
+//! tricks — not the whole suite:
+//!
+//! * the tiled kernels (raw chunking math) against the scalar
+//!   reference — under Miri `simd_active()` is forced off, so the
+//!   dispatchers exercise the portable tier;
+//! * the full [`PoolCore`] protocol — stack-published jobs behind a
+//!   lifetime-erased `&'static`, the raw-slot `parallel_chunks` /
+//!   `parallel_map` plumbing, the panic capture path — with real
+//!   threads that are shut down and joined (Miri rejects leaked
+//!   threads at exit, which is why this drives a scoped core and
+//!   never the leaked process-global pool);
+//! * the `OnlineScan` binary-counter arena (buffer recycling,
+//!   `prefix_into` ping-pong) against the incremental reference.
+//!
+//! Everything here also runs natively in tier-1 as a plain test
+//! binary, so the curated subset cannot rot.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use psm::scan::traits::ops::ConcatOp;
+use psm::scan::{sequential_scan, Aggregator, OnlineScan};
+use psm::util::pool::{Dispatch, PoolCore};
+use psm::util::prng::Rng;
+use psm::util::{kernels, pool};
+
+fn main() {
+    // Metrics handles are pure atomics, but the `PSM_METRICS_JSON`
+    // writer would park a thread Miri flags at exit; force the
+    // registry off before anything reads it.
+    std::env::set_var("PSM_METRICS", "0");
+    // Pin the portable tier on native runs too, so the bit-exactness
+    // assertions below hold both under Miri (no intrinsics) and on
+    // AVX2 hardware (where `axpy` would otherwise fuse mul-add).
+    std::env::set_var("PSM_SIMD", "0");
+    // Keep `default_workers()` deterministic and the global pool
+    // unused (every dispatch below goes through a scoped core).
+    pool::set_workers(1);
+
+    let mut failed = 0;
+    let mut run = |name: &str, f: &dyn Fn()| {
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(f)).is_ok();
+        println!(
+            "test miri_core::{name} ... {}",
+            if ok { "ok" } else { "FAILED" }
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("kernels_portable_tier_matches_scalar",
+        &kernels_portable_tier_matches_scalar);
+    run("pool_core_protocol_is_borrow_clean",
+        &pool_core_protocol_is_borrow_clean);
+    run("pool_core_panic_capture_is_clean",
+        &pool_core_panic_capture_is_clean);
+    run("online_scan_arena_recycling_is_clean",
+        &online_scan_arena_recycling_is_clean);
+
+    if failed > 0 {
+        eprintln!("{failed} miri_core tests failed");
+        std::process::exit(1);
+    }
+    println!("test result: ok.");
+}
+
+/// Sub-lane, straddling and multi-tile lengths (LANES = 8).
+const SIZES: [usize; 5] = [1, 3, 7, 48, 65];
+
+fn kernels_portable_tier_matches_scalar() {
+    if cfg!(miri) {
+        assert!(
+            !kernels::simd_active(),
+            "Miri cannot execute AVX2 intrinsics; detect() must gate"
+        );
+    }
+    let mut rng = Rng::new(0x000_5EED);
+    for &n in &SIZES {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let s = rng.normal() as f32;
+
+        let mut want = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+        kernels::add_into_scalar(&mut want, &a, &b);
+        kernels::add_into(&mut got, &a, &b);
+        assert_eq!(want, got, "add_into n={n}");
+
+        kernels::scale_into_scalar(&mut want, &a, s);
+        kernels::scale_into(&mut got, &a, s);
+        assert_eq!(want, got, "scale_into n={n}");
+
+        kernels::mul_into_scalar(&mut want, &a, &b);
+        kernels::mul_into(&mut got, &a, &b);
+        assert_eq!(want, got, "mul_into n={n}");
+
+        want.copy_from_slice(&a);
+        got.copy_from_slice(&a);
+        kernels::axpy_scalar(&mut want, s, &b);
+        kernels::axpy(&mut got, s, &b);
+        assert_eq!(want, got, "axpy n={n} (portable tier is bit-exact)");
+    }
+}
+
+/// The pool protocol end to end under the borrow checker's dynamic
+/// twin: publish → claim → retract-then-quiesce, raw-slot chunk and
+/// map plumbing, shutdown + join.
+fn pool_core_protocol_is_borrow_clean() {
+    let core = Arc::new(PoolCore::new(2));
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let c = core.clone();
+            std::thread::spawn(move || c.worker())
+        })
+        .collect();
+
+    // Repeated stack-published jobs: each dispatch erases the borrow
+    // of a different stack frame; Miri checks no access outlives it.
+    let hits = AtomicU64::new(0);
+    for round in 0..8u64 {
+        let local = round * 10;
+        core.run_for(6, 3, &|i| {
+            hits.fetch_add(local + i as u64, Ordering::Relaxed);
+        });
+        assert!(core.quiesced());
+    }
+    assert_eq!(hits.load(Ordering::Relaxed), (0..8u64).map(|r| 6 * r * 10 + 15).sum::<u64>());
+
+    // Raw-pointer window plumbing (disjoint &mut windows).
+    let mut buf = vec![0usize; 6 * 4];
+    core.run_chunks(&mut buf, 4, 3, |i, w| w.fill(i + 1));
+    for (j, v) in buf.iter().enumerate() {
+        assert_eq!(*v, j / 4 + 1);
+    }
+
+    // ptr::write slot plumbing with heap (drop-carrying) values.
+    let out = core.run_map(9, 3, |i| format!("s{i}"));
+    assert_eq!(out.len(), 9);
+    for (i, s) in out.iter().enumerate() {
+        assert_eq!(s, &format!("s{i}"));
+    }
+
+    core.shutdown();
+    for t in workers {
+        t.join().expect("worker exits cleanly");
+    }
+    // Workers gone: the submitter drains the whole job itself.
+    let late = AtomicU64::new(0);
+    assert_eq!(
+        core.run_for(5, 3, &|_| {
+            late.fetch_add(1, Ordering::Relaxed);
+        }),
+        Dispatch::Pooled
+    );
+    assert_eq!(late.load(Ordering::Relaxed), 5);
+}
+
+/// The panic path moves a payload across threads while the job it
+/// belongs to is being retracted — exactly the kind of window where a
+/// use-after-free would hide. Miri watches every access.
+fn pool_core_panic_capture_is_clean() {
+    let core = Arc::new(PoolCore::new(1));
+    let worker = {
+        let c = core.clone();
+        std::thread::spawn(move || c.worker())
+    };
+
+    for _ in 0..4 {
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            core.run_for(4, 2, &|i| {
+                if i == 1 {
+                    panic!("miri boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the submitter");
+        assert!(core.quiesced(), "panic path must still quiesce");
+        // And the core stays dispatchable.
+        let n = AtomicU64::new(0);
+        core.run_for(3, 2, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 3);
+    }
+
+    core.shutdown();
+    worker.join().expect("worker exits cleanly");
+}
+
+/// Binary-counter arena: recycled buffers are written through
+/// `agg_into` into slots that previously held other states — pure
+/// safe code on top of heavy buffer reuse, the exact pattern Miri's
+/// provenance tracking is for.
+fn online_scan_arena_recycling_is_clean() {
+    let op = ConcatOp;
+    let mut scan = OnlineScan::new(&op);
+    let xs: Vec<String> = (0..33).map(|i| format!("[{i}]")).collect();
+    let want = sequential_scan(&op, &xs);
+
+    let mut out = op.new_state();
+    for (t, x) in xs.iter().enumerate() {
+        // Push through the recycle pool the way the serving path does.
+        let mut buf = scan.take_buffer();
+        op.identity_into(&mut buf);
+        op.agg_into(&op.identity(), x, &mut buf);
+        scan.push(buf);
+        scan.prefix_into(&mut out);
+        assert_eq!(out, want[t], "prefix at t={t}");
+        assert_eq!(scan.prefix(), want[t], "owned prefix at t={t}");
+    }
+    assert_eq!(scan.len(), 33);
+    assert!(scan.occupied_roots() <= 6, "O(log n) roots");
+
+    // Tear down through every arena path: clear refills the free
+    // list, into_arena hands the slab back, with_arena rebuilds.
+    scan.clear();
+    assert!(scan.is_empty());
+    let arena = scan.into_arena();
+    assert!(!arena.is_empty(), "clear() must recycle the roots");
+    let mut scan2 = OnlineScan::with_arena(&op, arena);
+    scan2.push("a".to_string());
+    scan2.push("b".to_string());
+    assert_eq!(scan2.prefix(), "ab");
+    let s = scan2.take_buffer();
+    scan2.recycle(s);
+}

@@ -1,0 +1,833 @@
+//! Offline stand-in for the `loom` model checker.
+//!
+//! The container this workspace builds in has no crates.io access, so
+//! this vendored crate provides the subset of loom's API that
+//! `psm::util::sync` re-exports (`model`, `thread::{spawn, yield_now}`,
+//! `sync::{Mutex, Condvar}`, `sync::atomic::*`) with a working — if
+//! weaker — checker behind it:
+//!
+//! * Every execution of the model body runs the model's threads **one
+//!   at a time** under a cooperative scheduler. Real OS threads back
+//!   the tasks, but exactly one is runnable-and-active at any instant,
+//!   so every interleaving the checker produces is a genuine
+//!   sequentially-consistent schedule.
+//! * Every synchronization operation (atomic access, mutex lock or
+//!   unlock, condvar wait or notify, spawn, join, `yield_now`) is a
+//!   schedule point. At each point the scheduler may preempt the
+//!   active task, with a bounded number of preemptions per execution
+//!   (PCT-style) driven by a deterministic per-iteration seed.
+//! * `model(f)` replays `f` across `LOOM_MAX_ITER` seeds (default
+//!   200) with up to `LOOM_MAX_PREEMPTIONS` forced switches each
+//!   (default 4). A panic on any task, or a deadlock (every live task
+//!   blocked), aborts the whole model and fails the test with the
+//!   iteration number, which reproduces the schedule.
+//!
+//! What this is **not**: exhaustive DPOR exploration, and there is no
+//! weak-memory modeling — `Ordering` arguments are accepted and
+//! ignored, so only schedules (not relaxed-memory reorderings) are
+//! explored. The API matches loom's, so pointing the workspace at the
+//! real crate upgrades the guarantee without touching a caller.
+
+mod rt {
+    use std::cell::Cell;
+    use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+    /// Resource kinds a task can block on. Paired with an address (or
+    /// task id for `JOIN`) they identify the wake-up channel.
+    pub(crate) const RES_MUTEX: u8 = 0;
+    pub(crate) const RES_JOIN: u8 = 1;
+    pub(crate) const RES_CV: u8 = 2;
+
+    #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+    enum Task {
+        Runnable,
+        Blocked(u8, usize),
+        Finished,
+    }
+
+    struct Sched {
+        running: bool,
+        rng: u64,
+        active: usize,
+        tasks: Vec<Task>,
+        preemptions_left: u32,
+        failed: bool,
+        handles: Vec<std::thread::JoinHandle<()>>,
+    }
+
+    struct Rt {
+        m: Mutex<Sched>,
+        cv: Condvar,
+    }
+
+    fn rt() -> &'static Rt {
+        static RT: OnceLock<Rt> = OnceLock::new();
+        RT.get_or_init(|| Rt {
+            m: Mutex::new(Sched {
+                running: false,
+                rng: 0,
+                active: 0,
+                tasks: Vec::new(),
+                preemptions_left: 0,
+                failed: false,
+                handles: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    thread_local! {
+        static TASK: Cell<Option<usize>> = const { Cell::new(None) };
+    }
+
+    fn splitmix(s: &mut u64) -> u64 {
+        *s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = *s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub(crate) fn current_id() -> usize {
+        TASK.with(|t| t.get()).expect(
+            "loom primitive used outside loom::model \
+             (the vendored loom only works inside a running model)",
+        )
+    }
+
+    fn runnable_other_than(s: &Sched, me: Option<usize>) -> Vec<usize> {
+        s.tasks
+            .iter()
+            .enumerate()
+            .filter(|&(i, t)| Some(i) != me && matches!(t, Task::Runnable))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Hand the schedule to some runnable task other than `me`.
+    /// Returns false when nobody else can run.
+    fn schedule_other(s: &mut Sched, me: usize) -> bool {
+        let ids = runnable_other_than(s, Some(me));
+        if ids.is_empty() {
+            return false;
+        }
+        let k = splitmix(&mut s.rng) as usize % ids.len();
+        s.active = ids[k];
+        true
+    }
+
+    /// Park until the scheduler hands this task the (single) execution
+    /// turn. Panics the task out of the model once a failure is flagged
+    /// anywhere, so every OS thread unwinds and exits.
+    fn wait_for_turn(mut s: MutexGuard<'_, Sched>, me: usize) -> MutexGuard<'_, Sched> {
+        loop {
+            if s.failed {
+                drop(s);
+                panic!("loom: model aborted (failure on another task)");
+            }
+            if s.active == me && matches!(s.tasks[me], Task::Runnable) {
+                return s;
+            }
+            s = rt().cv.wait(s).expect("loom scheduler mutex poisoned");
+        }
+    }
+
+    /// A schedule point: possibly preempt the active task (bounded
+    /// budget), otherwise keep running.
+    pub(crate) fn yield_point() {
+        if std::thread::panicking() {
+            return;
+        }
+        let me = current_id();
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        if s.failed {
+            drop(s);
+            panic!("loom: model aborted (failure on another task)");
+        }
+        debug_assert_eq!(s.active, me, "schedule point on a non-active task");
+        let others = runnable_other_than(&s, Some(me));
+        if !others.is_empty() && s.preemptions_left > 0 && splitmix(&mut s.rng) % 4 == 0 {
+            s.preemptions_left -= 1;
+            let k = splitmix(&mut s.rng) as usize % others.len();
+            s.active = others[k];
+            r.cv.notify_all();
+            let _s = wait_for_turn(s, me);
+        }
+    }
+
+    /// Voluntary reschedule (`thread::yield_now`): pick any runnable
+    /// task, possibly this one, without spending the preemption budget.
+    pub(crate) fn voluntary_yield() {
+        if std::thread::panicking() {
+            return;
+        }
+        let me = current_id();
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        if s.failed {
+            drop(s);
+            panic!("loom: model aborted (failure on another task)");
+        }
+        if schedule_other(&mut s, me) {
+            r.cv.notify_all();
+            let _s = wait_for_turn(s, me);
+        }
+    }
+
+    /// Block the calling task on `(kind, addr)` and hand off the
+    /// schedule. Panics the whole model on deadlock.
+    pub(crate) fn block_on(kind: u8, addr: usize) {
+        let me = current_id();
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        if s.failed {
+            drop(s);
+            panic!("loom: model aborted (failure on another task)");
+        }
+        s.tasks[me] = Task::Blocked(kind, addr);
+        if !schedule_other(&mut s, me) {
+            s.failed = true;
+            r.cv.notify_all();
+            drop(s);
+            panic!("loom: deadlock — every live model task is blocked");
+        }
+        r.cv.notify_all();
+        let _s = wait_for_turn(s, me);
+    }
+
+    /// Condvar wait: atomically (w.r.t. the schedule — no intervening
+    /// schedule point) become a waiter on `cv_addr`, release the model
+    /// mutex whose holder cell is `holder`, wake its waiters, and hand
+    /// off. Returns once notified *and* scheduled; the caller then
+    /// re-acquires the mutex (and may block again doing so).
+    pub(crate) fn wait_on_cv(
+        cv_addr: usize,
+        mutex_addr: usize,
+        holder: &std::sync::atomic::AtomicUsize,
+    ) {
+        let me = current_id();
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        if s.failed {
+            drop(s);
+            panic!("loom: model aborted (failure on another task)");
+        }
+        holder.store(0, std::sync::atomic::Ordering::Relaxed);
+        for t in s.tasks.iter_mut() {
+            if *t == Task::Blocked(RES_MUTEX, mutex_addr) {
+                *t = Task::Runnable;
+            }
+        }
+        s.tasks[me] = Task::Blocked(RES_CV, cv_addr);
+        if !schedule_other(&mut s, me) {
+            s.failed = true;
+            r.cv.notify_all();
+            drop(s);
+            panic!("loom: deadlock — every live model task is blocked");
+        }
+        r.cv.notify_all();
+        let _s = wait_for_turn(s, me);
+    }
+
+    /// Wake every task blocked on `(kind, addr)`. They become runnable
+    /// and get picked up at future schedule points.
+    pub(crate) fn unblock_all(kind: u8, addr: usize) {
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        for t in s.tasks.iter_mut() {
+            if *t == Task::Blocked(kind, addr) {
+                *t = Task::Runnable;
+            }
+        }
+        r.cv.notify_all();
+    }
+
+    /// Wake one (seed-chosen) task blocked on `(kind, addr)`.
+    pub(crate) fn unblock_one(kind: u8, addr: usize) {
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        let ids: Vec<usize> = s
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|&(_, t)| *t == Task::Blocked(kind, addr))
+            .map(|(i, _)| i)
+            .collect();
+        if !ids.is_empty() {
+            let k = splitmix(&mut s.rng) as usize % ids.len();
+            s.tasks[ids[k]] = Task::Runnable;
+        }
+        r.cv.notify_all();
+    }
+
+    pub(crate) fn register_task() -> usize {
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        assert!(s.running, "loom::thread::spawn outside loom::model");
+        s.tasks.push(Task::Runnable);
+        s.tasks.len() - 1
+    }
+
+    pub(crate) fn store_handle(h: std::thread::JoinHandle<()>) {
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        s.handles.push(h);
+    }
+
+    pub(crate) fn set_tls(id: usize) {
+        TASK.with(|t| t.set(Some(id)));
+    }
+
+    pub(crate) fn clear_tls() {
+        TASK.with(|t| t.set(None));
+    }
+
+    /// First thing a spawned task does: park until scheduled.
+    pub(crate) fn task_start(id: usize) {
+        let r = rt();
+        let s = r.m.lock().expect("loom scheduler mutex poisoned");
+        let _s = wait_for_turn(s, id);
+    }
+
+    /// Last thing a spawned task does (even when unwinding).
+    pub(crate) fn finish(id: usize, failed: bool) {
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        s.tasks[id] = Task::Finished;
+        if failed {
+            s.failed = true;
+        }
+        for t in s.tasks.iter_mut() {
+            if *t == Task::Blocked(RES_JOIN, id) {
+                *t = Task::Runnable;
+            }
+        }
+        if !s.failed && s.active == id && !schedule_other(&mut s, id) {
+            // Nobody runnable. Either everything finished (fine: the
+            // model driver is waiting on the scheduler condvar, not in
+            // the task table) or the remaining tasks are blocked
+            // forever — a deadlock the driver flags on wake-up.
+            if s
+                .tasks
+                .iter()
+                .any(|t| matches!(t, Task::Blocked(_, _)))
+            {
+                s.failed = true;
+            }
+        }
+        r.cv.notify_all();
+    }
+
+    /// Block until task `id` finishes.
+    pub(crate) fn join_wait(id: usize) {
+        yield_point();
+        loop {
+            {
+                let r = rt();
+                let s = r.m.lock().expect("loom scheduler mutex poisoned");
+                if s.failed {
+                    drop(s);
+                    panic!("loom: model aborted (failure on another task)");
+                }
+                if matches!(s.tasks[id], Task::Finished) {
+                    return;
+                }
+            }
+            block_on(RES_JOIN, id);
+        }
+    }
+
+    /// Start one model iteration on the calling thread (task 0).
+    /// Concurrent `model` calls (e.g. parallel `cargo test` threads)
+    /// serialize on the one scheduler; a *nested* call from inside a
+    /// model task is a bug and panics.
+    pub(crate) fn begin(seed: u64, preemptions: u32) {
+        assert!(
+            TASK.with(|t| t.get()).is_none(),
+            "loom::model is not reentrant (nested model call on a model task)"
+        );
+        let r = rt();
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        while s.running {
+            s = r.cv.wait(s).expect("loom scheduler mutex poisoned");
+        }
+        s.running = true;
+        s.rng = seed;
+        s.active = 0;
+        s.tasks.clear();
+        s.tasks.push(Task::Runnable);
+        s.preemptions_left = preemptions;
+        s.failed = false;
+        drop(s);
+        set_tls(0);
+    }
+
+    /// Finish one iteration: retire task 0, drain every spawned task
+    /// (flagging a deadlock if live tasks can never run again), join
+    /// the OS threads and reset. `Err` reports a failure that was NOT
+    /// the body's own panic (the caller resumes that one itself).
+    pub(crate) fn end(body_failed: bool) -> Result<(), String> {
+        let r = rt();
+        {
+            let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+            s.tasks[0] = Task::Finished;
+            if body_failed {
+                s.failed = true;
+            }
+            for t in s.tasks.iter_mut() {
+                if *t == Task::Blocked(RES_JOIN, 0) {
+                    *t = Task::Runnable;
+                }
+            }
+            if !s.failed && s.active == 0 {
+                let _ = schedule_other(&mut s, 0);
+            }
+            r.cv.notify_all();
+            loop {
+                if s.failed || s.tasks.iter().all(|t| matches!(t, Task::Finished)) {
+                    break;
+                }
+                if !s.tasks.iter().any(|t| matches!(t, Task::Runnable)) {
+                    // Live tasks that can never run again, e.g. a
+                    // worker the body forgot to shut down.
+                    s.failed = true;
+                    break;
+                }
+                s = r.cv.wait(s).expect("loom scheduler mutex poisoned");
+            }
+            r.cv.notify_all();
+        }
+        let handles = {
+            let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+            std::mem::take(&mut s.handles)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        let mut s = r.m.lock().expect("loom scheduler mutex poisoned");
+        let non_body_failure = s.failed && !body_failed;
+        s.running = false;
+        s.tasks.clear();
+        drop(s);
+        // Wake any `begin` queued behind this iteration.
+        r.cv.notify_all();
+        clear_tls();
+        if non_body_failure {
+            Err("a spawned task panicked or the model deadlocked".to_owned())
+        } else {
+            Ok(())
+        }
+    }
+}
+
+pub mod thread {
+    //! Model-aware replacements for `std::thread::{spawn, yield_now}`.
+
+    use std::sync::mpsc;
+
+    pub struct JoinHandle<T> {
+        id: usize,
+        rx: mpsc::Receiver<std::thread::Result<T>>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            crate::rt::join_wait(self.id);
+            self.rx
+                .recv()
+                .expect("loom: task finished without publishing a result")
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        crate::rt::yield_point();
+        let id = crate::rt::register_task();
+        let (tx, rx) = mpsc::channel();
+        let os = std::thread::Builder::new()
+            .name(format!("loom-task-{id}"))
+            .spawn(move || {
+                crate::rt::set_tls(id);
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::rt::task_start(id);
+                    f()
+                }));
+                let failed = out.is_err();
+                let _ = tx.send(out);
+                crate::rt::finish(id, failed);
+                crate::rt::clear_tls();
+            })
+            .expect("loom: failed to spawn backing OS thread");
+        crate::rt::store_handle(os);
+        JoinHandle { id, rx }
+    }
+
+    pub fn yield_now() {
+        crate::rt::voluntary_yield();
+    }
+}
+
+pub mod sync {
+    //! Model-aware `Mutex`/`Condvar` plus the atomic wrappers. All of
+    //! them insert schedule points; mutual exclusion is enforced by the
+    //! scheduler running exactly one task at a time, so the internal
+    //! state cells never race.
+
+    pub use std::sync::Arc;
+    use std::sync::LockResult;
+
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        macro_rules! model_atomic {
+            ($name:ident, $std:ty, $t:ty) => {
+                #[derive(Debug, Default)]
+                pub struct $name($std);
+
+                impl $name {
+                    pub fn new(v: $t) -> Self {
+                        Self(<$std>::new(v))
+                    }
+                    pub fn load(&self, o: Ordering) -> $t {
+                        crate::rt::yield_point();
+                        self.0.load(o)
+                    }
+                    pub fn store(&self, v: $t, o: Ordering) {
+                        crate::rt::yield_point();
+                        self.0.store(v, o);
+                    }
+                    pub fn swap(&self, v: $t, o: Ordering) -> $t {
+                        crate::rt::yield_point();
+                        self.0.swap(v, o)
+                    }
+                    pub fn compare_exchange(
+                        &self,
+                        cur: $t,
+                        new: $t,
+                        ok: Ordering,
+                        err: Ordering,
+                    ) -> Result<$t, $t> {
+                        crate::rt::yield_point();
+                        self.0.compare_exchange(cur, new, ok, err)
+                    }
+                    pub fn compare_exchange_weak(
+                        &self,
+                        cur: $t,
+                        new: $t,
+                        ok: Ordering,
+                        err: Ordering,
+                    ) -> Result<$t, $t> {
+                        self.compare_exchange(cur, new, ok, err)
+                    }
+                    pub fn into_inner(self) -> $t {
+                        self.0.into_inner()
+                    }
+                }
+            };
+        }
+
+        model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+        model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+
+        macro_rules! atomic_arith {
+            ($name:ident, $t:ty) => {
+                impl $name {
+                    pub fn fetch_add(&self, v: $t, o: Ordering) -> $t {
+                        crate::rt::yield_point();
+                        self.0.fetch_add(v, o)
+                    }
+                    pub fn fetch_sub(&self, v: $t, o: Ordering) -> $t {
+                        crate::rt::yield_point();
+                        self.0.fetch_sub(v, o)
+                    }
+                }
+            };
+        }
+        atomic_arith!(AtomicUsize, usize);
+        atomic_arith!(AtomicU64, u64);
+
+        impl AtomicBool {
+            pub fn fetch_or(&self, v: bool, o: Ordering) -> bool {
+                crate::rt::yield_point();
+                self.0.fetch_or(v, o)
+            }
+            pub fn fetch_and(&self, v: bool, o: Ordering) -> bool {
+                crate::rt::yield_point();
+                self.0.fetch_and(v, o)
+            }
+        }
+    }
+
+    /// Who holds the mutex: 0 = free, otherwise task id + 1. Only the
+    /// single active task mutates it, so `Relaxed` std atomics suffice
+    /// as interior-mutable cells.
+    pub struct Mutex<T> {
+        holder: std::sync::atomic::AtomicUsize,
+        data: std::cell::UnsafeCell<T>,
+    }
+
+    // SAFETY: the scheduler runs exactly one model task at a time and
+    // `holder` gates `data` exactly like a real mutex: `&mut T` is only
+    // produced through a guard obtained while `holder` names the
+    // calling task, so aliasing access is impossible.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    // SAFETY: see the `Send` justification above.
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    impl<T> Mutex<T> {
+        pub fn new(t: T) -> Self {
+            Self {
+                holder: std::sync::atomic::AtomicUsize::new(0),
+                data: std::cell::UnsafeCell::new(t),
+            }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Self as *const u8 as usize
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            use std::sync::atomic::Ordering::Relaxed;
+            crate::rt::yield_point();
+            loop {
+                if self.holder.load(Relaxed) == 0 {
+                    self.holder.store(crate::rt::current_id() + 1, Relaxed);
+                    return Ok(MutexGuard { lock: self });
+                }
+                crate::rt::block_on(crate::rt::RES_MUTEX, self.addr());
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            Ok(self.data.into_inner())
+        }
+    }
+
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            // SAFETY: the guard exists only while `holder` names this
+            // task (see `Mutex::lock`), so no other task can touch
+            // `data` until the guard drops.
+            unsafe { &*self.lock.data.get() }
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            // SAFETY: as in `Deref` — exclusive by the holder protocol.
+            unsafe { &mut *self.lock.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            use std::sync::atomic::Ordering::Relaxed;
+            self.lock.holder.store(0, Relaxed);
+            crate::rt::unblock_all(crate::rt::RES_MUTEX, self.lock.addr());
+            // Extra schedule point after release (skipped mid-panic so
+            // unwinding drops stay silent).
+            crate::rt::yield_point();
+        }
+    }
+
+    /// Identity is the instance address; needs a byte of storage so
+    /// two condvars in one struct get distinct addresses.
+    #[derive(Default)]
+    pub struct Condvar {
+        _addr_anchor: u8,
+    }
+
+    impl Condvar {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Self as *const u8 as usize
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let lock = guard.lock;
+            // Manual release inside the scheduler (atomically with
+            // becoming a waiter — no lost wake-ups); the guard must not
+            // also release on drop.
+            std::mem::forget(guard);
+            crate::rt::wait_on_cv(self.addr(), lock.addr(), &lock.holder);
+            lock.lock()
+        }
+
+        pub fn notify_all(&self) {
+            crate::rt::yield_point();
+            crate::rt::unblock_all(crate::rt::RES_CV, self.addr());
+        }
+
+        pub fn notify_one(&self) {
+            crate::rt::yield_point();
+            crate::rt::unblock_one(crate::rt::RES_CV, self.addr());
+        }
+    }
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+/// Explore `f` across `iters` seeded schedules with at most
+/// `preemptions` forced switches each. Fails (panics) on the first
+/// iteration whose schedule panics a task or deadlocks.
+pub fn explore<F: Fn() + Sync + Send + 'static>(iters: u64, preemptions: u32, f: F) {
+    for i in 0..iters {
+        // Distinct, well-mixed seed per iteration.
+        let seed = (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5851_F42D_4C95_7F2D;
+        rt::begin(seed, preemptions);
+        let body = std::panic::catch_unwind(std::panic::AssertUnwindSafe(&f));
+        let drain = rt::end(body.is_err());
+        if let Err(p) = body {
+            eprintln!("loom: model failed at iteration {i} (seed {seed:#x})");
+            std::panic::resume_unwind(p);
+        }
+        if let Err(msg) = drain {
+            panic!("loom: iteration {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// loom-compatible entry point. Iteration count and preemption bound
+/// come from `LOOM_MAX_ITER` (default 200) and `LOOM_MAX_PREEMPTIONS`
+/// (default 4).
+pub fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    let iters = env_u64("LOOM_MAX_ITER", 200);
+    let preemptions = env_u64("LOOM_MAX_PREEMPTIONS", 4) as u32;
+    explore(iters, preemptions, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn mutex_counter_is_exact() {
+        super::explore(60, 3, || {
+            let n = Arc::new(Mutex::new(0usize));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = n.clone();
+                    super::thread::spawn(move || {
+                        let mut g = n.lock().unwrap();
+                        *g += 1;
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    fn atomic_counter_is_exact() {
+        super::explore(60, 3, || {
+            let n = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = n.clone();
+                    super::thread::spawn(move || {
+                        n.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn condvar_handoff_completes() {
+        super::explore(60, 3, || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let h = super::thread::spawn(move || {
+                let (m, cv) = &*p2;
+                let mut ready = m.lock().unwrap();
+                *ready = true;
+                drop(ready);
+                cv.notify_all();
+            });
+            {
+                let (m, cv) = &*pair;
+                let mut ready = m.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+            }
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn schedules_actually_vary() {
+        // Two racing fetch_adds: across iterations both claim orders
+        // must be observed, i.e. the explorer really permutes
+        // schedules rather than replaying program order.
+        let orders = Arc::new(std::sync::Mutex::new(std::collections::BTreeSet::new()));
+        let o2 = orders.clone();
+        super::explore(100, 3, move || {
+            let slot = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = [1usize, 2]
+                .into_iter()
+                .map(|tag| {
+                    let slot = slot.clone();
+                    super::thread::spawn(move || {
+                        slot.compare_exchange(0, tag, Ordering::SeqCst, Ordering::SeqCst)
+                            .ok();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            o2.lock().unwrap().insert(slot.load(Ordering::SeqCst));
+        });
+        let seen = orders.lock().unwrap();
+        assert_eq!(
+            seen.len(),
+            2,
+            "expected both interleavings across 100 seeds, saw {seen:?}"
+        );
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        let r = std::panic::catch_unwind(|| {
+            super::explore(1, 0, || {
+                let pair = Arc::new((Mutex::new(()), Condvar::new()));
+                let p2 = pair.clone();
+                // Waits forever: nobody ever notifies.
+                super::thread::spawn(move || {
+                    let (m, cv) = &*p2;
+                    let g = m.lock().unwrap();
+                    let _g = cv.wait(g).unwrap();
+                });
+                // Body returns with the waiter still blocked.
+            });
+        });
+        assert!(r.is_err(), "un-notified waiter must be reported");
+    }
+}
