@@ -3,8 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench bench-check chaos obs artifacts clean \
-        lint loom miri tsan asan analysis
+.PHONY: build test bench bench-check chaos obs durability artifacts \
+        clean lint loom miri tsan asan analysis
 
 build:
 	cargo build --release
@@ -13,18 +13,21 @@ test:
 	cargo build --release && cargo test -q
 
 # Perf trajectory: each bench writes its machine-readable artifact
-# (BENCH_scan.json / BENCH_latency.json) to the workspace root
-# (PSM_BENCH_DIR overrides).
+# (BENCH_scan.json / BENCH_latency.json / BENCH_tier.json) to the
+# workspace root (PSM_BENCH_DIR overrides).
 bench:
 	cargo bench --bench scan_hotpath
 	cargo bench --bench fig6_latency
+	cargo bench --bench tier
 
-# Perf-regression gate: diff the fresh BENCH_scan.json against the
-# checked-in bench_baseline.json; >25% ns/elem regression (or any
-# steady-state allocation) fails. Re-baseline to this machine with
+# Perf-regression gate: diff the fresh BENCH_scan.json /
+# BENCH_tier.json against the checked-in bench_baseline.json /
+# bench_tier_baseline.json; >25% regression (or any steady-state
+# allocation) fails. Re-baseline to this machine with
 # `cargo run --release --bin bench-check -- --write-baseline`.
 bench-check:
 	cargo bench --bench scan_hotpath -- --quick
+	cargo bench --bench tier -- --quick
 	cargo run --release --bin bench-check
 
 # Fault-injection soak + recovery bench (writes BENCH_chaos.json).
@@ -37,6 +40,12 @@ chaos:
 obs:
 	cargo test -q --test obs_e2e
 	cargo bench --bench obs
+
+# Durability smoke: snapshot-codec fuzz, spill/restore bit-exactness,
+# kill -9 crash recovery and the eviction-chaos soak (PSM_SOAK=short
+# keeps the soak inside CI budget; unset for the full-length soak).
+durability:
+	PSM_SOAK=short cargo test -q --test durability
 
 # AOT-lower every model entry point to HLO text + manifest.json for the
 # PJRT backend. Requires a python environment with jax (build-time only;

@@ -80,6 +80,7 @@ fn main() {
         nan_p: 0.01,
         delay_p: 0.05,
         delay_ms: 2,
+        ..Default::default()
     };
     std::env::set_var("PSM_VALIDATE", "1");
     let frt = Runtime::reference().with_faults(cfg);

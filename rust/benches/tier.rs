@@ -1,0 +1,155 @@
+//! Durable-tier bench: what a spilled session costs and when replay
+//! beats a snapshot.
+//!
+//! Measures, on `psm_mqar_c32` (c = 32, d = 48 — the ISSUE's sizing
+//! point) at a fixed token horizon:
+//!
+//! * **snapshot size** — `psm.sess.v1` frame bytes per session, and the
+//!   derived sessions/GB packing density of the spill tier;
+//! * **in-memory codec** — `save_into` / `restore_from` p50/p99 over a
+//!   warm reuse buffer (the executor's steady-state spill path);
+//! * **disk tier** — `SessionStore::write_snapshot` (spill, including
+//!   the tmp-file + rename publish) and `restore_session` (read +
+//!   decode + journal-suffix replay) p50/p99;
+//! * **replay** — ns/token to rebuild the same state from the journal
+//!   alone, and the derived restore-vs-replay crossover: below this
+//!   many journaled tokens a full replay is cheaper than decoding a
+//!   snapshot, which is where `PSM_SNAPSHOT_EVERY` should sit.
+//!
+//! Results go to `BENCH_tier.json` (`PSM_BENCH_DIR` overrides the
+//! directory); `make bench-check` gates the tracked figures against
+//! `bench_tier_baseline.json`. `--quick` shortens the horizon and the
+//! timing budget for CI smoke runs.
+
+use psm::bench::{artifact_path, BenchResult, Bencher, Table};
+use psm::coordinator::{PsmSession, SessionStore};
+use psm::runtime::{ParamStore, Runtime};
+use psm::util::json::Json;
+
+fn pcts(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("p50", Json::Num(r.p50_ns)),
+        ("p99", Json::Num(r.p99_ns)),
+        ("mean", Json::Num(r.mean_ns)),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let horizon: usize = if quick { 256 } else { 2048 };
+    let model = "psm_mqar_c32";
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("# tier bench — {model}, horizon {horizon} tokens\n");
+
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 7).unwrap();
+    let tokens: Vec<i32> =
+        (0..horizon).map(|t| (t % 509) as i32).collect();
+
+    // Drive one session to the horizon; this is the state every
+    // save/spill below serializes.
+    let mut sess = PsmSession::new(&rt, model, &params).unwrap();
+    for &t in &tokens {
+        sess.push_token(t).unwrap();
+    }
+
+    // ---- Snapshot size / packing density -------------------------------
+    let mut snap: Vec<u8> = Vec::new();
+    sess.save_into(&mut snap).unwrap();
+    let bytes = snap.len();
+    let sessions_per_gb = 1e9 / bytes as f64;
+
+    // ---- In-memory codec ------------------------------------------------
+    let mut buf: Vec<u8> = Vec::with_capacity(bytes);
+    let save = b.run("save_into", || {
+        buf.clear();
+        sess.save_into(&mut buf).unwrap();
+    });
+    let mut dst = PsmSession::new(&rt, model, &params).unwrap();
+    let restore = b.run("restore_from", || {
+        dst.restore_from(&snap).unwrap();
+    });
+    assert_eq!(
+        dst.metrics.tokens as usize, horizon,
+        "restore must land on the horizon"
+    );
+
+    // ---- Disk tier ------------------------------------------------------
+    let dir = std::env::temp_dir()
+        .join(format!("psm-tier-bench-{}", std::process::id()));
+    let mut store = SessionStore::new(&dir, 64).unwrap();
+    // Journal exactly the fed tokens so restore_session's watermark
+    // lands on the journal length (empty replay suffix).
+    store.append_journal(0, &tokens, &[]).unwrap();
+    let spill = b.run("write_snapshot", || {
+        store.write_snapshot(0, &sess, false).unwrap();
+    });
+    let disk_restore = b.run("restore_session", || {
+        store.restore_session(0, &mut dst).unwrap();
+    });
+
+    // ---- Replay from the journal alone ----------------------------------
+    // Time a full from-scratch replay (what a missing or corrupt
+    // snapshot costs) and derive the per-token rate.
+    let reps = if quick { 1 } else { 3 };
+    let mut replay_ns_per_token = f64::INFINITY;
+    for _ in 0..reps {
+        let mut fresh = PsmSession::new(&rt, model, &params).unwrap();
+        let t0 = std::time::Instant::now();
+        for &t in &tokens {
+            fresh.push_token(t).unwrap();
+        }
+        let per_tok =
+            t0.elapsed().as_nanos() as f64 / horizon as f64;
+        replay_ns_per_token = replay_ns_per_token.min(per_tok);
+    }
+    // Below this many journaled tokens, replaying is cheaper than
+    // decoding a snapshot of the same state.
+    let crossover = restore.p50_ns / replay_ns_per_token;
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- Report ---------------------------------------------------------
+    let mut table =
+        Table::new(&["measure", "p50 us", "p99 us", "iters"]);
+    for r in [&save, &restore, &spill, &disk_restore] {
+        table.row(&[
+            r.name.clone(),
+            format!("{:.1}", r.p50_ns / 1e3),
+            format!("{:.1}", r.p99_ns / 1e3),
+            format!("{}", r.iters),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nsnapshot: {bytes} B/session ({sessions_per_gb:.0} \
+         sessions/GB)\nreplay: {replay_ns_per_token:.0} ns/token, \
+         restore-vs-replay crossover at {crossover:.0} tokens"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("tier".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(model.to_string())),
+        ("horizon_tokens", Json::Num(horizon as f64)),
+        (
+            "snapshot",
+            Json::obj(vec![
+                ("bytes_per_session", Json::Num(bytes as f64)),
+                ("sessions_per_gb", Json::Num(sessions_per_gb)),
+            ]),
+        ),
+        ("save_ns", pcts(&save)),
+        ("restore_ns", pcts(&restore)),
+        ("spill_ns", pcts(&spill)),
+        ("disk_restore_ns", pcts(&disk_restore)),
+        ("replay_ns_per_token", Json::Num(replay_ns_per_token)),
+        ("crossover_tokens", Json::Num(crossover)),
+    ]);
+    let path = artifact_path("BENCH_tier.json");
+    match std::fs::write(&path, format!("{report}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}

@@ -2,7 +2,11 @@
 //! (produced by `cargo bench --bench scan_hotpath`) against the
 //! checked-in `bench_baseline.json` and exit non-zero when any tracked
 //! ns/elem figure regressed by more than 25%, or when the in-place
-//! scan path allocated on the steady state.
+//! scan path allocated on the steady state. When `BENCH_tier.json`
+//! is present (produced by `cargo bench --bench tier`), the durable
+//! tier is gated the same way against `bench_tier_baseline.json`:
+//! snapshot bytes/session, save/restore/spill latencies and the
+//! journal-replay rate.
 //!
 //! The baseline records deliberately *loose* upper bounds so the gate
 //! catches order-of-magnitude regressions (a kernel falling off its
@@ -32,6 +36,26 @@ fn scalar_metrics() -> Vec<(&'static str, Vec<&'static str>)> {
     ]
 }
 
+/// Tracked durable-tier metrics: all "smaller is better" scalars, so
+/// the shared regression factor applies (a snapshot growing 25%+ or a
+/// restore path slowing 25%+ both fail).
+fn tier_metrics() -> Vec<(&'static str, Vec<&'static str>)> {
+    vec![
+        (
+            "tier.snapshot.bytes_per_session",
+            vec!["snapshot", "bytes_per_session"],
+        ),
+        ("tier.save_ns.p50", vec!["save_ns", "p50"]),
+        ("tier.restore_ns.p50", vec!["restore_ns", "p50"]),
+        ("tier.spill_ns.p50", vec!["spill_ns", "p50"]),
+        (
+            "tier.disk_restore_ns.p50",
+            vec!["disk_restore_ns", "p50"],
+        ),
+        ("tier.replay_ns_per_token", vec!["replay_ns_per_token"]),
+    ]
+}
+
 fn lookup<'a>(doc: &'a Json, path: &[&str]) -> Option<&'a Json> {
     let mut cur = doc;
     for key in path {
@@ -56,7 +80,7 @@ fn check(
     );
     if cur > limit {
         failures.push(format!(
-            "{label}: {cur:.3} ns/elem exceeds baseline {base:.3} \
+            "{label}: {cur:.3} exceeds baseline {base:.3} \
              by more than {:.0}%",
             (REGRESSION_FACTOR - 1.0) * 100.0
         ));
@@ -83,6 +107,10 @@ fn main() {
     let current = Json::parse(&current_text)
         .expect("BENCH_scan.json is not valid JSON");
 
+    let tier_path = psm::bench::artifact_path("BENCH_tier.json");
+    let tier_base_path =
+        psm::bench::artifact_path("bench_tier_baseline.json");
+
     if write_baseline {
         std::fs::write(&baseline_path, &current_text)
             .expect("write bench_baseline.json");
@@ -90,6 +118,20 @@ fn main() {
             "bench-check: baseline rewritten from {}",
             current_path.display()
         );
+        match std::fs::read_to_string(&tier_path) {
+            Ok(t) => {
+                std::fs::write(&tier_base_path, &t)
+                    .expect("write bench_tier_baseline.json");
+                println!(
+                    "bench-check: tier baseline rewritten from {}",
+                    tier_path.display()
+                );
+            }
+            Err(_) => println!(
+                "bench-check: {} missing, tier baseline left as-is",
+                tier_path.display()
+            ),
+        }
         return;
     }
 
@@ -192,6 +234,79 @@ fn main() {
                 "  warn  vs_pr5_speedup below the 2x target \
                  (quick-mode runs are noisy; re-run `make bench`)"
             );
+        }
+    }
+
+    // ---- Durable-tier gate (optional artifact) -------------------------
+    // Skipped when the tier bench has not run; `make bench` runs it, so
+    // the full pipeline always exercises this gate.
+    match std::fs::read_to_string(&tier_path) {
+        Err(_) => println!(
+            "  skip  tier: {} missing (cargo bench --bench tier)",
+            tier_path.display()
+        ),
+        Ok(tier_text) => {
+            let tier = Json::parse(&tier_text)
+                .expect("BENCH_tier.json is not valid JSON");
+            match std::fs::read_to_string(&tier_base_path) {
+                Err(e) => println!(
+                    "  skip  tier: cannot read {} ({e})",
+                    tier_base_path.display()
+                ),
+                Ok(bt) => {
+                    let tbase = Json::parse(&bt)
+                        .expect("bench_tier_baseline.json is not valid JSON");
+                    for (label, path) in tier_metrics() {
+                        match (
+                            lookup(&tbase, &path),
+                            lookup(&tier, &path),
+                        ) {
+                            (Some(b), Some(c)) => {
+                                let (b, c) = (
+                                    b.as_f64().expect(
+                                        "tier baseline metric is numeric",
+                                    ),
+                                    c.as_f64().expect(
+                                        "tier metric is numeric",
+                                    ),
+                                );
+                                check(
+                                    &mut failures,
+                                    &mut checked,
+                                    label,
+                                    b,
+                                    c,
+                                );
+                            }
+                            (None, _) => {
+                                println!(
+                                    "  skip  {label}: not in baseline"
+                                );
+                            }
+                            (_, None) => failures.push(format!(
+                                "{label}: missing from BENCH_tier.json"
+                            )),
+                        }
+                    }
+                    // Sanity, baseline-independent: a snapshot must pay
+                    // for itself past SOME finite journal length.
+                    match lookup(&tier, &["crossover_tokens"])
+                        .and_then(|j| j.as_f64().ok())
+                    {
+                        Some(x) if x > 0.0 && x.is_finite() => {
+                            println!(
+                                "  info  restore-vs-replay crossover: \
+                                 {x:.0} tokens"
+                            );
+                        }
+                        _ => failures.push(
+                            "tier.crossover_tokens missing or \
+                             non-positive"
+                                .to_string(),
+                        ),
+                    }
+                }
+            }
         }
     }
 

@@ -1,0 +1,412 @@
+//! Durable session tier: per-session append-only token journals plus
+//! periodic `psm.sess.v1` snapshots, and the restore policy over them.
+//!
+//! Activated by setting `PSM_SPILL_DIR`; see the executor integration
+//! in [`super::server`] for *when* sessions spill (LRU over
+//! `PSM_RESIDENT_CAP`, idle TTL, chaos `evict_p`, rollback after a
+//! failed generate). This module owns *what* is on disk and how a
+//! session comes back:
+//!
+//! * `sess-<id>.log` — one text line of space-separated tokens per
+//!   acknowledged generate (everything the session pushed: prompt then
+//!   emitted tokens). Appended *before* the reply is sent, so every
+//!   token a client saw an `OK` for is journaled. The journal is the
+//!   source of truth: replaying it through a fresh session reproduces
+//!   the state bit-exactly (sequential-parallel duality — state only
+//!   advances on success, so replay is deterministic).
+//! * `sess-<id>.snap` — a checksummed [`PsmSession::save_into`] frame,
+//!   rewritten (tmp + rename) every `PSM_SNAPSHOT_EVERY` tokens. A
+//!   snapshot is pure optimization: restore decodes it and replays
+//!   only the journal *suffix* past its token watermark. A corrupt or
+//!   missing snapshot falls back to full journal replay — detected
+//!   corruption is counted, never served.
+//!
+//! Durability scope: process death (`kill -9`, OOM, panic-abort).
+//! Appends reach the kernel before the client sees `OK`, but no fsync
+//! is issued, so whole-machine power loss is out of scope.
+//!
+//! A torn trailing journal line (the write itself interrupted) is
+//! truncated at the last fully-parsable line rather than failing the
+//! whole restore — those tokens were never acknowledged.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::stream::PsmSession;
+use crate::{log_info, log_warn, obs};
+
+/// Tier metric families: residency gauges plus spill/restore traffic.
+pub(crate) struct TierObs {
+    pub resident: obs::Gauge,
+    pub spilled: obs::Gauge,
+    pub spills: obs::Counter,
+    pub restores: obs::Counter,
+    pub replays: obs::Counter,
+    pub corrupt_rejected: obs::Counter,
+    pub spill_ns: obs::Summary,
+    pub restore_ns: obs::Summary,
+}
+
+pub(crate) fn tier_obs() -> &'static TierObs {
+    static OBS: OnceLock<TierObs> = OnceLock::new();
+    OBS.get_or_init(|| TierObs {
+        resident: obs::gauge(
+            "psm_tier_resident",
+            "Sessions resident in executor memory.",
+        ),
+        spilled: obs::gauge(
+            "psm_tier_spilled",
+            "Sessions evicted to the disk tier (restorable on demand).",
+        ),
+        spills: obs::counter(
+            "psm_tier_spills_total",
+            "Sessions spilled to disk (cap eviction, TTL, chaos or \
+             rollback).",
+        ),
+        restores: obs::counter(
+            "psm_tier_restores_total",
+            "Sessions restored from the disk tier.",
+        ),
+        replays: obs::counter(
+            "psm_tier_replays_total",
+            "Journal tokens replayed during restores (0 for a \
+             fresh-snapshot restore).",
+        ),
+        corrupt_rejected: obs::counter(
+            "psm_tier_corrupt_rejected_total",
+            "Snapshots rejected by checksum/validation; restore fell \
+             back to journal replay.",
+        ),
+        spill_ns: obs::summary(
+            "psm_tier_spill_ns",
+            "Wall time to snapshot + evict one session (ns).",
+        ),
+        restore_ns: obs::summary(
+            "psm_tier_restore_ns",
+            "Wall time to restore one session, including replay (ns).",
+        ),
+    })
+}
+
+/// On-disk layout + restore policy for durable sessions.
+pub struct SessionStore {
+    dir: PathBuf,
+    /// Snapshot cadence in tokens (`PSM_SNAPSHOT_EVERY`).
+    pub snapshot_every: u64,
+    /// Reused encode buffer: steady-state snapshot writes allocate
+    /// nothing on the serialization side.
+    enc_buf: Vec<u8>,
+    /// Reused journal-line formatting buffer.
+    line_buf: String,
+}
+
+impl SessionStore {
+    /// Open (creating the directory if needed) a store rooted at `dir`.
+    pub fn new(dir: &Path, snapshot_every: u64) -> Result<SessionStore> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating spill dir {dir:?}"))?;
+        Ok(SessionStore {
+            dir: dir.to_path_buf(),
+            snapshot_every: snapshot_every.max(1),
+            enc_buf: Vec::new(),
+            line_buf: String::new(),
+        })
+    }
+
+    /// Build from `PSM_SPILL_DIR` / `PSM_SNAPSHOT_EVERY`; `Ok(None)`
+    /// when durability is not configured.
+    pub fn from_env() -> Result<Option<SessionStore>> {
+        let Some(dir) = crate::util::env::raw_os("PSM_SPILL_DIR") else {
+            return Ok(None);
+        };
+        if dir.is_empty() {
+            return Ok(None);
+        }
+        let every =
+            crate::util::env::parse_or("PSM_SNAPSHOT_EVERY", 64u64);
+        Ok(Some(SessionStore::new(Path::new(&dir), every)?))
+    }
+
+    fn snap_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("sess-{id}.snap"))
+    }
+
+    fn log_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("sess-{id}.log"))
+    }
+
+    /// Append one acknowledged generate — everything the session
+    /// pushed, prompt first — as a single journal line.
+    pub fn append_journal(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        emitted: &[i32],
+    ) -> Result<()> {
+        self.line_buf.clear();
+        for &t in prompt.iter().chain(emitted) {
+            if !self.line_buf.is_empty() {
+                self.line_buf.push(' ');
+            }
+            // Infallible, no intermediate String.
+            let _ = std::fmt::Write::write_fmt(
+                &mut self.line_buf,
+                format_args!("{t}"),
+            );
+        }
+        self.line_buf.push('\n');
+        let path = self.log_path(id);
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {path:?}"))?;
+        f.write_all(self.line_buf.as_bytes())
+            .with_context(|| format!("appending journal {path:?}"))?;
+        Ok(())
+    }
+
+    /// Read the full journaled token stream for `id` (empty when no
+    /// journal exists). A torn trailing line is dropped with a warning
+    /// — its tokens were never acknowledged.
+    pub fn read_journal(&self, id: u64) -> Result<Vec<i32>> {
+        let path = self.log_path(id);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Vec::new())
+            }
+            Err(e) => {
+                return Err(anyhow::Error::new(e)
+                    .context(format!("reading journal {path:?}")))
+            }
+        };
+        let mut toks = Vec::new();
+        for line in text.lines() {
+            let before = toks.len();
+            let mut ok = true;
+            for w in line.split_whitespace() {
+                match w.parse::<i32>() {
+                    Ok(t) => toks.push(t),
+                    Err(_) => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                log_warn!(
+                    "journal {path:?}: torn/corrupt line dropped \
+                     (keeping {before} tokens)"
+                );
+                toks.truncate(before);
+                break;
+            }
+        }
+        Ok(toks)
+    }
+
+    /// Snapshot `sess` to disk (tmp + rename, so readers never see a
+    /// partial frame). When `corrupt` is set (chaos `corrupt_p` fired),
+    /// one mid-frame byte of the written file is flipped — the restore
+    /// path must detect and reject it. Returns the frame size in
+    /// bytes. A poisoned session refuses to snapshot (typed error);
+    /// the previous snapshot, if any, stays in place.
+    pub fn write_snapshot(
+        &mut self,
+        id: u64,
+        sess: &PsmSession,
+        corrupt: bool,
+    ) -> Result<usize> {
+        let mut buf = std::mem::take(&mut self.enc_buf);
+        let res = sess.save_into(&mut buf);
+        if let Err(e) = res {
+            self.enc_buf = buf;
+            return Err(e);
+        }
+        if corrupt {
+            let mid = buf.len() / 2;
+            buf[mid] ^= 0x20;
+        }
+        let bytes = buf.len();
+        let tmp = self.dir.join(format!("sess-{id}.snap.tmp"));
+        let out = (|| -> Result<()> {
+            fs::write(&tmp, &buf)
+                .with_context(|| format!("writing {tmp:?}"))?;
+            fs::rename(&tmp, self.snap_path(id))
+                .with_context(|| format!("publishing snapshot {id}"))?;
+            Ok(())
+        })();
+        self.enc_buf = buf;
+        out?;
+        Ok(bytes)
+    }
+
+    /// Raw snapshot bytes for `id`, if a snapshot file exists.
+    pub fn read_snapshot(&self, id: u64) -> Option<Vec<u8>> {
+        fs::read(self.snap_path(id)).ok()
+    }
+
+    /// Delete all durable state for `id` (client closed the session).
+    pub fn remove(&self, id: u64) {
+        let _ = fs::remove_file(self.snap_path(id));
+        let _ = fs::remove_file(self.log_path(id));
+    }
+
+    /// Session ids with any durable state on disk — the executor's
+    /// startup recovery pass registers each as spilled, to be restored
+    /// lazily on its next request.
+    pub fn recover_ids(&self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        let Ok(entries) = fs::read_dir(&self.dir) else {
+            return ids;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(rest) = name.strip_prefix("sess-") else { continue };
+            let id_str = rest
+                .strip_suffix(".log")
+                .or_else(|| rest.strip_suffix(".snap"));
+            if let Some(id) = id_str.and_then(|s| s.parse::<u64>().ok()) {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Restore `sess` (freshly created for the same model) to the
+    /// durable state of `id`: decode the snapshot when present and
+    /// valid, then replay the journal suffix past its watermark; on a
+    /// rejected snapshot, count it and replay the whole journal. The
+    /// resulting state is bit-identical to the session that was
+    /// spilled — the bit-exactness tests pin this end to end.
+    pub fn restore_session(
+        &mut self,
+        id: u64,
+        sess: &mut PsmSession,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let to = tier_obs();
+        let journal = self.read_journal(id)?;
+        let mut watermark = 0usize;
+        if let Some(bytes) = self.read_snapshot(id) {
+            match sess.restore_from(&bytes) {
+                Ok(()) => {
+                    watermark = sess.metrics.tokens as usize;
+                    if watermark > journal.len() {
+                        // Snapshot is ahead of the journal (journal
+                        // tail lost): the snapshot alone is the most
+                        // complete recoverable state.
+                        watermark = journal.len();
+                        log_warn!(
+                            "session {id}: snapshot watermark {} ahead \
+                             of journal ({} tokens)",
+                            sess.metrics.tokens,
+                            journal.len()
+                        );
+                    }
+                }
+                Err(e) => {
+                    // restore_from left the session reset; fall back
+                    // to replaying the journal from the start.
+                    to.corrupt_rejected.inc();
+                    log_warn!(
+                        "session {id}: snapshot rejected ({e:#}); \
+                         replaying {} journal tokens",
+                        journal.len()
+                    );
+                }
+            }
+        }
+        let suffix = &journal[watermark..];
+        for &t in suffix {
+            sess.push_token(t).with_context(|| {
+                format!("replaying journal for session {id}")
+            })?;
+        }
+        to.replays.add(suffix.len() as u64);
+        to.restores.inc();
+        to.restore_ns.record_ns_since(t0);
+        log_info!(
+            "session {id} restored: {} snapshot tokens + {} replayed",
+            watermark,
+            suffix.len()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write as _;
+
+    use super::*;
+
+    fn tmp_store(tag: &str) -> SessionStore {
+        let dir = std::env::temp_dir()
+            .join(format!("psm-durable-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        SessionStore::new(&dir, 8).unwrap()
+    }
+
+    #[test]
+    fn journal_roundtrip_and_append() {
+        let mut st = tmp_store("journal");
+        assert_eq!(st.read_journal(3).unwrap(), Vec::<i32>::new());
+        st.append_journal(3, &[1, 2, 3], &[4, 5]).unwrap();
+        st.append_journal(3, &[-6], &[7]).unwrap();
+        assert_eq!(st.read_journal(3).unwrap(), vec![1, 2, 3, 4, 5, -6, 7]);
+        // Other ids are independent.
+        assert_eq!(st.read_journal(4).unwrap(), Vec::<i32>::new());
+        st.remove(3);
+        assert_eq!(st.read_journal(3).unwrap(), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn torn_journal_tail_is_dropped_not_fatal() {
+        let mut st = tmp_store("torn");
+        st.append_journal(9, &[10, 11], &[12]).unwrap();
+        // Simulate a write cut mid-line.
+        let path = st.log_path(9);
+        let mut f = fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .unwrap();
+        f.write_all(b"13 1").unwrap();
+        drop(f);
+        assert_eq!(st.read_journal(9).unwrap(), vec![10, 11, 12, 13, 1]);
+        // A genuinely unparsable tail is truncated at the line start.
+        let mut f = fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .unwrap();
+        f.write_all(b"4\n15 16 garb").unwrap();
+        drop(f);
+        assert_eq!(
+            st.read_journal(9).unwrap(),
+            vec![10, 11, 12, 13, 14],
+            "torn final line dropped, earlier lines kept"
+        );
+    }
+
+    #[test]
+    fn recover_ids_finds_both_file_kinds() {
+        let mut st = tmp_store("recover");
+        st.append_journal(0, &[1], &[]).unwrap();
+        st.append_journal(5, &[1], &[]).unwrap();
+        // A stray snapshot without a journal still registers.
+        fs::write(st.snap_path(2), b"whatever").unwrap();
+        // Junk files are ignored.
+        fs::write(st.dir.join("README"), b"x").unwrap();
+        fs::write(st.dir.join("sess-bogus.log"), b"x").unwrap();
+        assert_eq!(st.recover_ids(), vec![0, 2, 5]);
+    }
+}

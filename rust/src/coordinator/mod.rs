@@ -19,6 +19,14 @@
 //! duality argument in [`stream`]'s docs) and poison themselves when
 //! state integrity is lost, rather than serving corrupt prefixes.
 //!
+//! Durability ([`durable`]) makes sessions survive process death and
+//! memory pressure: every acknowledged generate is journaled, sessions
+//! snapshot every `PSM_SNAPSHOT_EVERY` tokens, and the executor spills
+//! cold sessions to `PSM_SPILL_DIR` past `PSM_RESIDENT_CAP`, restoring
+//! them bit-exactly on their next request (snapshot + journal-suffix
+//! replay, falling back to full replay when a snapshot fails its
+//! checksum).
+//!
 //! The layer is instrumented through [`crate::obs`]: sessions count
 //! tokens/retries/backoff/poisonings, the executor exports queue-depth
 //! and session gauges plus request-latency summaries, and the server
@@ -28,7 +36,9 @@
 
 pub mod baseline;
 pub mod batcher;
+pub mod durable;
 pub mod server;
 pub mod stream;
 
+pub use durable::SessionStore;
 pub use stream::{PsmSession, RetryPolicy, SessionMetrics};

@@ -36,9 +36,27 @@
 //! `ERR overloaded: ...`. Idle sessions are garbage-collected after
 //! `PSM_SESSION_TTL_MS` (default 600000) on a `PSM_GC_TICK_MS` cadence,
 //! bounding memory under session-id churn.
+//!
+//! **Durability** (on when `PSM_SPILL_DIR` is set — see
+//! [`super::durable`]). Every acknowledged generate is journaled
+//! *before* the `OK` is sent, and sessions snapshot every
+//! `PSM_SNAPSHOT_EVERY` tokens. The executor keeps at most
+//! `PSM_RESIDENT_CAP` sessions in memory (0 = unlimited), spilling the
+//! least-recently-used to disk; a spilled session restores
+//! transparently — and bit-exactly — on its next request. On startup
+//! the executor scans the spill directory and registers every durable
+//! session, so a killed process resumes where its journals left off.
+//! With the tier on, failure handling changes shape: any failed
+//! generate (including poisoning) *rolls the session back to its
+//! journal* instead of quarantining it — the diverged in-memory state
+//! is dropped and the next request rebuilds the last acknowledged
+//! state. Chaos hooks `evict_p`/`corrupt_p` (see
+//! [`crate::runtime::FaultConfig`]) force spills and corrupt written
+//! snapshots so the restore path's checksum rejection and
+//! replay-fallback stay exercised.
 
 use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -49,10 +67,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::durable::{tier_obs, SessionStore};
 use super::stream::PsmSession;
 use crate::obs;
-use crate::runtime::{ParamStore, PsmError, Runtime};
+use crate::runtime::{FaultStats, ParamStore, PsmError, Runtime};
+use crate::util::prng::Rng;
 use crate::{log_info, log_warn};
+
+/// Decorrelates the tier's chaos draws from the fault backend's
+/// per-call draws while keeping both derived from the one chaos seed.
+const TIER_SEED: u64 = 0x71e2_5eed_0d15_c001;
 
 
 /// Executor metric families. Counters mirror [`ExecStats`] (which
@@ -153,12 +177,51 @@ pub struct ExecStats {
     pub panics: u64,
     /// Idle sessions reclaimed by the GC.
     pub gc: u64,
+    /// Sessions currently evicted to the disk tier (0 when the tier
+    /// is off).
+    pub spilled: usize,
 }
 
 /// A live session plus the bookkeeping the executor needs for GC.
 struct SessionSlot {
     sess: PsmSession,
     last_used: Instant,
+    /// Session token count at the last snapshot write (durable tier
+    /// cadence tracking; 0 when the tier is off).
+    snapped: u64,
+}
+
+/// Durable-tier state owned by the executor: the on-disk store, the
+/// set of session ids whose current state lives on disk rather than in
+/// `sessions`, and the chaos knobs that stress the spill/restore path.
+struct Tier {
+    store: SessionStore,
+    /// `PSM_RESIDENT_CAP`: max in-memory sessions (0 = unlimited).
+    cap: usize,
+    spilled: HashSet<u64>,
+    rng: Rng,
+    evict_p: f64,
+    corrupt_p: f64,
+    fault_stats: Option<Arc<FaultStats>>,
+}
+
+impl Tier {
+    /// Per-acknowledged-generate chaos draws, in a fixed order (evict
+    /// then corrupt) so a seeded soak is reproducible. Zero
+    /// probabilities consume no randomness.
+    fn chaos_draws(&mut self) -> (bool, bool) {
+        let evict = self.evict_p > 0.0 && self.rng.f64() < self.evict_p;
+        let corrupt = self.corrupt_p > 0.0 && self.rng.f64() < self.corrupt_p;
+        if let Some(fs) = &self.fault_stats {
+            if evict {
+                fs.record_evict();
+            }
+            if corrupt {
+                fs.record_corrupt();
+            }
+        }
+        (evict, corrupt)
+    }
 }
 
 /// Executor state that outlives individual sessions.
@@ -177,10 +240,12 @@ struct Executor {
     /// Retries accumulated by sessions that have since been retired
     /// (closed, GC'd or quarantined).
     retired_retries: u64,
+    /// Durable spill/restore tier; `None` = legacy in-memory-only mode.
+    tier: Option<Tier>,
 }
 
 impl Executor {
-    fn new(ttl: Duration) -> Executor {
+    fn new(ttl: Duration, tier: Option<Tier>) -> Executor {
         Executor {
             sessions: HashMap::new(),
             quarantine: HashMap::new(),
@@ -191,6 +256,7 @@ impl Executor {
             panics: 0,
             gc_reclaimed: 0,
             retired_retries: 0,
+            tier,
         }
     }
 
@@ -209,7 +275,118 @@ impl Executor {
             retries: self.retired_retries + live_retries,
             panics: self.panics,
             gc: self.gc_reclaimed,
+            spilled: self.tier.as_ref().map_or(0, |t| t.spilled.len()),
         }
+    }
+
+    /// Refresh the tier residency gauges (no-op when the tier is off;
+    /// the families are still registered at executor startup).
+    fn set_tier_gauges(&self) {
+        if let Some(tier) = &self.tier {
+            let to = tier_obs();
+            to.resident.set(self.sessions.len() as i64);
+            to.spilled.set(tier.spilled.len() as i64);
+        }
+    }
+
+    /// Evict `session` to the disk tier. With `write_snap` the current
+    /// (journal-consistent) state is snapshotted first; without it the
+    /// on-disk journal/snapshot pair already describe the last *good*
+    /// state and the in-memory copy is simply dropped (rollback after
+    /// a failed generate). `corrupt` flips a byte in the written
+    /// snapshot (chaos `corrupt_p`) — restore must detect and reject
+    /// it. No-op when the tier is off.
+    fn spill(&mut self, session: u64, write_snap: bool, corrupt: bool) {
+        if self.tier.is_none() {
+            return;
+        }
+        let t0 = Instant::now();
+        if write_snap {
+            if let (Some(tier), Some(slot)) =
+                (self.tier.as_mut(), self.sessions.get(&session))
+            {
+                if let Err(e) =
+                    tier.store.write_snapshot(session, &slot.sess, corrupt)
+                {
+                    // Journal replay covers the whole history; a
+                    // failed snapshot only costs restore latency.
+                    log_warn!(
+                        "session {session}: snapshot on spill failed \
+                         ({e:#}); journal replay will cover it"
+                    );
+                }
+            }
+        }
+        self.retire(session);
+        if let Some(tier) = self.tier.as_mut() {
+            tier.spilled.insert(session);
+        }
+        let to = tier_obs();
+        to.spills.inc();
+        to.spill_ns.record_ns_since(t0);
+    }
+
+    /// Client is done with the session: drop it *and* its durable
+    /// files.
+    fn close(&mut self, session: u64) {
+        self.retire(session);
+        if let Some(tier) = self.tier.as_mut() {
+            tier.spilled.remove(&session);
+            tier.store.remove(session);
+        }
+    }
+
+    /// Spill least-recently-used sessions until at most
+    /// `PSM_RESIDENT_CAP` stay resident. The just-used session always
+    /// has the freshest `last_used`, so with cap >= 1 it survives.
+    fn enforce_cap(&mut self) {
+        let cap = match &self.tier {
+            Some(t) if t.cap > 0 => t.cap,
+            _ => return,
+        };
+        while self.sessions.len() > cap {
+            let lru = self
+                .sessions
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(&id, _)| id);
+            let Some(id) = lru else { break };
+            self.spill(id, true, false);
+        }
+    }
+
+    /// Durability work after an acknowledged (journaled + replied)
+    /// generate: chaos draws, snapshot cadence, resident-cap LRU.
+    fn after_success(&mut self, session: u64) {
+        let Some(tier) = self.tier.as_mut() else { return };
+        let (evict, corrupt) = tier.chaos_draws();
+        let every = tier.store.snapshot_every;
+        let due = match self.sessions.get(&session) {
+            Some(slot) => {
+                slot.sess.metrics.tokens.saturating_sub(slot.snapped)
+                    >= every
+            }
+            None => return,
+        };
+        if evict {
+            // Forced eviction exercises the full snapshot+restore path
+            // (possibly with a corrupted snapshot, which restore must
+            // reject in favour of journal replay).
+            self.spill(session, true, corrupt);
+        } else if due || corrupt {
+            if let (Some(tier), Some(slot)) =
+                (self.tier.as_mut(), self.sessions.get_mut(&session))
+            {
+                match tier.store.write_snapshot(session, &slot.sess, corrupt)
+                {
+                    Ok(_) => slot.snapped = slot.sess.metrics.tokens,
+                    Err(e) => log_warn!(
+                        "session {session}: snapshot failed ({e:#})"
+                    ),
+                }
+            }
+        }
+        self.enforce_cap();
     }
 
     /// Remove a session, keeping its recovered-retry count.
@@ -219,7 +396,9 @@ impl Executor {
         }
     }
 
-    /// Reclaim idle sessions and expired quarantine entries.
+    /// Reclaim idle sessions and expired quarantine entries. With the
+    /// durable tier on, an idle session is *spilled* (snapshot kept on
+    /// disk, restorable later) rather than destroyed.
     fn gc(&mut self) {
         let now = Instant::now();
         let dead: Vec<u64> = self
@@ -229,7 +408,11 @@ impl Executor {
             .map(|(&id, _)| id)
             .collect();
         for id in dead {
-            self.retire(id);
+            if self.tier.is_some() {
+                self.spill(id, true, false);
+            } else {
+                self.retire(id);
+            }
             self.gc_reclaimed += 1;
             exec_obs().gc.inc();
         }
@@ -238,6 +421,7 @@ impl Executor {
             .retain(|_, &mut when| now.duration_since(when) < ttl);
         exec_obs().sessions.set(self.sessions.len() as i64);
         exec_obs().quarantined.set(self.quarantine.len() as i64);
+        self.set_tier_gauges();
     }
 
     /// One generate request, fully isolated: every failure mode answers
@@ -262,6 +446,7 @@ impl Executor {
         o.request_ns.record_ns_since(t0);
         o.sessions.set(self.sessions.len() as i64);
         o.quarantined.set(self.quarantine.len() as i64);
+        self.set_tier_gauges();
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -300,16 +485,41 @@ impl Executor {
         }
 
         // Lazy creation through the entry API; a creation failure is a
-        // per-request error, never executor death.
+        // per-request error, never executor death. A session the tier
+        // spilled (or recovered at startup) is rebuilt here from its
+        // snapshot + journal before the request runs.
         let (result, poisoned) = {
             let slot = match self.sessions.entry(session) {
                 Entry::Occupied(e) => e.into_mut(),
                 Entry::Vacant(v) => match PsmSession::new(rt, model, params)
                 {
-                    Ok(sess) => v.insert(SessionSlot {
-                        sess,
-                        last_used: Instant::now(),
-                    }),
+                    Ok(mut sess) => {
+                        if let Some(tier) = self.tier.as_mut() {
+                            if tier.spilled.contains(&session) {
+                                if let Err(e) = tier
+                                    .store
+                                    .restore_session(session, &mut sess)
+                                {
+                                    // Still spilled: the durable state
+                                    // stays on disk for a later retry.
+                                    self.errors += 1;
+                                    exec_obs().errors.inc();
+                                    let _ =
+                                        reply.send(Err(e.context(format!(
+                                            "restoring session {session}"
+                                        ))));
+                                    return;
+                                }
+                                tier.spilled.remove(&session);
+                            }
+                        }
+                        let snapped = sess.metrics.tokens;
+                        v.insert(SessionSlot {
+                            sess,
+                            last_used: Instant::now(),
+                            snapped,
+                        })
+                    }
                     Err(e) => {
                         self.errors += 1;
                         exec_obs().errors.inc();
@@ -336,11 +546,43 @@ impl Executor {
             (result, poisoned)
         };
 
+        let mut rollback = poisoned || !matches!(result, Ok(Ok(_)));
         match result {
             Ok(Ok(out)) => {
-                self.total_tokens += (prompt.len() + n) as u64;
-                exec_obs().tokens.add((prompt.len() + n) as u64);
-                let _ = reply.send(Ok(out));
+                // Journal BEFORE acking: an `OK` the client saw must
+                // survive a crash. If the journal write itself fails,
+                // the request is answered as an error and the session
+                // rolls back so memory never runs ahead of disk.
+                let mut journaled = true;
+                if let Some(tier) = self.tier.as_mut() {
+                    if let Err(e) =
+                        tier.store.append_journal(session, prompt, &out)
+                    {
+                        journaled = false;
+                        log_warn!(
+                            "session {session}: journal append failed: \
+                             {e:#}"
+                        );
+                    }
+                }
+                if journaled {
+                    self.total_tokens += (prompt.len() + n) as u64;
+                    exec_obs().tokens.add((prompt.len() + n) as u64);
+                    let _ = reply.send(Ok(out));
+                    if !rollback {
+                        self.after_success(session);
+                    }
+                } else {
+                    rollback = true;
+                    self.errors += 1;
+                    exec_obs().errors.inc();
+                    let _ = reply.send(Err(anyhow::Error::new(
+                        PsmError::Fatal(format!(
+                            "session {session}: journal append failed; \
+                             state rolled back"
+                        )),
+                    )));
+                }
             }
             Ok(Err(e)) => {
                 if matches!(PsmError::of(&e), Some(PsmError::Overloaded(_)))
@@ -371,10 +613,24 @@ impl Executor {
                 )));
             }
         }
-        if poisoned {
-            log_warn!("quarantining poisoned session {session}");
-            self.retire(session);
-            self.quarantine.insert(session, Instant::now());
+        if rollback {
+            if self.tier.is_some() {
+                // Restore-instead-of-drop: the in-memory state may
+                // have advanced past (or diverged from) the journal,
+                // so discard it; the next request rebuilds the last
+                // acknowledged state from disk. No new snapshot is
+                // written — the existing snapshot/journal pair is the
+                // rollback target.
+                log_warn!(
+                    "rolling session {session} back to its journal \
+                     (poisoned={poisoned})"
+                );
+                self.spill(session, false, false);
+            } else if poisoned {
+                log_warn!("quarantining poisoned session {session}");
+                self.retire(session);
+                self.quarantine.insert(session, Instant::now());
+            }
         }
     }
 }
@@ -395,7 +651,57 @@ pub fn executor_loop(
     let ttl = Duration::from_millis(
         crate::util::env::parse_or("PSM_SESSION_TTL_MS", 600_000u64).max(1),
     );
-    let mut ex = Executor::new(ttl);
+    let tier = match SessionStore::from_env() {
+        Ok(Some(store)) => {
+            let cap = crate::util::env::parse_or("PSM_RESIDENT_CAP", 0u64)
+                as usize;
+            let (evict_p, corrupt_p, fault_stats, seed) =
+                match rt.fault_backend() {
+                    Some(fb) => (
+                        fb.config().evict_p,
+                        fb.config().corrupt_p,
+                        Some(fb.stats()),
+                        fb.config().seed,
+                    ),
+                    None => (0.0, 0.0, None, 0),
+                };
+            // Startup recovery: every session with durable state on
+            // disk is registered as spilled and restored lazily on its
+            // next request. Session ids are ordinal per process, so a
+            // restarted server hands out the same ids and resumes the
+            // same conversations.
+            let recovered = store.recover_ids();
+            if !recovered.is_empty() {
+                log_info!(
+                    "durable tier: recovered {} session(s) from disk",
+                    recovered.len()
+                );
+            }
+            let mut spilled = HashSet::new();
+            spilled.extend(recovered);
+            Some(Tier {
+                store,
+                cap,
+                spilled,
+                rng: Rng::new(seed ^ TIER_SEED),
+                evict_p,
+                corrupt_p,
+                fault_stats,
+            })
+        }
+        Ok(None) => None,
+        Err(e) => {
+            return Err(e.context("initialising durable session tier"))
+        }
+    };
+    // Register the tier metric families up front so METRICS exports
+    // them (at zero) even before any spill happens — and even when the
+    // tier is off.
+    let to = tier_obs();
+    to.resident.set(0);
+    to.spilled
+        .set(tier.as_ref().map_or(0, |t| t.spilled.len()) as i64);
+    let mut ex = Executor::new(ttl, tier);
     let mut last_gc = Instant::now();
     loop {
         let req = match rx.recv_timeout(gc_tick) {
@@ -425,7 +731,7 @@ pub fn executor_loop(
             }
             Request::Close { session } => {
                 exec_obs().queue_depth.dec_floor0();
-                ex.retire(session);
+                ex.close(session);
             }
             Request::Shutdown => break,
         }
@@ -611,7 +917,7 @@ fn handle_conn(
                                 writer,
                                 "OK tokens={} sessions={} quarantined={} \
                                  errors={} shed={} retries={} panics={} \
-                                 gc={} queue={}",
+                                 gc={} resident={} spilled={} queue={}",
                                 s.tokens,
                                 s.sessions,
                                 s.quarantined,
@@ -620,6 +926,8 @@ fn handle_conn(
                                 s.retries,
                                 s.panics,
                                 s.gc,
+                                s.sessions,
+                                s.spilled,
                                 exec_obs().queue_depth.get()
                             )?,
                             Err(_) => writeln!(writer, "ERR executor gone")?,

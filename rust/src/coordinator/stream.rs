@@ -44,13 +44,28 @@
 //! subsequent call answers [`crate::runtime::PsmError::SessionPoisoned`]
 //! until [`PsmSession::reset`]. The executor quarantines poisoned
 //! sessions rather than letting them take the process down.
+//!
+//! **Durability.** The live state is exactly `(chunk_count, roots,
+//! partial buf, cached prefix)` — all plain host tensors — so
+//! [`PsmSession::save_into`] / [`PsmSession::restore_from`] round-trip
+//! it through the checksummed `psm.sess.v1` frame (see
+//! [`crate::util::codec`]): a restored session emits logits
+//! bit-identical to one that never left memory, and any corruption is
+//! a typed [`PsmError::InvalidInput`] the tiering layer answers with
+//! token-log replay (itself bit-exact, same duality argument as the
+//! retry path). [`PsmSession::reset`] recycles the root/prefix buffers
+//! into a session-local arena that `restore_from` decodes into, so the
+//! evict → restore cycle is allocation-free once warm.
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::obs;
-use crate::runtime::{HostValue, Module, ParamStore, PsmError, Runtime};
+use crate::runtime::{
+    snapshot, HostValue, Module, ParamStore, PsmError, Runtime,
+};
+use crate::util::codec;
 use crate::util::prng::Rng;
 
 /// Session-layer metric families, shared by every [`PsmSession`] in
@@ -255,6 +270,10 @@ pub struct PsmSession {
     identity: HostValue,
     /// Binary-counter roots: roots[k] = aggregate of 2^k recent chunks.
     roots: Vec<Option<HostValue>>,
+    /// Recycled `[1, chunk, d]` state slabs: [`PsmSession::reset`]
+    /// parks freed roots here and [`PsmSession::restore_from`] decodes
+    /// into them, so reset → restore cycles stop allocating once warm.
+    arena: Vec<HostValue>,
     /// Completed chunks so far.
     chunk_count: u64,
     /// Current partial chunk of raw tokens.
@@ -320,6 +339,7 @@ impl PsmSession {
             agg_inputs,
             identity,
             roots: Vec::new(),
+            arena: Vec::new(),
             chunk_count: 0,
             buf: Vec::with_capacity(chunk),
             chunk,
@@ -573,13 +593,208 @@ impl PsmSession {
 
     /// Reset the stream (parameters stay loaded; the staged prefix
     /// slot goes back to the learned identity, other slots are
-    /// overwritten before their next use).
+    /// overwritten before their next use). Freed root buffers are
+    /// recycled into the session arena — not dropped — so a later
+    /// [`PsmSession::restore_from`] (or the next stream's growth)
+    /// reuses their storage instead of reallocating.
     pub fn reset(&mut self) -> Result<()> {
-        self.roots.clear();
+        while let Some(slot) = self.roots.pop() {
+            if let Some(s) = slot {
+                self.recycle_state(s);
+            }
+        }
         self.chunk_count = 0;
         self.buf.clear();
-        self.inf_inputs[self.n_params] = self.identity.clone();
+        // Park the old prefix slab too; the slot itself must hold the
+        // learned identity again.
+        let old = std::mem::replace(
+            &mut self.inf_inputs[self.n_params],
+            self.identity.clone(),
+        );
+        self.recycle_state(old);
         self.metrics = SessionMetrics::default();
+        self.poisoned = None;
+        Ok(())
+    }
+
+    /// Park a state slab in the arena if it has the canonical
+    /// `[1, chunk, d]` f32 geometry (the `inf` slot briefly holds a
+    /// scalar placeholder at chunk boundaries — never recycle that).
+    fn recycle_state(&mut self, s: HostValue) {
+        const ARENA_CAP: usize = 64; // > max occupied roots for u64 counts
+        if self.arena.len() < ARENA_CAP
+            && s.dtype() == crate::runtime::DType::F32
+            && s.shape() == [1, self.chunk, self.d]
+        {
+            self.arena.push(s);
+        }
+    }
+
+    /// Draw a `[1, chunk, d]` state slab from the arena (or allocate
+    /// on a cold one).
+    fn take_state(&mut self) -> HostValue {
+        self.arena
+            .pop()
+            .unwrap_or_else(|| {
+                HostValue::zeros_f32(&[1, self.chunk, self.d])
+            })
+    }
+
+    /// Number of idle state slabs parked in the session arena.
+    pub fn free_state_buffers(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Serialize the full stream state as a `psm.sess.v1` frame into
+    /// `out` (cleared first; capacity is reused, so steady-state saves
+    /// of a same-shape session allocate nothing once `out` is warm).
+    ///
+    /// The frame carries a config guard (`chunk`/`d`/`vocab`), the
+    /// token watermark (how many pushed tokens the snapshot covers —
+    /// the journal-replay resume point), the chunk counter, the
+    /// partial-chunk token buffer, the cached prefix and every
+    /// occupied counter root. Parameters are *not* serialized: they
+    /// are the model's, not the session's, and restore re-attaches to
+    /// the already-loaded modules.
+    ///
+    /// A poisoned session refuses to save — its state may be
+    /// mid-carry-chain; the durable tier keeps the last good snapshot
+    /// plus the token journal instead.
+    pub fn save_into(&self, out: &mut Vec<u8>) -> Result<()> {
+        if let Some(why) = &self.poisoned {
+            return Err(anyhow::Error::new(PsmError::SessionPoisoned(
+                why.clone(),
+            )));
+        }
+        codec::begin_frame(out);
+        codec::put_u32(out, self.chunk as u32);
+        codec::put_u32(out, self.d as u32);
+        codec::put_u32(out, self.vocab as u32);
+        codec::put_u64(out, self.metrics.tokens);
+        codec::put_u64(out, self.chunk_count);
+        codec::put_u32(out, self.buf.len() as u32);
+        codec::put_i32s(out, &self.buf);
+        snapshot::encode_value(out, &self.inf_inputs[self.n_params]);
+        codec::put_u32(out, self.roots.len() as u32);
+        for slot in &self.roots {
+            match slot {
+                Some(s) => {
+                    codec::put_u8(out, 1);
+                    snapshot::encode_value(out, s);
+                }
+                None => codec::put_u8(out, 0),
+            }
+        }
+        codec::finish_frame(out);
+        Ok(())
+    }
+
+    /// Rebuild the stream state from a frame written by
+    /// [`PsmSession::save_into`] against the *same model config*
+    /// (guarded). Existing roots are recycled and every restored
+    /// tensor decodes into an arena slab, so a warm session restores
+    /// allocation-free. Corruption of any kind — checksum, truncation,
+    /// config mismatch, invariant violation — returns a typed
+    /// [`PsmError::InvalidInput`] and leaves the session **reset**
+    /// (empty stream, not poisoned): the caller falls back to token
+    /// replay.
+    ///
+    /// After a successful restore `metrics.tokens` equals the
+    /// snapshot's watermark, so the caller knows which journal suffix
+    /// still needs replaying.
+    pub fn restore_from(&mut self, bytes: &[u8]) -> Result<()> {
+        let res = self.restore_inner(bytes);
+        if res.is_err() {
+            let _ = self.reset();
+        }
+        res
+    }
+
+    fn restore_inner(&mut self, bytes: &[u8]) -> Result<()> {
+        let invalid = |what: String| -> anyhow::Error {
+            PsmError::InvalidInput(format!("session snapshot: {what}"))
+                .into()
+        };
+        let mut r = codec::Reader::open_frame(bytes)?;
+        let (chunk, d, vocab) = (
+            r.get_u32("chunk")? as usize,
+            r.get_u32("d")? as usize,
+            r.get_u32("vocab")? as usize,
+        );
+        if (chunk, d, vocab) != (self.chunk, self.d, self.vocab) {
+            return Err(invalid(format!(
+                "config mismatch: snapshot c={chunk} d={d} vocab={vocab}, \
+                 session c={} d={} vocab={}",
+                self.chunk, self.d, self.vocab
+            )));
+        }
+        let tokens = r.get_u64("token watermark")?;
+        let chunk_count = r.get_u64("chunk count")?;
+        let buf_len = r.get_u32("partial chunk length")? as usize;
+        if buf_len >= self.chunk.max(1) {
+            return Err(invalid(format!(
+                "partial chunk of {buf_len} tokens >= chunk size {}",
+                self.chunk
+            )));
+        }
+        // From here on the session mutates; restore_from resets on error.
+        while let Some(slot) = self.roots.pop() {
+            if let Some(s) = slot {
+                self.recycle_state(s);
+            }
+        }
+        r.get_i32s_into(buf_len, &mut self.buf, "partial chunk")?;
+        snapshot::decode_value_into(
+            &mut r,
+            &mut self.inf_inputs[self.n_params],
+        )?;
+        let n_slots = r.get_u32("root slot count")? as usize;
+        if n_slots > 64 {
+            return Err(invalid(format!("absurd slot count {n_slots}")));
+        }
+        let mut present = 0u32;
+        for k in 0..n_slots {
+            match r.get_u8("root presence")? {
+                0 => self.roots.push(None),
+                1 => {
+                    let mut s = self.take_state();
+                    if let Err(e) =
+                        snapshot::decode_value_into(&mut r, &mut s)
+                    {
+                        self.recycle_state(s);
+                        return Err(e);
+                    }
+                    self.roots.push(Some(s));
+                    present += 1;
+                }
+                t => {
+                    return Err(invalid(format!(
+                        "slot {k}: bad presence byte {t}"
+                    )))
+                }
+            }
+        }
+        r.expect_end()?;
+        // Prop. E.1: occupied slots are exactly the set bits of the
+        // chunk counter; token accounting must agree with the counter
+        // plus the partial chunk.
+        if present != chunk_count.count_ones() {
+            return Err(invalid(format!(
+                "{present} occupied roots contradict chunk count \
+                 {chunk_count} (popcount {})",
+                chunk_count.count_ones()
+            )));
+        }
+        if tokens != chunk_count * self.chunk as u64 + buf_len as u64 {
+            return Err(invalid(format!(
+                "token watermark {tokens} contradicts {chunk_count} \
+                 chunks of {} + {buf_len} partial",
+                self.chunk
+            )));
+        }
+        self.chunk_count = chunk_count;
+        self.metrics = SessionMetrics { tokens, ..Default::default() };
+        self.rng = Rng::new(BACKOFF_SEED);
         self.poisoned = None;
         Ok(())
     }

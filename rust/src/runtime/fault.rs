@@ -15,6 +15,18 @@
 //! * **latency spikes** (`delay_p`, `delay_ms`) — a sleep before the
 //!   call, the shape of device contention.
 //!
+//! Two further knobs target the durability tier rather than module
+//! calls — the *coordinator* draws them from its own schedule (seeded
+//! off the same config seed) and reports through the same counters:
+//!
+//! * **forced eviction** (`evict_p`) — per successful generate, spill
+//!   the session to disk even when resident capacity remains, the
+//!   shape of memory-pressure churn;
+//! * **snapshot corruption** (`corrupt_p`) — per snapshot write, flip
+//!   one byte of the written frame, the shape of at-rest bit rot (the
+//!   checksum must reject it and the restore must fall back to token
+//!   replay, never serve wrong logits).
+//!
 //! Configuration comes from the `PSM_FAULTS` env knob, honoured by
 //! [`crate::runtime::Runtime::new`]:
 //!
@@ -60,6 +72,8 @@ struct FaultObs {
     transient: obs::Counter,
     nan: obs::Counter,
     delay: obs::Counter,
+    evict: obs::Counter,
+    corrupt: obs::Counter,
 }
 
 fn fault_obs() -> &'static FaultObs {
@@ -88,6 +102,18 @@ fn fault_obs() -> &'static FaultObs {
             "kind",
             "delay",
         ),
+        evict: obs::counter_kv(
+            "psm_fault_injections_total",
+            INJ_HELP,
+            "kind",
+            "evict",
+        ),
+        corrupt: obs::counter_kv(
+            "psm_fault_injections_total",
+            INJ_HELP,
+            "kind",
+            "corrupt",
+        ),
     })
 }
 
@@ -104,6 +130,13 @@ pub struct FaultConfig {
     pub delay_p: f64,
     /// Injected latency spike size.
     pub delay_ms: u64,
+    /// Probability (per successful generate) of force-evicting the
+    /// session to the spill tier. Drawn by the coordinator, not per
+    /// module call; inert unless durability is configured.
+    pub evict_p: f64,
+    /// Probability (per snapshot write) of flipping one byte of the
+    /// written frame. Drawn by the coordinator at write time.
+    pub corrupt_p: f64,
 }
 
 impl Default for FaultConfig {
@@ -114,6 +147,8 @@ impl Default for FaultConfig {
             nan_p: 0.0,
             delay_p: 0.0,
             delay_ms: 2,
+            evict_p: 0.0,
+            corrupt_p: 0.0,
         }
     }
 }
@@ -147,9 +182,12 @@ impl FaultConfig {
                         format!("PSM_FAULTS delay_ms {val:?}")
                     })?
                 }
+                "evict_p" => cfg.evict_p = parse_p(key, val)?,
+                "corrupt_p" => cfg.corrupt_p = parse_p(key, val)?,
                 other => bail!(
                     "PSM_FAULTS: unknown key {other:?} (expected seed, \
-                     transient_p, nan_p, delay_p, delay_ms)"
+                     transient_p, nan_p, delay_p, delay_ms, evict_p, \
+                     corrupt_p)"
                 ),
             }
         }
@@ -169,7 +207,11 @@ impl FaultConfig {
 
     /// Whether any injection can ever fire under this config.
     pub fn any_faults(&self) -> bool {
-        self.transient_p > 0.0 || self.nan_p > 0.0 || self.delay_p > 0.0
+        self.transient_p > 0.0
+            || self.nan_p > 0.0
+            || self.delay_p > 0.0
+            || self.evict_p > 0.0
+            || self.corrupt_p > 0.0
     }
 }
 
@@ -191,6 +233,8 @@ pub struct FaultStats {
     transient: AtomicU64,
     nan: AtomicU64,
     delay: AtomicU64,
+    evict: AtomicU64,
+    corrupt: AtomicU64,
 }
 
 /// A point-in-time snapshot of [`FaultStats`].
@@ -200,6 +244,8 @@ pub struct FaultCounts {
     pub transient: u64,
     pub nan: u64,
     pub delay: u64,
+    pub evict: u64,
+    pub corrupt: u64,
 }
 
 impl FaultStats {
@@ -209,7 +255,23 @@ impl FaultStats {
             transient: self.transient.load(Ordering::Relaxed),
             nan: self.nan.load(Ordering::Relaxed),
             delay: self.delay.load(Ordering::Relaxed),
+            evict: self.evict.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record a coordinator-level forced eviction (fired by `evict_p`).
+    /// Counted here — not in [`FaultExec`] — because the draw happens
+    /// in the durability tier, outside any module call.
+    pub fn record_evict(&self) {
+        self.evict.fetch_add(1, Ordering::Relaxed);
+        fault_obs().evict.inc();
+    }
+
+    /// Record a coordinator-level snapshot corruption (`corrupt_p`).
+    pub fn record_corrupt(&self) {
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+        fault_obs().corrupt.inc();
     }
 }
 

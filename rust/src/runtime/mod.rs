@@ -28,6 +28,7 @@ pub mod fault;
 pub mod manifest;
 pub mod params;
 pub mod reference;
+pub mod snapshot;
 pub mod value;
 
 pub use backend::{Backend, Executable, Module, Runtime};

@@ -251,6 +251,39 @@ impl Aggregator for ChunkSumOp {
     }
 }
 
+impl crate::scan::traits::StateCodec for ChunkSumOp {
+    fn encode_state(&self, state: &Vec<f32>, out: &mut Vec<u8>) {
+        crate::util::codec::put_f32s(out, state);
+    }
+
+    /// Raw little-endian `c·d` f32 words; length is validated against
+    /// the operator geometry so a truncated blob is a typed error, and
+    /// the decode reuses `into`'s capacity (arena-recycled slab).
+    fn decode_state(
+        &self,
+        bytes: &[u8],
+        into: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let want = self.c * self.d * 4;
+        if bytes.len() != want {
+            return Err(super::error::PsmError::InvalidInput(format!(
+                "ChunkSumOp state: expected {want} bytes \
+                 (c={}, d={}), got {}",
+                self.c,
+                self.d,
+                bytes.len()
+            ))
+            .into());
+        }
+        into.clear();
+        into.reserve(self.c * self.d);
+        for w in bytes.chunks_exact(4) {
+            into.push(f32::from_le_bytes([w[0], w[1], w[2], w[3]]));
+        }
+        Ok(())
+    }
+}
+
 /// `enc`: within-chunk prefix sums of augmented embeddings (channel 0
 /// pinned to 1.0 — the count channel), written into caller-provided
 /// scratch `y` (`[c, d]` row-major). Allocation-free.

@@ -1,0 +1,179 @@
+//! [`HostValue`] byte codec for durable session snapshots.
+//!
+//! Encodes a host tensor as `[dtype u8][rank u32][dims u32...][data LE]`
+//! inside an outer `psm.sess.v1` frame (see [`crate::util::codec`]); the
+//! outer frame's CRC covers these bytes, so this layer only has to be
+//! unambiguous, not self-checking. `decode_value_into` restores *into*
+//! an existing value of the expected dtype/shape so the tiering layer
+//! can reuse arena buffers instead of allocating per restore.
+
+use anyhow::Result;
+
+use super::error::PsmError;
+use super::value::HostValue;
+use crate::util::codec::{put_u32, put_u8, Reader};
+
+const TAG_F32: u8 = 0;
+const TAG_S32: u8 = 1;
+
+fn invalid(what: &str) -> anyhow::Error {
+    PsmError::InvalidInput(format!("snapshot codec: {what}")).into()
+}
+
+/// Append the encoding of `v` to `out`.
+pub fn encode_value(out: &mut Vec<u8>, v: &HostValue) {
+    match v {
+        HostValue::F32 { shape, data } => {
+            put_u8(out, TAG_F32);
+            put_u32(out, shape.len() as u32);
+            for &d in shape {
+                put_u32(out, d as u32);
+            }
+            crate::util::codec::put_f32s(out, data);
+        }
+        HostValue::S32 { shape, data } => {
+            put_u8(out, TAG_S32);
+            put_u32(out, shape.len() as u32);
+            for &d in shape {
+                put_u32(out, d as u32);
+            }
+            crate::util::codec::put_i32s(out, data);
+        }
+    }
+}
+
+/// Decode one value, allocating fresh storage.
+pub fn decode_value(r: &mut Reader<'_>) -> Result<HostValue> {
+    let tag = r.get_u8("value dtype")?;
+    let rank = r.get_u32("value rank")? as usize;
+    if rank > 8 {
+        return Err(invalid(&format!("absurd rank {rank}")));
+    }
+    let mut shape = Vec::with_capacity(rank);
+    let mut elems = 1usize;
+    for i in 0..rank {
+        let d = r.get_u32("value dim")? as usize;
+        elems = elems
+            .checked_mul(d)
+            .ok_or_else(|| invalid(&format!("dim {i} overflows elems")))?;
+        shape.push(d);
+    }
+    match tag {
+        TAG_F32 => {
+            let mut data = Vec::new();
+            r.get_f32s_into(elems, &mut data, "f32 data")?;
+            Ok(HostValue::F32 { shape, data })
+        }
+        TAG_S32 => {
+            let mut data = Vec::new();
+            r.get_i32s_into(elems, &mut data, "s32 data")?;
+            Ok(HostValue::S32 { shape, data })
+        }
+        t => Err(invalid(&format!("unknown dtype tag {t}"))),
+    }
+}
+
+/// Decode one value *into* `into`, which must already have the expected
+/// dtype and shape (the restore path pre-stages arena buffers of the
+/// session's fixed shapes). Mismatches are typed errors.
+pub fn decode_value_into(
+    r: &mut Reader<'_>,
+    into: &mut HostValue,
+) -> Result<()> {
+    let tag = r.get_u8("value dtype")?;
+    let rank = r.get_u32("value rank")? as usize;
+    if rank != into.shape().len() {
+        return Err(invalid(&format!(
+            "rank {rank} does not match staged buffer rank {}",
+            into.shape().len()
+        )));
+    }
+    let mut elems = 1usize;
+    for i in 0..rank {
+        let d = r.get_u32("value dim")? as usize;
+        if d != into.shape()[i] {
+            return Err(invalid(&format!(
+                "dim {i} = {d} does not match staged buffer dim {}",
+                into.shape()[i]
+            )));
+        }
+        elems *= d;
+    }
+    match (tag, into) {
+        (TAG_F32, HostValue::F32 { data, .. }) => {
+            r.get_f32s_into(elems, data, "f32 data")
+        }
+        (TAG_S32, HostValue::S32 { data, .. }) => {
+            r.get_i32s_into(elems, data, "s32 data")
+        }
+        (t, v) => Err(invalid(&format!(
+            "dtype tag {t} does not match staged buffer {:?}",
+            v.dtype()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::codec::{begin_frame, finish_frame, Reader};
+
+    fn roundtrip(v: &HostValue) -> HostValue {
+        let mut buf = Vec::new();
+        begin_frame(&mut buf);
+        encode_value(&mut buf, v);
+        finish_frame(&mut buf);
+        let mut r = Reader::open_frame(&buf).unwrap();
+        let back = decode_value(&mut r).unwrap();
+        r.expect_end().unwrap();
+        back
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes_and_shapes() {
+        for v in [
+            HostValue::f32(&[2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]),
+            HostValue::f32(&[0], vec![]),
+            HostValue::f32(&[1, 7, 3], (0..21).map(|i| i as f32).collect()),
+            HostValue::s32(&[], vec![42]),
+            HostValue::s32(&[5], vec![-1, 0, 1, i32::MIN, i32::MAX]),
+        ] {
+            assert_eq!(roundtrip(&v), v);
+        }
+    }
+
+    #[test]
+    fn nan_payload_bits_survive() {
+        // Bit-exactness includes weird floats: NaN payloads, -0.0, inf.
+        let weird = f32::from_bits(0x7FC0_1234);
+        let v = HostValue::f32(&[4], vec![weird, -0.0, f32::INFINITY, 1.0]);
+        let back = roundtrip(&v);
+        let got = back.as_f32().unwrap();
+        let want = v.as_f32().unwrap();
+        for (g, w) in got.iter().zip(want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_into_rejects_shape_and_dtype_mismatch() {
+        let v = HostValue::f32(&[2, 2], vec![1.0; 4]);
+        let mut buf = Vec::new();
+        begin_frame(&mut buf);
+        encode_value(&mut buf, &v);
+        finish_frame(&mut buf);
+
+        let mut wrong_shape = HostValue::zeros_f32(&[2, 3]);
+        let mut r = Reader::open_frame(&buf).unwrap();
+        assert!(decode_value_into(&mut r, &mut wrong_shape).is_err());
+
+        let mut wrong_dtype = HostValue::s32(&[2, 2], vec![0; 4]);
+        let mut r = Reader::open_frame(&buf).unwrap();
+        assert!(decode_value_into(&mut r, &mut wrong_dtype).is_err());
+
+        let mut right = HostValue::zeros_f32(&[2, 2]);
+        let mut r = Reader::open_frame(&buf).unwrap();
+        decode_value_into(&mut r, &mut right).unwrap();
+        assert_eq!(right, v);
+    }
+}

@@ -39,11 +39,28 @@
 //! next batch row in [`crate::runtime::reference`]) starts warm.
 //! `rust/tests/alloc_free.rs` pins the zero-allocation steady state
 //! with a counting global allocator.
+//!
+//! **Relocatable state.** The whole scan is `(count, roots)` — no
+//! hidden caches, no pointers into the arena — so serializing those
+//! two and replaying the constructor elsewhere reproduces the stream
+//! *bit-exactly*: [`OnlineScan::save_into`] /
+//! [`OnlineScan::restore_from`] round-trip them through a versioned,
+//! checksummed `psm.sess.v1` frame (see [`crate::util::codec`]) using
+//! the operator's [`super::traits::StateCodec`]. Restore draws every
+//! root buffer from the recycle arena ([`OnlineScan::take_buffer`]),
+//! so a warm scan restores with **zero heap allocation** — the same
+//! discipline as `push`. Because the duality theorem makes token
+//! replay bit-exact too, a corrupt snapshot (checksum or invariant
+//! failure → typed [`crate::runtime::PsmError::InvalidInput`], scan
+//! left empty) can always fall back to replaying the token log; the
+//! durability tier in [`crate::coordinator`] is built on exactly this
+//! contract.
 
 use std::sync::OnceLock;
 
-use super::traits::Aggregator;
+use super::traits::{Aggregator, StateCodec};
 use crate::obs;
+use crate::util::codec;
 
 /// Global scan-core metric families. Registered once; every scan
 /// instance flushes its locally-batched counts here (see [`ScanLocal`]).
@@ -311,6 +328,102 @@ impl<'a, A: Aggregator> OnlineScan<'a, A> {
     }
 }
 
+impl<A: Aggregator + StateCodec> OnlineScan<'_, A> {
+    /// Serialize the scan as a complete `psm.sess.v1` frame into `out`
+    /// (cleared first, capacity reused): element count, root-slot
+    /// layout, and each occupied root via the operator's
+    /// [`StateCodec`], CRC-sealed. Steady-state saves of a same-shape
+    /// scan reuse `out`'s capacity and perform no allocation.
+    pub fn save_into(&self, out: &mut Vec<u8>) {
+        codec::begin_frame(out);
+        codec::put_u64(out, self.count);
+        codec::put_u32(out, self.roots.len() as u32);
+        for slot in &self.roots {
+            match slot {
+                Some(s) => {
+                    codec::put_u8(out, 1);
+                    // Length-prefix backpatched after the encoder runs,
+                    // so states stream straight into `out` with no
+                    // per-root temporary.
+                    let len_at = out.len();
+                    codec::put_u32(out, 0);
+                    self.op.encode_state(s, out);
+                    let n = (out.len() - len_at - 4) as u32;
+                    out[len_at..len_at + 4]
+                        .copy_from_slice(&n.to_le_bytes());
+                }
+                None => codec::put_u8(out, 0),
+            }
+        }
+        codec::finish_frame(out);
+    }
+
+    /// Rebuild the scan from a frame written by
+    /// [`OnlineScan::save_into`]. Existing roots are recycled into the
+    /// arena first and every restored root is drawn back out of it, so
+    /// a warm scan restores allocation-free. Any corruption — bad
+    /// magic, checksum mismatch, truncation, a root count violating
+    /// the popcount invariant — returns a typed
+    /// [`crate::runtime::PsmError::InvalidInput`] and leaves the scan
+    /// *empty* (never partially restored).
+    pub fn restore_from(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = codec::Reader::open_frame(bytes)?;
+        self.clear();
+        let res = self.restore_payload(&mut r);
+        if res.is_err() {
+            self.clear();
+        }
+        res
+    }
+
+    fn restore_payload(
+        &mut self,
+        r: &mut codec::Reader<'_>,
+    ) -> anyhow::Result<()> {
+        use crate::runtime::PsmError;
+        let invalid = |what: String| -> anyhow::Error {
+            PsmError::InvalidInput(format!("scan snapshot: {what}")).into()
+        };
+        let count = r.get_u64("scan count")?;
+        let n_slots = r.get_u32("root slot count")? as usize;
+        if n_slots > 64 {
+            return Err(invalid(format!("absurd slot count {n_slots}")));
+        }
+        let mut present = 0u32;
+        for k in 0..n_slots {
+            match r.get_u8("root presence")? {
+                0 => self.roots.push(None),
+                1 => {
+                    let enc = r.get_bytes("root state")?;
+                    let mut s = self.take_buffer();
+                    if let Err(e) = self.op.decode_state(enc, &mut s) {
+                        self.arena.push(s);
+                        return Err(e);
+                    }
+                    self.roots.push(Some(s));
+                    present += 1;
+                }
+                t => {
+                    return Err(invalid(format!(
+                        "slot {k}: bad presence byte {t}"
+                    )))
+                }
+            }
+        }
+        r.expect_end()?;
+        // Prop. E.1: occupied slots are exactly the set bits of count.
+        if present != count.count_ones() {
+            return Err(invalid(format!(
+                "{present} occupied roots contradict count {count} \
+                 (popcount {})",
+                count.count_ones()
+            )));
+        }
+        self.count = count;
+        Ok(())
+    }
+}
+
 impl<A: Aggregator> Drop for OnlineScan<'_, A> {
     fn drop(&mut self) {
         self.local.flush();
@@ -446,6 +559,84 @@ mod tests {
         online.clear();
         assert!(online.is_empty());
         assert_eq!(online.prefix(), 0);
+    }
+
+    /// Save/restore round-trips the full stream state: a restored scan
+    /// continues bit-identically to the original (non-commutative op
+    /// so ordering bugs can't hide).
+    #[test]
+    fn save_restore_roundtrip_continues_identically() {
+        let op = ConcatOp;
+        for n in [1usize, 2, 3, 7, 8, 63, 100] {
+            let mut orig = OnlineScan::new(&op);
+            for i in 0..n {
+                orig.push(format!("{i},"));
+            }
+            let mut buf = Vec::new();
+            orig.save_into(&mut buf);
+
+            let mut restored = OnlineScan::new(&op);
+            restored.restore_from(&buf).unwrap();
+            assert_eq!(restored.len(), n as u64, "n={n}");
+            assert_eq!(restored.prefix(), orig.prefix(), "n={n}");
+            // Continue both streams: they must stay identical.
+            for i in n..n + 9 {
+                orig.push(format!("{i},"));
+                restored.push(format!("{i},"));
+                assert_eq!(restored.prefix(), orig.prefix(), "n={n} i={i}");
+            }
+        }
+    }
+
+    /// Restore recycles existing roots and rebuilds from the arena; a
+    /// corrupt frame is a typed error and leaves the scan empty.
+    #[test]
+    fn restore_is_atomic_on_corruption() {
+        let op = AddOp;
+        let mut scan = OnlineScan::new(&op);
+        for t in 0..13i64 {
+            scan.push(t);
+        }
+        let mut buf = Vec::new();
+        scan.save_into(&mut buf);
+
+        // Flip one payload byte: checksum must reject it.
+        let mut bad = buf.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let e = scan.restore_from(&bad).unwrap_err();
+        assert_eq!(
+            crate::runtime::PsmError::code_of(&e),
+            "invalid_input"
+        );
+        assert!(scan.is_empty(), "failed restore must leave scan empty");
+
+        // The intact frame still restores onto the same (now warm) scan.
+        scan.restore_from(&buf).unwrap();
+        assert_eq!(scan.len(), 13);
+        assert_eq!(scan.prefix(), (0..13i64).sum::<i64>());
+    }
+
+    /// Every truncation of a valid frame fails typed, never panics.
+    #[test]
+    fn truncated_snapshots_fail_typed() {
+        let op = AddOp;
+        let mut scan = OnlineScan::new(&op);
+        for t in 0..5i64 {
+            scan.push(t);
+        }
+        let mut buf = Vec::new();
+        scan.save_into(&mut buf);
+        for n in 0..buf.len() {
+            let mut victim = OnlineScan::new(&op);
+            let e = victim.restore_from(&buf[..n]).unwrap_err();
+            assert_eq!(
+                crate::runtime::PsmError::code_of(&e),
+                "invalid_input",
+                "prefix of {n} bytes"
+            );
+            assert!(victim.is_empty());
+        }
     }
 
     /// Locally-batched scan metrics reach the global registry at scan

@@ -88,6 +88,32 @@ pub trait Aggregator {
     }
 }
 
+/// Byte codec for an operator's state space — what makes an
+/// [`super::counter::OnlineScan`] *relocatable* (see the durability
+/// layer in [`crate::coordinator`]).
+///
+/// Implemented on the **operator**, not the state, because the operator
+/// knows the state's fixed geometry (e.g. `ChunkSumOp`'s `c x d`
+/// matrix) and can therefore decode *into* a recycled buffer without
+/// allocating. The contract mirrors `agg_into`: `decode_state` after
+/// `encode_state` MUST reproduce the state bit-exactly (NaN payloads
+/// included), and `decode_state` must return a typed error — never
+/// panic — on truncated or corrupt input. The outer snapshot frame
+/// (see [`crate::util::codec`]) carries the checksum; this layer only
+/// has to be unambiguous.
+pub trait StateCodec: Aggregator {
+    /// Append the encoding of `state` to `out`.
+    fn encode_state(&self, state: &Self::State, out: &mut Vec<u8>);
+
+    /// Decode the bytes produced by `encode_state` into an existing
+    /// state buffer (arena-recycled by the caller).
+    fn decode_state(
+        &self,
+        bytes: &[u8],
+        into: &mut Self::State,
+    ) -> anyhow::Result<()>;
+}
+
 /// Wrapper that counts `agg` invocations — used by the complexity bench
 /// to verify the paper's amortised-work claim (≈1 carry merge per
 /// element as counted here; the paper's "~2 Agg calls" additionally
@@ -150,10 +176,32 @@ impl<A: Aggregator> Aggregator for CountingAgg<A> {
 
 /// Simple associative test operators used across the test suite.
 pub mod ops {
-    use super::Aggregator;
+    use super::{Aggregator, StateCodec};
+    use crate::runtime::error::PsmError;
 
     /// Integer addition (associative, commutative).
     pub struct AddOp;
+
+    impl StateCodec for AddOp {
+        fn encode_state(&self, state: &i64, out: &mut Vec<u8>) {
+            out.extend_from_slice(&state.to_le_bytes());
+        }
+
+        fn decode_state(
+            &self,
+            bytes: &[u8],
+            into: &mut i64,
+        ) -> anyhow::Result<()> {
+            let arr: [u8; 8] = bytes.try_into().map_err(|_| {
+                PsmError::InvalidInput(format!(
+                    "AddOp state: expected 8 bytes, got {}",
+                    bytes.len()
+                ))
+            })?;
+            *into = i64::from_le_bytes(arr);
+            Ok(())
+        }
+    }
 
     impl Aggregator for AddOp {
         type State = i64;
@@ -178,6 +226,27 @@ pub mod ops {
     /// String concatenation (associative, non-commutative) — catches
     /// argument-order bugs that addition would mask.
     pub struct ConcatOp;
+
+    impl StateCodec for ConcatOp {
+        fn encode_state(&self, state: &String, out: &mut Vec<u8>) {
+            out.extend_from_slice(state.as_bytes());
+        }
+
+        fn decode_state(
+            &self,
+            bytes: &[u8],
+            into: &mut String,
+        ) -> anyhow::Result<()> {
+            let s = std::str::from_utf8(bytes).map_err(|e| {
+                PsmError::InvalidInput(format!(
+                    "ConcatOp state: invalid utf-8: {e}"
+                ))
+            })?;
+            into.clear();
+            into.push_str(s);
+            Ok(())
+        }
+    }
 
     impl Aggregator for ConcatOp {
         type State = String;

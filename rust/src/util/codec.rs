@@ -1,0 +1,324 @@
+//! Versioned, checksummed byte framing for durable session state
+//! (`psm.sess.v1`).
+//!
+//! The frame layout is deliberately dumb — little-endian primitives, no
+//! self-describing schema — because the *decoder always knows exactly
+//! what it expects* (the executor restores a session it itself spilled,
+//! or one written by a previous incarnation of the same binary). What
+//! the frame buys us is corruption detection, not flexibility:
+//!
+//! ```text
+//! [ magic "psm.sess.v1" (11 bytes) | payload ... | crc32 (4 bytes LE) ]
+//! ```
+//!
+//! The trailing CRC-32 (IEEE, reflected) covers magic + payload, so a
+//! truncated file, a bit flip anywhere, or a frame from a future format
+//! version all fail *loudly* with a typed
+//! [`PsmError::InvalidInput`](crate::runtime::PsmError) — never a panic
+//! and never silently-wrong decoded state. That guarantee is what lets
+//! the tiering layer treat "snapshot corrupt" as a routine, testable
+//! event: it falls back to token-log replay (bit-exact by the
+//! sequential-parallel duality) instead of serving garbage.
+//!
+//! Writers append to a caller-owned `Vec<u8>` so steady-state encoding
+//! reuses one buffer; the [`Reader`] borrows and never allocates.
+
+use crate::runtime::error::PsmError;
+use anyhow::Result;
+
+/// Frame magic: format name + version, human-greppable in hexdumps.
+pub const MAGIC: &[u8; 11] = b"psm.sess.v1";
+
+// ---- CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) ------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// IEEE CRC-32 of `bytes` (the same polynomial as zlib / PNG), used as
+/// the frame trailer.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---- little-endian writer primitives ----------------------------------------
+
+/// Append a single byte.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a `u32` little-endian.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64` little-endian.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed (`u32`) byte string.
+pub fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+/// Append a slice of `f32`s as raw little-endian words (no length
+/// prefix — the decoder knows the element count from its own header).
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append a slice of `i32`s as raw little-endian words.
+pub fn put_i32s(out: &mut Vec<u8>, xs: &[i32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Begin a frame: write the magic into a cleared buffer. Pair with
+/// [`finish_frame`].
+pub fn begin_frame(out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(MAGIC);
+}
+
+/// Finish a frame begun with [`begin_frame`]: append the CRC-32 of
+/// everything written so far (magic + payload).
+pub fn finish_frame(out: &mut Vec<u8>) {
+    let c = crc32(out);
+    put_u32(out, c);
+}
+
+// ---- typed-error reader -----------------------------------------------------
+
+fn invalid(what: &str) -> anyhow::Error {
+    PsmError::InvalidInput(format!("snapshot codec: {what}")).into()
+}
+
+/// Borrowing cursor over an encoded frame. Every getter returns a typed
+/// [`PsmError::InvalidInput`] on underrun; nothing here can panic on
+/// hostile input.
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Open a frame: verify magic and trailing CRC, return a cursor over
+    /// the payload only.
+    pub fn open_frame(bytes: &'a [u8]) -> Result<Reader<'a>> {
+        if bytes.len() < MAGIC.len() + 4 {
+            return Err(invalid(&format!(
+                "frame too short ({} bytes)",
+                bytes.len()
+            )));
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 4);
+        if &body[..MAGIC.len()] != MAGIC {
+            return Err(invalid("bad magic (not a psm.sess.v1 frame)"));
+        }
+        let want = u32::from_le_bytes([
+            trailer[0], trailer[1], trailer[2], trailer[3],
+        ]);
+        let got = crc32(body);
+        if want != got {
+            return Err(invalid(&format!(
+                "checksum mismatch (stored {want:#010x}, computed {got:#010x})"
+            )));
+        }
+        Ok(Reader { bytes: &body[MAGIC.len()..], pos: 0 })
+    }
+
+    /// Cursor over raw bytes without frame verification (for nested
+    /// payload sections already covered by the outer CRC).
+    pub fn new(bytes: &'a [u8]) -> Reader<'a> {
+        Reader { bytes, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(invalid(&format!(
+                "truncated reading {what} (need {n} bytes, have {})",
+                self.remaining()
+            )));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn get_u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn get_u32(&mut self, what: &str) -> Result<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn get_u64(&mut self, what: &str) -> Result<u64> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    /// Read a length-prefixed byte string written by [`put_bytes`]. The
+    /// length is sanity-checked against the remaining buffer before any
+    /// allocation, so a corrupt length cannot OOM.
+    pub fn get_bytes(&mut self, what: &str) -> Result<&'a [u8]> {
+        let n = self.get_u32(what)? as usize;
+        self.take(n, what)
+    }
+
+    /// Decode `n` raw little-endian `f32`s into `out` (cleared first;
+    /// capacity is reused across calls).
+    pub fn get_f32s_into(
+        &mut self,
+        n: usize,
+        out: &mut Vec<f32>,
+        what: &str,
+    ) -> Result<()> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| {
+            invalid(&format!("{what}: element count overflow"))
+        })?, what)?;
+        out.clear();
+        out.reserve(n);
+        for w in s.chunks_exact(4) {
+            out.push(f32::from_le_bytes([w[0], w[1], w[2], w[3]]));
+        }
+        Ok(())
+    }
+
+    /// Decode `n` raw little-endian `i32`s into `out` (cleared first).
+    pub fn get_i32s_into(
+        &mut self,
+        n: usize,
+        out: &mut Vec<i32>,
+        what: &str,
+    ) -> Result<()> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| {
+            invalid(&format!("{what}: element count overflow"))
+        })?, what)?;
+        out.clear();
+        out.reserve(n);
+        for w in s.chunks_exact(4) {
+            out.push(i32::from_le_bytes([w[0], w[1], w[2], w[3]]));
+        }
+        Ok(())
+    }
+
+    /// Assert the payload is fully consumed (catches frames with
+    /// trailing junk that still pass the CRC of a *different* writer).
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(invalid(&format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        begin_frame(&mut buf);
+        put_u64(&mut buf, 0xDEAD_BEEF_0123_4567);
+        put_bytes(&mut buf, b"hello");
+        put_f32s(&mut buf, &[1.5, -0.25]);
+        finish_frame(&mut buf);
+
+        let mut r = Reader::open_frame(&buf).unwrap();
+        assert_eq!(r.get_u64("a").unwrap(), 0xDEAD_BEEF_0123_4567);
+        assert_eq!(r.get_bytes("b").unwrap(), b"hello");
+        let mut fs = Vec::new();
+        r.get_f32s_into(2, &mut fs, "c").unwrap();
+        assert_eq!(fs, vec![1.5, -0.25]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let mut buf = Vec::new();
+        begin_frame(&mut buf);
+        put_u32(&mut buf, 42);
+        finish_frame(&mut buf);
+        for i in 0..buf.len() * 8 {
+            let mut bad = buf.clone();
+            bad[i / 8] ^= 1 << (i % 8);
+            let e = Reader::open_frame(&bad).unwrap_err();
+            assert_eq!(PsmError::code_of(&e), "invalid_input", "bit {i}");
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed_not_panic() {
+        let mut buf = Vec::new();
+        begin_frame(&mut buf);
+        put_u64(&mut buf, 7);
+        finish_frame(&mut buf);
+        for n in 0..buf.len() {
+            let e = Reader::open_frame(&buf[..n])
+                .and_then(|mut r| r.get_u64("x"))
+                .map(|_| ())
+                .and(Err(invalid("should have failed")));
+            assert!(e.is_err(), "prefix of {n} bytes decoded");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefix_cannot_overread() {
+        let mut buf = Vec::new();
+        begin_frame(&mut buf);
+        put_u32(&mut buf, u32::MAX); // absurd length prefix
+        finish_frame(&mut buf);
+        let mut r = Reader::open_frame(&buf).unwrap();
+        let e = r.get_bytes("blob").unwrap_err();
+        assert_eq!(PsmError::code_of(&e), "invalid_input");
+    }
+}

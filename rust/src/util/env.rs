@@ -67,7 +67,7 @@ pub const REGISTRY: &[EnvVar] = &[
     EnvVar {
         name: "PSM_FAULTS",
         default: "unset",
-        doc: "Chaos injection spec, e.g. seed:7,transient_p:0.05,nan_p:0.01,delay_p:0.1,delay_ms:5",
+        doc: "Chaos injection spec, e.g. seed:7,transient_p:0.05,nan_p:0.01,delay_p:0.1,delay_ms:5,evict_p:0.05,corrupt_p:0.01",
     },
     EnvVar {
         name: "PSM_GC_TICK_MS",
@@ -110,6 +110,11 @@ pub const REGISTRY: &[EnvVar] = &[
         doc: "Bounded executor queue depth before shedding as overloaded",
     },
     EnvVar {
+        name: "PSM_RESIDENT_CAP",
+        default: "0",
+        doc: "Max sessions resident in executor memory before LRU spill to PSM_SPILL_DIR (0 = unlimited)",
+    },
+    EnvVar {
         name: "PSM_RETRY_BASE_MS",
         default: "2",
         doc: "Session retry: initial backoff",
@@ -140,9 +145,19 @@ pub const REGISTRY: &[EnvVar] = &[
         doc: "AVX2/FMA kernel tier master switch (default-on; 0/false/off forces tiled portable)",
     },
     EnvVar {
+        name: "PSM_SNAPSHOT_EVERY",
+        default: "64",
+        doc: "Durable tier: snapshot a session every N journaled tokens",
+    },
+    EnvVar {
         name: "PSM_SOAK",
         default: "full",
         doc: "Chaos-soak test size: full | short (short is used by the sanitizer CI tiers)",
+    },
+    EnvVar {
+        name: "PSM_SPILL_DIR",
+        default: "unset",
+        doc: "Durable tier root: per-session token journals + snapshots (unset = durability off)",
     },
     EnvVar {
         name: "PSM_VALIDATE",

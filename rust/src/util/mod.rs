@@ -5,6 +5,7 @@
 //! property-testing driver.
 
 pub mod cli;
+pub mod codec;
 pub mod env;
 pub mod json;
 pub mod kernels;

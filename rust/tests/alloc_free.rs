@@ -18,9 +18,20 @@
 //!   after warm-up: the job descriptor lives on the submitter's stack
 //!   and the parked workers are reused, so fanning work out is as
 //!   alloc-disciplined as the scan it accelerates.
+//! * The durable-session codec spills and restores **allocation-free**
+//!   at steady state: `save_into` reuses the frame buffer's capacity
+//!   and `restore_from` draws every root state back out of the recycle
+//!   arena — the executor's spill/restore tier costs no heap traffic
+//!   beyond the file I/O itself.
+//! * `PsmSession::reset()` retains the arena, and repeated
+//!   reset-then-generate cycles are **cycle-stable**: each cycle
+//!   allocates exactly as much as the previous one (no leak, no
+//!   re-warming), and regenerates bit-identical tokens.
 
 use psm::bench::{alloc_count as allocs, CountingAlloc};
+use psm::coordinator::PsmSession;
 use psm::runtime::reference::ChunkSumOp;
+use psm::runtime::{ParamStore, Runtime};
 use psm::scan::traits::ops::ConcatOp;
 use psm::scan::traits::Aggregator;
 use psm::scan::{blelloch_scan, OnlineScan};
@@ -53,6 +64,10 @@ fn main() {
         scan_metric_flush_is_allocation_free);
     run("persistent_pool_dispatch_is_allocation_free",
         persistent_pool_dispatch_is_allocation_free);
+    run("scan_save_restore_is_allocation_free",
+        scan_save_restore_is_allocation_free);
+    run("session_reset_then_generate_is_cycle_stable",
+        session_reset_then_generate_is_cycle_stable);
 
     if failed > 0 {
         eprintln!("{failed} alloc_free tests failed");
@@ -242,6 +257,82 @@ fn persistent_pool_dispatch_is_allocation_free() {
     );
     // The dispatches did real work.
     assert_eq!(buf[1], (7 + 99) as f32);
+}
+
+/// The durable-session scan codec at steady state: once the frame
+/// buffer and the recycle arena are warm, a save + restore round trip
+/// performs ZERO heap allocations — `save_into` streams into the
+/// reused `Vec<u8>` and `restore_from` recycles the old roots into the
+/// arena before drawing the restored ones back out of it.
+fn scan_save_restore_is_allocation_free() {
+    let (c, d) = (32usize, 48usize);
+    let op = ChunkSumOp { c, d };
+    let n = 100u64; // popcount(100) = 3 occupied roots
+    let mut scan = OnlineScan::new(&op);
+    for t in 0..n {
+        let mut y = scan.take_buffer();
+        y.resize(c * d, 0.0);
+        fill(&mut y, t);
+        scan.push(y);
+    }
+    let mut frame: Vec<u8> = Vec::new();
+    let mut pbuf: Vec<f32> = Vec::new();
+    // Warmup: one full cycle brings the frame buffer, the arena and
+    // the prefix scratch to their high-water marks.
+    scan.save_into(&mut frame);
+    scan.restore_from(&frame).unwrap();
+    scan.prefix_into(&mut pbuf);
+    let expect: Vec<f32> = pbuf.clone();
+
+    let a0 = allocs();
+    for _ in 0..10 {
+        scan.save_into(&mut frame);
+        scan.restore_from(&frame).unwrap();
+    }
+    scan.prefix_into(&mut pbuf);
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta, 0,
+        "steady-state save/restore performed {delta} heap allocations \
+         over 10 round trips"
+    );
+    // The round trips preserved the state bit-exactly.
+    assert_eq!(
+        expect.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        pbuf.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "save/restore round trip changed the prefix"
+    );
+}
+
+/// `PsmSession::reset()` keeps the arena (and the chunk buffer's
+/// capacity), so repeated reset-then-generate cycles settle into a
+/// constant per-cycle allocation count — and regenerate the exact
+/// same tokens as a fresh session would.
+fn session_reset_then_generate_is_cycle_stable() {
+    let model = "psm_lm_c16";
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 11).unwrap();
+    let mut sess = PsmSession::new(&rt, model, &params).unwrap();
+    let expect = sess.generate(&[1, 2, 3], 8).unwrap();
+
+    let mut counts = [0u64; 3];
+    for slot in counts.iter_mut() {
+        sess.reset().unwrap();
+        assert!(
+            sess.free_state_buffers() > 0,
+            "reset must retain the recycle arena"
+        );
+        let a0 = allocs();
+        let out = sess.generate(&[1, 2, 3], 8).unwrap();
+        *slot = allocs() - a0;
+        assert_eq!(expect, out, "reset-then-generate must be bit-exact");
+    }
+    // Cycle 0 may still warm lazily-registered paths; past that, every
+    // cycle must allocate exactly the same amount.
+    assert_eq!(
+        counts[1], counts[2],
+        "reset/generate cycles drifted: {counts:?}"
+    );
 }
 
 /// The `ConcatOp` in-place merge (`agg_into` with `String` reuse) is

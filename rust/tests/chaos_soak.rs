@@ -392,6 +392,7 @@ fn tcp_chaos_soak() {
         nan_p: 0.05,
         delay_p: 0.05,
         delay_ms: 1,
+        ..Default::default()
     };
     let frt = Runtime::reference().with_faults(cfg);
     let stop = Arc::new(AtomicBool::new(false));

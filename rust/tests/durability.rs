@@ -1,0 +1,765 @@
+//! Durability end-to-end: serializable scan state, spill/restore
+//! tiering and crash recovery (harness = false; exits non-zero on
+//! failure).
+//!
+//! * codec fuzz: `OnlineScan::save_into`/`restore_from` round-trips
+//!   across operators (i64 / String / chunk-tensor states), odd
+//!   geometries and every counter depth n = 1..=256; truncated and
+//!   bit-flipped frames fail with typed `invalid_input` — never a
+//!   panic, never silently-wrong state,
+//! * session snapshots: a restored [`PsmSession`] continues
+//!   bit-identically to the session it was saved from, including
+//!   mid-chunk saves, and `reset()` recycles state slabs through the
+//!   arena,
+//! * tiering: with `PSM_RESIDENT_CAP=1` the executor spills the LRU
+//!   session to `PSM_SPILL_DIR` and restores it transparently — the
+//!   spilled-and-restored session's replies are bit-identical to an
+//!   always-resident sibling's; a corrupted snapshot is rejected by
+//!   checksum and recovery falls back to journal replay,
+//! * rollback: a session whose generate fails (scripted kernel panic)
+//!   is rolled back to its journal instead of quarantined — the next
+//!   request on the same id succeeds bit-exactly,
+//! * crash recovery: a `kill -9`'d server process, restarted over the
+//!   same spill dir, resumes the conversation bit-exactly,
+//! * eviction-chaos soak: `evict_p`/`corrupt_p` churn spill, restore,
+//!   checksum rejection and replay under transient faults while every
+//!   `OK` reply stays bit-identical to the fault-free expectation.
+//!
+//! Env knobs are set while no executor threads are live and removed
+//! after shutdown. Uses ports 7462/7463 (kill-restart children) and
+//! 7464 (chaos soak); chaos_soak owns 7457/7458, obs_e2e 7461.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::Result;
+use psm::coordinator::server::{self, executor_loop, Request};
+use psm::coordinator::PsmSession;
+use psm::obs;
+use psm::runtime::reference::ChunkSumOp;
+use psm::runtime::{
+    ArtifactSpec, Backend, Executable, FaultConfig, HostValue, Manifest,
+    Module, ParamStore, PsmError, RefBackend, Runtime,
+};
+use psm::scan::traits::ops::{AddOp, ConcatOp};
+use psm::scan::OnlineScan;
+
+fn main() {
+    // Child mode: `durability --serve-child <addr>` runs the TCP
+    // server until killed (the kill-restart check execs ourselves).
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() >= 3 && args[1] == "--serve-child" {
+        serve_child(&args[2]);
+    }
+
+    let mut failed = 0;
+    let mut run = |name: &str, f: &dyn Fn()| {
+        let t0 = std::time::Instant::now();
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+            .is_ok();
+        println!(
+            "test durability::{name} ... {} ({:.1}s)",
+            if ok { "ok" } else { "FAILED" },
+            t0.elapsed().as_secs_f64()
+        );
+        if !ok {
+            failed += 1;
+        }
+    };
+
+    run("scan_codec_roundtrips_all_depths", &|| {
+        scan_codec_roundtrips_all_depths()
+    });
+    run("scan_codec_rejects_corruption_typed", &|| {
+        scan_codec_rejects_corruption_typed()
+    });
+    run("session_snapshot_is_bit_exact", &session_snapshot_is_bit_exact);
+    run("session_snapshot_rejects_corruption", &|| {
+        session_snapshot_rejects_corruption()
+    });
+    run("reset_then_generate_recycles_arena", &|| {
+        reset_then_generate_recycles_arena()
+    });
+    run("executor_spills_and_restores_bit_exact", &|| {
+        executor_spills_and_restores_bit_exact()
+    });
+    run("failed_generate_rolls_back_to_journal", &|| {
+        failed_generate_rolls_back_to_journal()
+    });
+    run("kill_dash_nine_recovery_is_bit_exact", &|| {
+        kill_dash_nine_recovery_is_bit_exact()
+    });
+    run("eviction_chaos_soak_stays_bit_exact", &|| {
+        eviction_chaos_soak_stays_bit_exact()
+    });
+
+    if failed > 0 {
+        eprintln!("{failed} durability tests failed");
+        std::process::exit(1);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 1: the codec, scan-level.
+// ---------------------------------------------------------------------
+
+/// Round-trip every counter depth n = 1..=256 for the i64 operator and
+/// a spread of depths for tensor-chunk (odd geometry) and String
+/// operators: the restored scan must agree on count, occupancy and
+/// prefix, and continuing both scans keeps them in lockstep.
+fn scan_codec_roundtrips_all_depths() {
+    let mut frame = Vec::new();
+    for n in 1..=256u64 {
+        let op = AddOp;
+        let mut scan = OnlineScan::new(&op);
+        for t in 0..n {
+            scan.push((t as i64) * 3 - 7);
+        }
+        scan.save_into(&mut frame);
+        let mut back = OnlineScan::new(&op);
+        back.restore_from(&frame).unwrap();
+        assert_eq!(back.len(), n);
+        assert_eq!(back.occupied_roots(), n.count_ones() as usize);
+        assert_eq!(back.prefix(), scan.prefix(), "depth {n}");
+        // Lockstep continuation across a few more carries.
+        for t in 0..17 {
+            scan.push(t);
+            back.push(t);
+            assert_eq!(back.prefix(), scan.prefix(), "depth {n} + {t}");
+        }
+    }
+
+    // Tensor chunks with a deliberately odd geometry (c=3, d=5) so no
+    // power-of-two alignment can hide indexing bugs.
+    let op = ChunkSumOp { c: 3, d: 5 };
+    for &n in &[1usize, 2, 3, 5, 17, 64, 127, 128, 255, 256] {
+        let mut scan = OnlineScan::new(&op);
+        for t in 0..n {
+            let mut y = scan.take_buffer();
+            y.clear();
+            y.extend((0..15).map(|i| ((t * 31 + i * 7) % 13) as f32 - 6.0));
+            scan.push(y);
+        }
+        scan.save_into(&mut frame);
+        let mut back = OnlineScan::new(&op);
+        back.restore_from(&frame).unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        scan.prefix_into(&mut a);
+        back.prefix_into(&mut b);
+        let bits = |v: &[f32]| -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&a), bits(&b), "chunk prefix bits, depth {n}");
+    }
+
+    // Non-commutative String state (order-sensitive): the restored scan
+    // must preserve exact slot contents, not just an aggregate.
+    let op = ConcatOp;
+    let mut scan = OnlineScan::new(&op);
+    for t in 0..37 {
+        scan.push(format!("<{t}>"));
+    }
+    scan.save_into(&mut frame);
+    let mut back = OnlineScan::new(&op);
+    back.restore_from(&frame).unwrap();
+    assert_eq!(back.prefix(), scan.prefix());
+    scan.push("tail".to_string());
+    back.push("tail".to_string());
+    assert_eq!(back.prefix(), scan.prefix());
+}
+
+/// Truncations at every boundary and a sweep of byte flips: all fail
+/// with the typed `invalid_input` class (CRC-32 catches every flip) and
+/// leave the target scan empty — never a panic, never partial state.
+fn scan_codec_rejects_corruption_typed() {
+    let op = ChunkSumOp { c: 3, d: 5 };
+    let mut scan = OnlineScan::new(&op);
+    for t in 0..13usize {
+        let mut y = scan.take_buffer();
+        y.clear();
+        y.extend((0..15).map(|i| (t * 17 + i) as f32));
+        scan.push(y);
+    }
+    let mut frame = Vec::new();
+    scan.save_into(&mut frame);
+
+    for cut in 0..frame.len() {
+        let mut back = OnlineScan::new(&op);
+        let err = back.restore_from(&frame[..cut]).unwrap_err();
+        assert_eq!(
+            PsmError::code_of(&err),
+            "invalid_input",
+            "truncation at {cut} must be typed, got {err:#}"
+        );
+        assert!(back.is_empty(), "failed restore must leave scan empty");
+    }
+    for i in 0..frame.len() {
+        let mut bad = frame.clone();
+        bad[i] ^= 0x01;
+        let mut back = OnlineScan::new(&op);
+        let err = back.restore_from(&bad).unwrap_err();
+        assert_eq!(
+            PsmError::code_of(&err),
+            "invalid_input",
+            "flip at byte {i} must be typed, got {err:#}"
+        );
+        assert!(back.is_empty());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 1 at the session level.
+// ---------------------------------------------------------------------
+
+/// Per-token logits of a restored session are bit-identical to the
+/// session it was saved from — across two model configs (different
+/// chunk/d/vocab) and with a mid-chunk (partial buffer) save point.
+fn session_snapshot_is_bit_exact() {
+    for (model, seed) in [("psm_s5", 31u64), ("psm_lm_c16", 32u64)] {
+        let rt = Runtime::reference();
+        let params = ParamStore::init(&rt, model, seed).unwrap();
+        let mut orig = PsmSession::new(&rt, model, &params).unwrap();
+        // 37 tokens: crosses chunk boundaries and leaves a partial
+        // chunk in flight at the save point.
+        let warm: Vec<i32> = (0..37).map(|t| (t * 5 % 90) as i32).collect();
+        orig.logits_stream(&warm).unwrap();
+
+        let mut frame = Vec::new();
+        orig.save_into(&mut frame).unwrap();
+        let mut back = PsmSession::new(&rt, model, &params).unwrap();
+        back.restore_from(&frame).unwrap();
+        assert_eq!(back.metrics.tokens, orig.metrics.tokens);
+        assert_eq!(back.chunk_count(), orig.chunk_count());
+
+        let cont: Vec<i32> = (0..23).map(|t| (t * 7 % 90) as i32).collect();
+        let a = orig.logits_stream(&cont).unwrap();
+        let b = back.logits_stream(&cont).unwrap();
+        let bits = |rows: &[Vec<f32>]| -> Vec<Vec<u32>> {
+            rows.iter()
+                .map(|r| r.iter().map(|x| x.to_bits()).collect())
+                .collect()
+        };
+        assert_eq!(
+            bits(&a),
+            bits(&b),
+            "{model}: restored continuation must be bit-identical"
+        );
+    }
+}
+
+/// Session-frame corruption: truncations (sampled) and every-byte flips
+/// answer typed `invalid_input`, the session is left reset (not
+/// poisoned), and a subsequent full token replay rebuilds the exact
+/// state — the restore-or-replay contract the durable tier relies on.
+fn session_snapshot_rejects_corruption() {
+    let model = "psm_s5";
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 33).unwrap();
+    let mut orig = PsmSession::new(&rt, model, &params).unwrap();
+    let warm: Vec<i32> = (0..21).map(|t| (t * 3 % 90) as i32).collect();
+    let warm_logits = orig.logits_stream(&warm).unwrap();
+    let mut frame = Vec::new();
+    orig.save_into(&mut frame).unwrap();
+
+    let mut back = PsmSession::new(&rt, model, &params).unwrap();
+    for cut in (0..frame.len()).step_by(7) {
+        let err = back.restore_from(&frame[..cut]).unwrap_err();
+        assert_eq!(PsmError::code_of(&err), "invalid_input", "cut {cut}");
+        assert_eq!(back.metrics.tokens, 0, "failed restore leaves reset");
+    }
+    for i in 0..frame.len() {
+        let mut bad = frame.clone();
+        bad[i] ^= 0x80;
+        let err = back.restore_from(&bad).unwrap_err();
+        assert_eq!(PsmError::code_of(&err), "invalid_input", "byte {i}");
+    }
+    // Replay fallback: the reset session replays the raw tokens and
+    // lands on the same state (bit-identical logits from then on).
+    let replayed = back.logits_stream(&warm).unwrap();
+    assert_eq!(
+        replayed.last().unwrap(),
+        warm_logits.last().unwrap(),
+        "replay after rejected restore must converge bit-exactly"
+    );
+    let a = orig.push_token(5).unwrap();
+    let b = back.push_token(5).unwrap();
+    assert_eq!(a, b);
+}
+
+/// `reset()` parks freed state slabs in the session arena and a
+/// reset-then-generate run is bit-identical to a fresh session's.
+fn reset_then_generate_recycles_arena() {
+    let model = "psm_s5";
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 34).unwrap();
+    let prompt = [4, 5, 6];
+    let expect = {
+        let mut fresh = PsmSession::new(&rt, model, &params).unwrap();
+        fresh.generate(&prompt, 6).unwrap()
+    };
+
+    let mut sess = PsmSession::new(&rt, model, &params).unwrap();
+    sess.generate(&prompt, 6).unwrap();
+    assert!(sess.chunk_count() > 0, "run must cross a chunk boundary");
+    sess.reset().unwrap();
+    assert!(
+        sess.free_state_buffers() > 0,
+        "reset must recycle root slabs into the arena, not drop them"
+    );
+    assert_eq!(sess.metrics.tokens, 0);
+    let again = sess.generate(&prompt, 6).unwrap();
+    assert_eq!(again, expect, "reset-then-generate must be bit-exact");
+}
+
+// ---------------------------------------------------------------------
+// Layer 2/3: executor tiering, rollback, crash recovery.
+// ---------------------------------------------------------------------
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("psm-durability-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn gen_req(
+    tx: &mpsc::SyncSender<Request>,
+    session: u64,
+    prompt: &[i32],
+    n: usize,
+) -> Result<Vec<i32>> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Generate {
+        session,
+        prompt: prompt.to_vec(),
+        n,
+        deadline: None,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap()
+}
+
+fn health(tx: &mpsc::SyncSender<Request>) -> server::ExecStats {
+    let (htx, hrx) = mpsc::channel();
+    tx.send(Request::Health { reply: htx }).unwrap();
+    hrx.recv().unwrap()
+}
+
+/// Two sessions under `PSM_RESIDENT_CAP=1`: every interleaved request
+/// forces a spill of the other session, and every reply is
+/// bit-identical to an always-resident sibling run. Then the spilled
+/// session's snapshot is corrupted on disk: the checksum rejects it,
+/// recovery falls back to full journal replay, and the reply is still
+/// bit-exact.
+fn executor_spills_and_restores_bit_exact() {
+    let model = "psm_s5";
+    let dir = temp_dir("tier");
+    std::env::set_var("PSM_SPILL_DIR", &dir);
+    std::env::set_var("PSM_RESIDENT_CAP", "1");
+    std::env::set_var("PSM_SNAPSHOT_EVERY", "8");
+
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 35).unwrap();
+    // Three rounds per session; session 0 gets a fourth round after its
+    // snapshot is corrupted.
+    let prompts: Vec<Vec<i32>> =
+        (0..4).map(|r| vec![1 + r, 2, 3 + r]).collect();
+    let n = 5usize;
+    let expect = |seed_prompts: &[Vec<i32>]| -> Vec<Vec<i32>> {
+        let mut sess = PsmSession::new(&clean_rt, model, &params).unwrap();
+        seed_prompts
+            .iter()
+            .map(|p| sess.generate(p, n).unwrap())
+            .collect()
+    };
+    let expect0 = expect(&prompts);
+    let expect1 = expect(&prompts[..3]);
+
+    let exec_params = params;
+    let (tx, rx) = mpsc::sync_channel::<Request>(16);
+    let handle = std::thread::spawn(move || {
+        let rt = Runtime::reference();
+        executor_loop(&rt, model, &exec_params, rx).unwrap();
+    });
+
+    let corrupt_rejected =
+        obs::counter("psm_tier_corrupt_rejected_total", "probe");
+    let restores = obs::counter("psm_tier_restores_total", "probe");
+    let (cr0, rs0) = (corrupt_rejected.get(), restores.get());
+
+    // Interleave: each request on one session evicts the other.
+    for round in 0..3 {
+        let o0 = gen_req(&tx, 0, &prompts[round], n).unwrap();
+        assert_eq!(o0, expect0[round], "session 0 round {round}");
+        let o1 = gen_req(&tx, 1, &prompts[round], n).unwrap();
+        assert_eq!(o1, expect1[round], "session 1 round {round}");
+    }
+    let stats = health(&tx);
+    assert_eq!(stats.sessions, 1, "resident cap must hold");
+    assert_eq!(stats.spilled, 1, "the other session lives on disk");
+    assert!(
+        restores.get() - rs0 >= 4,
+        "interleaving under cap=1 must keep restoring"
+    );
+
+    // Session 0 is spilled now (session 1 ran last). Corrupt its
+    // snapshot on disk; the next request must reject it (checksum) and
+    // recover by replaying the journal — with a bit-exact reply.
+    let snap = dir.join("sess-0.snap");
+    let mut bytes = std::fs::read(&snap).expect("snapshot must exist");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&snap, &bytes).unwrap();
+    let o0 = gen_req(&tx, 0, &prompts[3], n).unwrap();
+    assert_eq!(o0, expect0[3], "post-corruption reply must be bit-exact");
+    assert_eq!(
+        corrupt_rejected.get() - cr0,
+        1,
+        "the corrupted snapshot must be detected exactly once"
+    );
+
+    tx.send(Request::Shutdown).unwrap();
+    handle.join().unwrap();
+    std::env::remove_var("PSM_SPILL_DIR");
+    std::env::remove_var("PSM_RESIDENT_CAP");
+    std::env::remove_var("PSM_SNAPSHOT_EVERY");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Test-local backend: module at load index `panic_load` panics on its
+/// `panic_at`-th call (same scripting the chaos soak uses to poison a
+/// session deterministically).
+struct ScriptedBackend {
+    inner: RefBackend,
+    loads: AtomicU64,
+    panic_load: u64,
+    panic_at: u64,
+}
+
+struct PanicExec {
+    inner: Module,
+    spec: ArtifactSpec,
+    calls: AtomicU64,
+    panic_at: u64,
+}
+
+impl Executable for PanicExec {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if self.calls.fetch_add(1, Ordering::Relaxed) + 1 == self.panic_at {
+            panic!("scripted kernel panic in {}", self.spec.file);
+        }
+        self.inner.run(inputs)
+    }
+}
+
+impl Backend for ScriptedBackend {
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn load(&self, model: &str, entry: &str) -> Result<Module> {
+        let inner = self.inner.load(model, entry)?;
+        let idx = self.loads.fetch_add(1, Ordering::Relaxed);
+        if idx == self.panic_load {
+            let spec = inner.spec.clone();
+            return Ok(Module::from_exec(Box::new(PanicExec {
+                inner,
+                spec,
+                calls: AtomicU64::new(0),
+                panic_at: self.panic_at,
+            })));
+        }
+        Ok(inner)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// With the durable tier on, a session whose generate dies (scripted
+/// kernel panic) is rolled back to its journal instead of quarantined:
+/// the *same id* answers the very next request, bit-exactly.
+fn failed_generate_rolls_back_to_journal() {
+    let model = "psm_s5";
+    let dir = temp_dir("rollback");
+    std::env::set_var("PSM_SPILL_DIR", &dir);
+
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 36).unwrap();
+    let prompt = vec![1, 2, 3];
+    let n = 4usize;
+    let expect = {
+        let mut sess = PsmSession::new(&clean_rt, model, &params).unwrap();
+        sess.generate(&prompt, n).unwrap()
+    };
+
+    let exec_params = params;
+    let (tx, rx) = mpsc::sync_channel::<Request>(16);
+    let handle = std::thread::spawn(move || {
+        // Session 0's first incarnation loads modules 0..3; index 2 is
+        // its `inf`, rigged to panic on the first call. The rebuilt
+        // incarnation loads fresh (indices 4..), unrigged.
+        let rt = Runtime::from_backend(Box::new(ScriptedBackend {
+            inner: RefBackend::new(),
+            loads: AtomicU64::new(0),
+            panic_load: 2,
+            panic_at: 1,
+        }));
+        executor_loop(&rt, model, &exec_params, rx).unwrap();
+    });
+
+    let err = gen_req(&tx, 0, &prompt, n).unwrap_err();
+    assert_eq!(PsmError::code_of(&err), "fatal");
+
+    // Tier-off behavior would be `session_poisoned` here. With the
+    // tier, the id was rolled back to its (empty) journal and must
+    // serve again immediately — bit-exactly.
+    let out = gen_req(&tx, 0, &prompt, n).unwrap();
+    assert_eq!(out, expect, "rolled-back session must answer bit-exactly");
+
+    let stats = health(&tx);
+    assert_eq!(stats.quarantined, 0, "tier must not quarantine");
+    assert_eq!(stats.panics, 1);
+    assert_eq!(stats.sessions, 1);
+
+    tx.send(Request::Shutdown).unwrap();
+    handle.join().unwrap();
+    std::env::remove_var("PSM_SPILL_DIR");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Crash recovery across real processes.
+// ---------------------------------------------------------------------
+
+/// Child-process server entry (`--serve-child <addr>`): serves psm_s5
+/// with parameter seed 77 (matching the parent's sibling session)
+/// until the parent kills the process.
+fn serve_child(addr: &str) -> ! {
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, "psm_s5", 77).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    server::serve(&rt, "psm_s5", &params, addr, stop).unwrap();
+    std::process::exit(0);
+}
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect, retrying while the server is still binding.
+    fn connect(addr: &str) -> Client {
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    let w = s.try_clone().unwrap();
+                    return Client { w, r: BufReader::new(s) };
+                }
+                Err(e) => {
+                    if std::time::Instant::now() >= deadline {
+                        panic!("server on {addr} never came up: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    fn send(&mut self, line: &str) -> String {
+        writeln!(self.w, "{line}").unwrap();
+        let mut reply = String::new();
+        self.r.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+}
+
+fn gen_line(prompt: &[i32], n: usize) -> String {
+    let body: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("GEN {n} {}", body.join(" "))
+}
+
+fn ok_line(out: &[i32]) -> String {
+    let body: Vec<String> = out.iter().map(|t| t.to_string()).collect();
+    format!("OK {}", body.join(" "))
+}
+
+/// The headline crash-recovery check: a server is killed with SIGKILL
+/// mid-conversation; a fresh process over the same spill dir resumes
+/// the session and its replies are bit-identical to a never-killed
+/// sibling's. The last pre-kill round is sized to leave a journal
+/// suffix past the snapshot watermark, so recovery exercises snapshot
+/// decode *and* journal replay.
+fn kill_dash_nine_recovery_is_bit_exact() {
+    let model = "psm_s5";
+    let dir = temp_dir("kill");
+    let exe = std::env::current_exe().unwrap();
+
+    // Never-killed sibling, same params seed as serve_child.
+    let rt = Runtime::reference();
+    let params = ParamStore::init(&rt, model, 77).unwrap();
+    let mut sibling = PsmSession::new(&rt, model, &params).unwrap();
+    let r1 = sibling.generate(&[1, 2, 3], 6).unwrap();
+    let r2 = sibling.generate(&[4, 5, 6], 6).unwrap();
+    let r3 = sibling.generate(&[7], 2).unwrap(); // journal suffix
+    let r4 = sibling.generate(&[8, 9], 6).unwrap(); // post-recovery
+
+    let spawn = |addr: &str| -> std::process::Child {
+        std::process::Command::new(&exe)
+            .args(["--serve-child", addr])
+            .env("PSM_SPILL_DIR", &dir)
+            .env("PSM_SNAPSHOT_EVERY", "8")
+            .env("PSM_SESSION_TTL_MS", "600000")
+            .spawn()
+            .expect("spawning child server")
+    };
+
+    let addr_a = "127.0.0.1:7462";
+    let mut child_a = spawn(addr_a);
+    let mut conn = Client::connect(addr_a); // session id 0
+    assert_eq!(conn.send(&gen_line(&[1, 2, 3], 6)), ok_line(&r1));
+    assert_eq!(conn.send(&gen_line(&[4, 5, 6], 6)), ok_line(&r2));
+    assert_eq!(conn.send(&gen_line(&[7], 2)), ok_line(&r3));
+    // Let the post-ack snapshot land, then SIGKILL mid-flight.
+    std::thread::sleep(Duration::from_millis(150));
+    child_a.kill().expect("kill -9 child A");
+    let _ = child_a.wait();
+    drop(conn);
+
+    // Fresh process, fresh port, same spill dir: the startup recovery
+    // pass registers session 0 and the first connection (ordinal id 0)
+    // resumes it.
+    let addr_b = "127.0.0.1:7463";
+    let mut child_b = spawn(addr_b);
+    let mut conn = Client::connect(addr_b);
+    assert_eq!(
+        conn.send(&gen_line(&[8, 9], 6)),
+        ok_line(&r4),
+        "post-restart continuation must be bit-identical"
+    );
+    let stats = conn.send("STATS");
+    assert!(stats.contains("resident=1"), "stats after recovery: {stats}");
+    drop(conn);
+    child_b.kill().expect("kill child B");
+    let _ = child_b.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Eviction-chaos soak.
+// ---------------------------------------------------------------------
+
+/// The full TCP stack with `evict_p`/`corrupt_p` chaos over the durable
+/// tier plus transient faults under a resident cap of 1: forced
+/// evictions, checksum-rejected snapshots and journal replays churn
+/// constantly, while every `OK` reply stays bit-identical to the
+/// fault-free expectation and no reply is ever silently wrong.
+fn eviction_chaos_soak_stays_bit_exact() {
+    let model = "psm_s5";
+    let addr = "127.0.0.1:7464";
+    let short = psm::util::env::raw("PSM_SOAK").as_deref() == Some("short");
+    let rounds = if short { 3usize } else { 8usize };
+    let n = 6usize;
+    let dir = temp_dir("soak");
+
+    let clean_rt = Runtime::reference();
+    let params = ParamStore::init(&clean_rt, model, 37).unwrap();
+    // Per-client expectation: one always-resident fault-free session
+    // fed the same GEN sequence.
+    let expect: Vec<Vec<String>> = (0..2usize)
+        .map(|c| {
+            let mut sess =
+                PsmSession::new(&clean_rt, model, &params).unwrap();
+            (0..rounds)
+                .map(|r| {
+                    let prompt =
+                        [1 + c as i32, (r % 7) as i32 + 2, 3 - c as i32];
+                    ok_line(&sess.generate(&prompt, n).unwrap())
+                })
+                .collect()
+        })
+        .collect();
+
+    std::env::set_var("PSM_SPILL_DIR", &dir);
+    std::env::set_var("PSM_RESIDENT_CAP", "1");
+    std::env::set_var("PSM_SNAPSHOT_EVERY", "8");
+    std::env::set_var("PSM_VALIDATE", "1");
+    std::env::set_var("PSM_RETRY_MAX", "8");
+    std::env::set_var("PSM_RETRY_BASE_MS", "0");
+    let cfg = FaultConfig {
+        seed: 99,
+        transient_p: 0.05,
+        delay_p: 0.05,
+        delay_ms: 1,
+        evict_p: 0.4,
+        corrupt_p: 0.4,
+        ..Default::default()
+    };
+    let frt = Runtime::reference().with_faults(cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let stop_driver = stop.clone();
+    let expect_driver = expect;
+    let driver = std::thread::spawn(move || {
+        // Two persistent connections (session ids 0 and 1), driven in
+        // strict alternation so the resident cap of 1 churns on every
+        // round even when no chaos eviction fires.
+        let mut c0 = Client::connect(addr);
+        let mut c1 = Client::connect(addr);
+        for r in 0..rounds {
+            for (c, conn) in [&mut c0, &mut c1].into_iter().enumerate() {
+                let prompt = [1 + c as i32, (r % 7) as i32 + 2, 3 - c as i32];
+                let reply = conn.send(&gen_line(&prompt, n));
+                assert_eq!(
+                    reply, expect_driver[c][r],
+                    "client {c} round {r}: OK replies must stay \
+                     bit-identical under eviction chaos"
+                );
+            }
+        }
+        let stats = c0.send("STATS");
+        assert!(stats.starts_with("OK tokens="), "stats: {stats}");
+        assert!(stats.contains("spilled="), "stats: {stats}");
+        stop_driver.store(true, Ordering::Relaxed);
+    });
+
+    server::serve(&frt, model, &params, addr, stop).unwrap();
+    driver.join().expect("driver");
+
+    // In the full soak the draw count makes both kinds statistically
+    // certain; the short soak has too few acknowledged generates to
+    // pin both kinds individually.
+    let counts = frt.fault_backend().unwrap().counts();
+    if short {
+        assert!(
+            counts.evict + counts.corrupt > 0,
+            "some tier chaos must fire even in the short soak"
+        );
+    } else {
+        assert!(counts.evict > 0, "evict chaos must actually fire");
+        assert!(counts.corrupt > 0, "corrupt chaos must actually fire");
+    }
+
+    std::env::remove_var("PSM_SPILL_DIR");
+    std::env::remove_var("PSM_RESIDENT_CAP");
+    std::env::remove_var("PSM_SNAPSHOT_EVERY");
+    std::env::remove_var("PSM_VALIDATE");
+    std::env::remove_var("PSM_RETRY_MAX");
+    std::env::remove_var("PSM_RETRY_BASE_MS");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -264,6 +264,14 @@ fn tcp_metrics_exposition() {
             "psm_executor_sessions",
             "psm_executor_tokens_total",
             "psm_executor_request_ns",
+            // Durable-tier families are registered at executor startup
+            // even when the tier itself is off (PSM_SPILL_DIR unset).
+            "psm_tier_resident",
+            "psm_tier_spilled",
+            "psm_tier_spills_total",
+            "psm_tier_restores_total",
+            "psm_tier_replays_total",
+            "psm_tier_corrupt_rejected_total",
         ] {
             assert!(
                 fams.contains_key(required),
@@ -276,6 +284,8 @@ fn tcp_metrics_exposition() {
         let stats = send_line(addr, &["STATS"]).remove(0);
         assert!(stats.starts_with("OK tokens="), "stats reply: {stats:?}");
         assert!(stats.contains("queue="), "extended stats: {stats:?}");
+        assert!(stats.contains("resident="), "tier stats: {stats:?}");
+        assert!(stats.contains("spilled=0"), "tier stats: {stats:?}");
 
         stop_driver.store(true, Ordering::Relaxed);
     });
